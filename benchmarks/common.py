@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: a briefly-trained small model (cached per
+process) and a timing harness."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.transformer import Model
+from repro.training.optimizer import AdamWConfig, cosine_schedule
+from repro.training.train_step import init_train_state, make_train_step
+
+GROUP, RESID = 8, 8  # reduced-model quant params (head_dim 16)
+
+
+@lru_cache(maxsize=2)
+def trained_model(name: str = "llama2-7b", steps: int = 80,
+                  seq: int = 128):
+    """Returns (cfg, params) of a reduced config trained on the synthetic
+    corpus — enough structure for quantization quality to matter."""
+    cfg = reduced(get_config(name))
+    model = Model(cfg)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=8, seed=0))
+    opt = AdamWConfig(lr=3e-3, schedule=cosine_schedule(1.0, 10, steps))
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    state = init_train_state(model.init(jax.random.PRNGKey(0)))
+    for i in range(steps):
+        b = data.batch(i)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+    return cfg, state.params
+
+
+def policy(cfg, l_k, l_v, high=2, low=1, enabled=True):
+    n = cfg.n_cache_layers
+    if not enabled:
+        return AsymKVPolicy.float_cache(n, group=GROUP, residual=RESID)
+    return AsymKVPolicy(n_layers=n, l_k=l_k, l_v=l_v, high_bits=high,
+                        low_bits=low, group=GROUP, residual=RESID)
+
+
+def prefill_logits(cfg, params, pol, prompt, max_tokens=None):
+    model = Model(cfg, pol, group=GROUP, residual=RESID)
+    T = max_tokens or max(128, prompt.shape[1] + GROUP)
+    caches = model.init_caches(prompt.shape[0], T, dtype=jnp.float32)
+    logits, caches = jax.jit(model.prefill)(
+        params, {"tokens": prompt}, caches)
+    return logits, (model, caches)
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit'd fn)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float | None, derived: str):
+    us_s = f"{us:.1f}" if us is not None else ""
+    print(f"{name},{us_s},{derived}")

@@ -1,0 +1,61 @@
+"""Aggregates dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(dir_: Path) -> list[dict]:
+    out = []
+    for f in sorted(dir_.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.1f}"
+
+
+def table(records: list[dict], mesh: str) -> str:
+    rows = [r for r in records if r.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | ok | peak GB/dev | compute ms | memory ms | "
+        "collective ms | bound | useful FLOP % | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | ✗ | | | | | | | "
+                         f"{r.get('error', '')[:60]} |")
+            continue
+        rl = r["roofline"]
+        note = ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ✓ | "
+            f"{r['memory']['peak_gb']:.2f} | {fmt_ms(rl['compute_s'])} | "
+            f"{fmt_ms(rl['memory_s'])} | {fmt_ms(rl['collective_s'])} | "
+            f"{rl['dominant']} | {r['useful_flop_ratio'] * 100:.0f} | "
+            f"{note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(Path(args.dir))
+    for mesh in ("16x16", "2x16x16"):
+        if any(r.get("mesh") == mesh for r in recs):
+            print(f"\n### Mesh {mesh}\n")
+            print(table(recs, mesh))
+    ok = sum(r["ok"] for r in recs)
+    print(f"\n{ok}/{len(recs)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table for the
+assigned architectures is produced separately by the dry-run
+(``repro.launch.dryrun``) + ``benchmarks.report`` aggregation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    from benchmarks import bench_paper
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in bench_paper.ALL:
+        name = fn.__name__
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

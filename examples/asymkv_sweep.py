@@ -1,0 +1,46 @@
+"""Reproduces the paper's core comparison on a trained toy model: sweep
+(l_k, l_v) and compare AsymKV-l/0 (bits on KEYS) against AsymKV-0/l (bits
+on values) at identical memory — the Table 1/3 setup — measured by logit
+distortion & top-1 agreement against the float cache under teacher-forced
+decode (the positions that actually read the quantized committed cache).
+
+    PYTHONPATH=src python examples/asymkv_sweep.py
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.common import GROUP, RESID, policy, trained_model  # noqa: E402
+from benchmarks.bench_paper import _prompt, forced_decode_logits  # noqa: E402
+
+
+def main():
+    cfg, params = trained_model("llama2-7b")
+    n = cfg.n_cache_layers
+    toks = _prompt(cfg, batch=4, seq=112, seed=3)
+    prefix = 48
+    ref = forced_decode_logits(cfg, params, policy(cfg, 0, 0, enabled=False),
+                               toks, prefix)
+
+    print(f"{'policy':>16s} {'bytes/tok':>10s} {'top1':>6s} {'logit-mse':>10s}")
+    for l in range(0, n + 1):
+        for name, pol in [
+            (f"AsymKV-{l}/0", policy(cfg, l, 0)),
+            (f"AsymKV-0/{l}", policy(cfg, 0, l)),
+        ]:
+            out = forced_decode_logits(cfg, params, pol, toks, prefix)
+            top1 = float(jnp.mean(jnp.argmax(out, -1) == jnp.argmax(ref, -1)))
+            mse = float(jnp.mean((out - ref) ** 2))
+            bpt = pol.cache_bytes_per_token(
+                cfg.n_kv_heads, cfg.resolved_head_dim, scale_bytes=2)
+            print(f"{name:>16s} {bpt:>10.0f} {top1:>6.3f} {mse:>10.4f}")
+            if l == 0:
+                break  # 0/0 listed once
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: continuous batching over an AsymKV 2/1-bit
+cache (gemma3-1b family, reduced size for CPU).
+
+    PYTHONPATH=src python examples/serve_requests.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    stats = serve_main([
+        "--arch", "gemma3-1b", "--reduced",
+        "--requests", "10", "--slots", "4",
+        "--prompt-len", "48", "--max-new", "16",
+        "--lk", "3", "--lv", "0",
+    ])
+    assert stats["requests"] == 10
+
+
+if __name__ == "__main__":
+    main()

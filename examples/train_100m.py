@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param dense model for a few hundred
+steps on the synthetic corpus and report the loss curve.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    # ~100M: use the llama2-7b family at reduced width via custom argv
+    final = train_main([
+        "--arch", "llama2-7b", "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "256", "--lr", "3e-3",
+        "--ckpt", "/tmp/repro_ckpt_100m", "--ckpt-every", "100",
+    ])
+    assert final < 5.0, f"training did not learn (final loss {final})"
+    print("loss decreased — end-to-end training works")
+
+
+if __name__ == "__main__":
+    main()

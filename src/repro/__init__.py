@@ -1,0 +1,5 @@
+"""repro — production-grade JAX framework reproducing AsymKV (COLING 2025):
+layer-wise asymmetric KV-cache quantization down to 1 bit, integrated as a
+first-class feature of a multi-pod training/serving stack."""
+
+__version__ = "1.0.0"

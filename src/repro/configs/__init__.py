@@ -1,0 +1,19 @@
+"""Architecture registry: importing this package registers every config."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, FrontendConfig,
+    get_config, list_configs, reduced, register,
+)
+from repro.configs import (  # noqa: F401
+    mamba2_370m, llava_next_mistral_7b, zamba2_2p7b, deepseek_moe_16b,
+    deepseek_v2_236b, seamless_m4t_medium, qwen1p5_4b, granite_20b,
+    starcoder2_15b, gemma3_1b, llama2_7b, llama2_13b,
+)
+
+# The ten assigned architectures (dry-run + roofline targets).
+ASSIGNED = [
+    "mamba2-370m", "llava-next-mistral-7b", "zamba2-2.7b",
+    "deepseek-moe-16b", "deepseek-v2-236b", "seamless-m4t-medium",
+    "qwen1.5-4b", "granite-20b", "starcoder2-15b", "gemma3-1b",
+]
+# The paper's own models (benchmarks).
+PAPER_MODELS = ["llama2-7b", "llama2-13b"]

@@ -1,0 +1,247 @@
+"""Architecture configuration schema + registry.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+(``repro/configs/<id>.py``); ``get_config(name)`` resolves ids, and
+``reduced(cfg)`` shrinks any config to a CPU-smoke-test size of the same
+family (same layer pattern / attention flavor / MoE-ness, tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "FrontendConfig",
+    "register", "get_config", "list_configs", "reduced",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN hidden
+    n_shared: int = 0          # shared (always-on) experts
+    first_dense_layers: int = 0  # leading layers with a dense FFN instead
+    dense_ff: int = 0            # hidden of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128  # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB — ``input_specs()`` supplies precomputed
+    frame/patch embeddings of this many positions."""
+    kind: str          # "vision" | "audio"
+    n_positions: int   # patch/frame tokens prepended (vision) or enc length
+    embed_dim: int = 0  # 0 → d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_kind: str            # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 → d_model // n_heads
+    # block flavor ---------------------------------------------------------
+    mlp_kind: str = "swiglu"  # swiglu | gelu
+    act: str = "silu"
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_plus_one: bool = False  # Gemma (1+w) convention
+    sandwich_norm: bool = False  # Gemma3 post-attn/post-mlp norms
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    rope_theta_local: float = 1e4  # local layers (Gemma3 splits these)
+    # layer pattern --------------------------------------------------------
+    # string of per-layer codes: A=attn+mlp, E=attn+moe, M=mamba2,
+    # L=local(window) attn+mlp, G=global attn+mlp, Z=shared-attn (zamba)
+    layer_pattern: Optional[str] = None  # None → homogeneous from arch_kind
+    window: Optional[int] = None         # sliding window for "L" layers
+    # sub-configs ------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    encoder_layers: int = 0   # >0 → encoder-decoder
+    # numerics / distribution ----------------------------------------------
+    dtype: str = "bfloat16"
+    remat: bool = True
+    fsdp: bool = False         # shard params over data axes too (big archs)
+    moe_impl: str = "auto"     # auto | shard_map | reference
+    use_pallas: bool = False   # TPU kernels at call sites (False on CPU)
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    # ----------------------------------------------------------------- api
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> str:
+        if self.layer_pattern is not None:
+            assert len(self.layer_pattern) == self.n_layers, self.name
+            return self.layer_pattern
+        return {"moe": "E", "ssm": "M"}.get(self.arch_kind, "A") * self.n_layers
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def cache_layer_indices(self) -> list[int]:
+        """Indices (into the decoder pattern) of layers that own a KV cache —
+        the layers AsymKV's (l_k, l_v) count.  SSM layers are excluded."""
+        return [i for i, c in enumerate(self.pattern) if c != "M"]
+
+    @property
+    def n_cache_layers(self) -> int:
+        return len(self.cache_layer_indices())
+
+    def param_count(self) -> int:
+        """Approximate parameter count (documentation/roofline)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.mla:
+            m = self.mla
+            attn = (d * m.q_lora_rank + m.q_lora_rank * self.n_heads
+                    * (m.nope_head_dim + m.rope_head_dim)
+                    + d * (m.kv_lora_rank + m.rope_head_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        mlp_dense = d * self.d_ff * (3 if self.mlp_kind == "swiglu" else 2)
+        total = 0
+        for c in self.pattern:
+            if c == "M":
+                s = self.ssm
+                d_in = d * s.expand
+                n_h = d_in // s.head_dim
+                total += (d * (2 * d_in + 2 * s.n_groups * s.d_state + n_h)
+                          + d_in * d + d_in)  # in/out proj + dt/conv approx
+            elif c == "E":
+                m = self.moe
+                e_ff = d * m.d_expert * 3
+                total += attn + (m.n_experts + m.n_shared) * e_ff + d * m.n_experts
+            else:
+                total += attn + mlp_dense
+        enc_block = attn + mlp_dense
+        total += self.encoder_layers * enc_block
+        if self.is_encdec:  # cross attention per decoder layer
+            total += self.n_layers * attn
+        total += self.vocab * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE uses top_k + shared experts)."""
+        if not self.moe:
+            return self.param_count()
+        m = self.moe
+        full_e = self.param_count()
+        per_expert = self.d_model * m.d_expert * 3
+        n_moe_layers = self.pattern.count("E")
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+        return full_e - inactive
+
+
+_REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import side-effect registration
+    from repro import configs as _c  # noqa: F401
+    key = name.replace("-", "_").replace(".", "p")
+    for cand in (name, key):
+        if cand in _REGISTRY:
+            return _REGISTRY[cand]
+    raise KeyError(f"unknown config {name!r}; have {sorted(_REGISTRY)}")
+
+
+def list_configs() -> list[str]:
+    from repro import configs as _c  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests."""
+    pat = cfg.pattern
+    # keep the first period-ish prefix of the pattern (≥2 layers, ≤6)
+    n = min(len(pat), 6 if len(set(pat)) > 1 else 2)
+    # make sure every layer type survives
+    keep = pat[:n]
+    for c in set(pat):
+        if c not in keep:
+            keep += c
+    d_model = 64
+    n_heads = 4
+    kv = max(1, min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else n_heads)
+    kw = dict(
+        name=cfg.name + "-smoke",
+        arch_kind=cfg.arch_kind,
+        n_layers=len(keep),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=kv,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        head_dim=16,
+        mlp_kind=cfg.mlp_kind, act=cfg.act,
+        norm_kind=cfg.norm_kind, norm_plus_one=cfg.norm_plus_one,
+        sandwich_norm=cfg.sandwich_norm, qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias, tie_embeddings=cfg.tie_embeddings,
+        rope_theta=cfg.rope_theta, rope_theta_local=cfg.rope_theta_local,
+        layer_pattern=keep,
+        window=min(cfg.window, 16) if cfg.window else None,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        dtype="float32", remat=False, fsdp=False,
+        moe_impl="reference", use_pallas=False,
+    )
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=2, d_expert=32,
+            n_shared=min(cfg.moe.n_shared, 1),
+            first_dense_layers=1 if cfg.moe.first_dense_layers else 0,
+            dense_ff=128 if cfg.moe.first_dense_layers else 0)
+    if cfg.mla:
+        kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=48,
+                              rope_head_dim=8, nope_head_dim=16, v_head_dim=16)
+    if cfg.ssm:
+        kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2,
+                              head_dim=16, n_groups=1, chunk=16)
+    if cfg.frontend:
+        kw["frontend"] = FrontendConfig(
+            kind=cfg.frontend.kind, n_positions=8, embed_dim=0)
+    return ModelConfig(**kw)

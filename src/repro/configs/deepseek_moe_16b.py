@@ -1,0 +1,19 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts, top-6;
+first layer dense.  [arXiv:2401.06066; hf]  28L d_model=2048 GQA kv=16."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-moe-16b",
+    arch_kind="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,           # per-expert hidden
+    vocab=102400,
+    head_dim=128,
+    layer_pattern="A" + "E" * 27,
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                  first_dense_layers=1, dense_ff=10944),
+    source="arXiv:2401.06066",
+))

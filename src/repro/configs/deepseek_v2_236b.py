@@ -1,0 +1,23 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + fine-grained MoE: 2 shared + 160
+routed experts top-6; first layer dense.  [arXiv:2405.04434; hf]
+60L d_model=5120 128H."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-236b",
+    arch_kind="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,     # MLA: latent cache, kv_heads only nominal
+    d_ff=1536,          # per-expert hidden
+    vocab=102400,
+    head_dim=128,
+    layer_pattern="A" + "E" * 59,
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536, n_shared=2,
+                  first_dense_layers=1, dense_ff=12288),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    fsdp=True,
+    source="arXiv:2405.04434",
+))

@@ -1,0 +1,28 @@
+"""gemma3-1b — 5:1 local:global attention (512-token sliding window),
+QK-norm, sandwich norms, (1+w) RMSNorm, tied embeddings, 262k vocab.
+[hf:google/gemma-3-1b-pt; unverified]  26L d_model=1152 4H kv=1."""
+from repro.configs.base import ModelConfig, register
+
+_PATTERN = ("L" * 5 + "G") * 4 + "L" * 2  # 26 layers
+
+CONFIG = register(ModelConfig(
+    name="gemma3-1b",
+    arch_kind="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=6912,
+    vocab=262144,
+    head_dim=256,
+    layer_pattern=_PATTERN,
+    window=512,
+    rope_theta=1e6,        # global layers
+    rope_theta_local=1e4,  # local layers
+    norm_plus_one=True,
+    sandwich_norm=True,
+    qk_norm=True,
+    act="gelu_tanh",
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt",
+))

@@ -1,0 +1,19 @@
+"""granite-20b — dense code model, MQA (kv=1), non-gated GELU MLP (4d).
+[arXiv:2405.04324; hf]  52L d_model=6144 48H."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-20b",
+    arch_kind="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,        # MQA
+    d_ff=24576,
+    vocab=49152,
+    head_dim=128,
+    mlp_kind="gelu", act="gelu_tanh",
+    norm_kind="layernorm",
+    fsdp=True,
+    source="arXiv:2405.04324",
+))

@@ -1,0 +1,17 @@
+"""llama2-13b — the paper's secondary evaluation model (AsymKV Tables 1-4).
+[arXiv:2307.09288]  40L d_model=5120 40H MHA."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama2-13b",
+    arch_kind="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=13824,
+    vocab=32000,
+    head_dim=128,
+    fsdp=True,
+    source="arXiv:2307.09288",
+))

@@ -1,0 +1,17 @@
+"""llama2-7b — the paper's primary evaluation model (AsymKV Tables 1-4).
+[arXiv:2307.09288]  32L d_model=4096 32H MHA."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama2-7b",
+    arch_kind="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=32000,
+    head_dim=128,
+    fsdp=True,
+    source="arXiv:2307.09288",
+))

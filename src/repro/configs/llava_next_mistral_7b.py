@@ -1,0 +1,20 @@
+"""llava-next-mistral-7b — VLM; Mistral-7B backbone, anyres vision frontend
+STUBBED (input_specs supplies pre-computed patch embeddings).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+from repro.configs.base import FrontendConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_kind="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,       # GQA
+    d_ff=14336,
+    vocab=32000,
+    head_dim=128,
+    rope_theta=1e6,
+    frontend=FrontendConfig(kind="vision", n_positions=576, embed_dim=1024),
+    fsdp=True,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+))

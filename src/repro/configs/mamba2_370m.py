@@ -1,0 +1,20 @@
+"""mamba2-370m — pure SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]  48L d_model=1024, ssm_state=128, vocab=50280.
+AsymKV is inapplicable (no KV cache) — see DESIGN.md §Arch-applicability."""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-370m",
+    arch_kind="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=32,        # d_inner / head_dim = 2048/64
+    n_kv_heads=32,     # unused (attention-free)
+    d_ff=0,
+    vocab=50280,
+    head_dim=64,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=128),
+    source="arXiv:2405.21060",
+))

@@ -1,0 +1,18 @@
+"""qwen1.5-4b — dense Llama-family with QKV bias.
+[hf:Qwen/Qwen1.5-4B (family per assignment); hf]  40L d_model=2560 20H MHA."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-4b",
+    arch_kind="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=5e6,
+    source="hf:Qwen/Qwen1.5-4B",
+))

@@ -1,0 +1,21 @@
+"""seamless-m4t-medium — encoder-decoder; multimodal audio frontend STUBBED
+(input_specs supplies pre-computed frame embeddings).
+[arXiv:2308.11596; hf]  12L enc + 12L dec, d_model=1024, vocab=256206."""
+from repro.configs.base import FrontendConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-medium",
+    arch_kind="encdec",
+    n_layers=12,          # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=256206,
+    head_dim=64,
+    mlp_kind="gelu", act="gelu",
+    norm_kind="layernorm",
+    frontend=FrontendConfig(kind="audio", n_positions=4096, embed_dim=1024),
+    source="arXiv:2308.11596",
+))

@@ -1,0 +1,20 @@
+"""starcoder2-15b — dense code model, GQA kv=4, RoPE, non-gated GELU MLP.
+[arXiv:2402.19173; hf]  40L d_model=6144 48H."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-15b",
+    arch_kind="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab=49152,
+    head_dim=128,
+    mlp_kind="gelu", act="gelu_tanh",
+    norm_kind="layernorm",
+    rope_theta=1e5,
+    fsdp=True,
+    source="arXiv:2402.19173",
+))

@@ -1,0 +1,23 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone with a SHARED attention block
+applied every 6th layer (one param set, per-application KV cache).
+[arXiv:2411.15242; hf]  54L d_model=2560, ssm_state=64, GQA kv=32."""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+_PATTERN = ("M" * 5 + "Z") * 9  # 54 layers, 9 shared-attn applications
+
+CONFIG = register(ModelConfig(
+    name="zamba2-2.7b",
+    arch_kind="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    head_dim=80,
+    layer_pattern=_PATTERN,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=128),
+    tie_embeddings=True,
+    source="arXiv:2411.15242",
+))

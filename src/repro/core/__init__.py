@@ -1,0 +1,27 @@
+"""AsymKV core: RTN quantization, asymmetric layer policies, quantized KV
+cache, and quantization-aware attention."""
+
+from repro.core.quant import (
+    QuantSpec,
+    QuantArray,
+    quantize,
+    dequantize,
+    pack_bits,
+    unpack_bits,
+    quantized_bytes_per_element,
+)
+from repro.core.asymkv import AsymKVPolicy, LayerSegment, segment_layers
+from repro.core.kvcache import LayerKVCache, commit_len
+from repro.core.attention_quant import (
+    flash_prefill,
+    decode_attend,
+    decode_attend_dense,
+)
+
+__all__ = [
+    "QuantSpec", "QuantArray", "quantize", "dequantize", "pack_bits",
+    "unpack_bits", "quantized_bytes_per_element",
+    "AsymKVPolicy", "LayerSegment", "segment_layers",
+    "LayerKVCache", "commit_len",
+    "flash_prefill", "decode_attend", "decode_attend_dense",
+]

@@ -1,0 +1,169 @@
+"""AsymKV policy: layer-wise *asymmetric* bit allocation for the KV cache.
+
+The paper's contribution (Sec. 4): two knobs ``l_k`` and ``l_v`` control how
+many of the leading decoder layers keep the *higher*-bit quantization for the
+key / value cache respectively; all remaining layers drop to ``low_bits``
+(1 bit in the paper).  Because key-quantization error is amplified by the
+query contraction and the softmax (Theorem 1), one chooses ``l_k > l_v`` —
+usually ``l_v = 0``, e.g. ``AsymKV-16/0`` for Llama-2-7b.
+
+The uniform baselines are special cases of the same policy, so KIVI-2bit and
+the float cache run through identical code paths:
+
+* ``AsymKVPolicy.kivi(n_layers, bits=2)``  → ``l_k = l_v = n_layers``
+* ``AsymKVPolicy.float_cache(n_layers)``   → quantization disabled
+
+Layer heterogeneity vs. XLA static shapes: packed-code buffer shapes depend on
+the bit width, so layers are grouped into contiguous :class:`LayerSegment`
+runs of equal ``(k_bits, v_bits)`` and the model ``lax.scan``s within each
+segment (stacked parameters / stacked caches per segment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.quant import QuantSpec, quantized_bytes_per_element
+
+__all__ = ["AsymKVPolicy", "LayerSegment", "segment_layers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSegment:
+    """A maximal run of consecutive layers sharing one quantization config."""
+
+    start: int
+    count: int
+    k_bits: int  # 0 = full precision
+    v_bits: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.count
+
+
+@dataclasses.dataclass(frozen=True)
+class AsymKVPolicy:
+    """Layer-wise asymmetric KV-cache quantization configuration.
+
+    Attributes:
+      n_layers: number of attention layers carrying a KV cache.  For hybrid
+        architectures (e.g. Zamba2) this counts only the attention blocks —
+        SSM blocks have no KV cache (see DESIGN.md §Arch-applicability).
+      l_k / l_v: number of leading layers whose K / V cache uses
+        ``high_bits``; the rest use ``low_bits``.
+      high_bits / low_bits: the two bit widths blended by the policy
+        (paper default 2 and 1).
+      group: RTN group size (paper: 32).
+      residual: number of most-recent tokens kept in full precision
+        (paper: 128 normal-context, 512 long-context).
+      enabled: ``False`` → full-precision cache (the ``float`` baseline).
+    """
+
+    n_layers: int
+    l_k: int
+    l_v: int
+    high_bits: int = 2
+    low_bits: int = 1
+    group: int = 32
+    residual: int = 128
+    enabled: bool = True
+
+    def __post_init__(self):
+        if not 0 <= self.l_k <= self.n_layers:
+            raise ValueError(f"l_k={self.l_k} outside [0, {self.n_layers}]")
+        if not 0 <= self.l_v <= self.n_layers:
+            raise ValueError(f"l_v={self.l_v} outside [0, {self.n_layers}]")
+        if self.residual % self.group:
+            raise ValueError(
+                f"residual ({self.residual}) must be a multiple of group "
+                f"({self.group}) so groups commit exactly"
+            )
+
+    # ------------------------------------------------------------------ API
+
+    @classmethod
+    def kivi(cls, n_layers: int, bits: int = 2, **kw) -> "AsymKVPolicy":
+        """Uniform KIVI-style policy: every layer at ``bits``."""
+        return cls(n_layers=n_layers, l_k=n_layers, l_v=n_layers,
+                   high_bits=bits, low_bits=bits, **kw)
+
+    @classmethod
+    def float_cache(cls, n_layers: int, **kw) -> "AsymKVPolicy":
+        """Full-precision cache (the paper's ``float`` baseline)."""
+        return cls(n_layers=n_layers, l_k=0, l_v=0, enabled=False, **kw)
+
+    @classmethod
+    def uniform_1bit(cls, n_layers: int, **kw) -> "AsymKVPolicy":
+        """The extreme everything-1-bit point (``AsymKV-0/0``)."""
+        return cls(n_layers=n_layers, l_k=0, l_v=0, **kw)
+
+    def layer_bits(self, layer: int) -> tuple[int, int]:
+        """(k_bits, v_bits) for ``layer``; 0 means full precision."""
+        if not self.enabled:
+            return (0, 0)
+        k = self.high_bits if layer < self.l_k else self.low_bits
+        v = self.high_bits if layer < self.l_v else self.low_bits
+        return (k, v)
+
+    def key_spec(self, layer: int) -> QuantSpec | None:
+        k, _ = self.layer_bits(layer)
+        if k == 0:
+            return None
+        return QuantSpec(bits=k, group=self.group, mode="per_channel")
+
+    def value_spec(self, layer: int) -> QuantSpec | None:
+        _, v = self.layer_bits(layer)
+        if v == 0:
+            return None
+        return QuantSpec(bits=v, group=self.group, mode="per_token")
+
+    def segments(self) -> list[LayerSegment]:
+        """Contiguous layer runs of equal (k_bits, v_bits) — scan units."""
+        return segment_layers([self.layer_bits(i) for i in range(self.n_layers)])
+
+    # ------------------------------------------------- memory accounting
+
+    def cache_bytes_per_token(
+        self,
+        n_kv_heads: int,
+        head_dim: int,
+        fp_bytes: int = 2,
+        scale_bytes: int = 4,
+    ) -> float:
+        """Steady-state KV-cache bytes per token summed over layers.
+
+        Ignores the (bounded) residual window — this is the asymptotic
+        per-token cost plotted in the paper's Fig. 4.
+        """
+        total = 0.0
+        for i in range(self.n_layers):
+            k_bits, v_bits = self.layer_bits(i)
+            for bits, mode in ((k_bits, "per_channel"), (v_bits, "per_token")):
+                if bits == 0:
+                    per_elem = float(fp_bytes)
+                else:
+                    spec = QuantSpec(bits=bits, group=self.group, mode=mode)
+                    per_elem = quantized_bytes_per_element(spec, scale_bytes)
+                total += per_elem * n_kv_heads * head_dim
+        return total
+
+    def describe(self) -> str:
+        if not self.enabled:
+            return "float"
+        if self.l_k == self.n_layers and self.l_v == self.n_layers:
+            return f"KIVI-{self.high_bits}bit"
+        return f"AsymKV-{self.l_k}/{self.l_v}"
+
+
+def segment_layers(bits: Sequence[tuple[int, int]]) -> list[LayerSegment]:
+    """Collapses a per-layer (k_bits, v_bits) list into maximal equal runs."""
+    segments: list[LayerSegment] = []
+    for i, kv in enumerate(bits):
+        if segments and (segments[-1].k_bits, segments[-1].v_bits) == kv:
+            last = segments[-1]
+            segments[-1] = LayerSegment(last.start, last.count + 1, *kv)
+        else:
+            segments.append(LayerSegment(i, 1, *kv))
+    return segments

@@ -1,0 +1,297 @@
+"""Attention over (quantized) KV caches — pure-JAX paths.
+
+Three entry points:
+
+* :func:`flash_prefill` — blocked causal/windowed attention for training and
+  prefill.  Outer *static* loop over query blocks (so causal / sliding-window
+  extents are static slices — no wasted FLOPs above the diagonal), inner
+  ``lax.scan`` over KV chunks with an online-softmax accumulator (bounded
+  temps — this is what makes 32k-token prefill `memory_analysis()` fit).
+* :func:`decode_attend` — one-token decode against a :class:`LayerKVCache`:
+  ``lax.scan`` over committed *packed* blocks (dequantize-block → score →
+  online softmax) plus the full-precision residual ring as the final block.
+* :func:`decode_attend_dense` — reference implementation (dequantize all,
+  single softmax); the oracle for tests and the Fig-1 error analysis.
+
+All softmax math runs in fp32; matmuls accumulate in fp32 via
+``preferred_element_type``.  GQA/MQA: queries are reshaped to
+``[B, kv_heads, q_per_kv, S, D]`` so grouped heads share one KV stream.
+
+On TPU the same call sites dispatch to the Pallas kernels in
+``repro.kernels`` (``use_pallas=True``); this module is the CPU/dry-run and
+oracle path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.kvcache import LayerKVCache
+from repro.core.quant import QuantArray, dequantize
+
+__all__ = ["flash_prefill", "decode_attend", "decode_attend_dense"]
+
+_NEG_INF = -1e30
+
+
+def _gqa_split(q: jax.Array, kv_heads: int) -> jax.Array:
+    """[B, Hq, S, D] -> [B, Hkv, r, S, D]."""
+    B, Hq, S, D = q.shape
+    assert Hq % kv_heads == 0, (Hq, kv_heads)
+    return q.reshape(B, kv_heads, Hq // kv_heads, S, D)
+
+
+def _gqa_merge(o: jax.Array) -> jax.Array:
+    B, Hkv, r, S, D = o.shape
+    return o.reshape(B, Hkv * r, S, D)
+
+
+# =========================================================================
+# Prefill / training attention
+# =========================================================================
+
+def flash_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    scale: Optional[float] = None,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Blocked attention.  q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D].
+
+    ``window`` (sliding window of size W) means query t attends to keys in
+    ``(t - W, t]`` — Gemma-style local attention.  ``bias`` (optional,
+    broadcastable to [B, Hq, Sq, Skv]) is added to the logits (e.g. cross
+    attention padding masks); it is sliced per block.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]  # may differ from D (MLA: qk width > v width)
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+
+    qs = _gqa_split(q, Hkv)  # [B, Hkv, r, Sq, D]
+    out = jnp.zeros((B, Hkv, r, Sq, Dv), jnp.float32)
+
+    n_q = -(-Sq // q_block)
+    for qi in range(n_q):  # static unroll: causal extents become static slices
+        q0, q1 = qi * q_block, min((qi + 1) * q_block, Sq)
+        qb = qs[:, :, :, q0:q1]  # [B,Hkv,r,bq,D]
+        bq = q1 - q0
+        # Static KV extent for this query block.
+        hi = min(q1, Skv) if causal else Skv
+        lo = 0
+        if window is not None:
+            lo = max(0, q0 - window + 1)
+        # Round to kv_block multiples (static).
+        lo = (lo // kv_block) * kv_block
+        hi = min(-(-hi // kv_block) * kv_block, Skv)
+        if hi <= lo:
+            continue
+        kb_all = k[:, :, lo:hi]
+        vb_all = v[:, :, lo:hi]
+        n_kv = (hi - lo) // kv_block if (hi - lo) % kv_block == 0 else -(-(hi - lo) // kv_block)
+
+        q_pos = q0 + jnp.arange(bq)
+
+        def body(carry, ikv, kb_all=kb_all, vb_all=vb_all, lo=lo, q_pos=q_pos,
+                 qb=qb, n_kv=n_kv, hi=hi):
+            m, l, acc = carry
+            k0 = ikv * kv_block
+            kb = lax.dynamic_slice_in_dim(kb_all, k0, min(kv_block, hi - lo), axis=2)
+            vb = lax.dynamic_slice_in_dim(vb_all, k0, min(kv_block, hi - lo), axis=2)
+            s = jnp.einsum("bhrqd,bhkd->bhrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = lo + k0 + jnp.arange(kb.shape[2])
+            mask = jnp.ones((bq, kb.shape[2]), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            if bias is not None:
+                bb = jnp.broadcast_to(bias, (B, Hq, Sq, Skv))
+                bb = bb.reshape(B, Hkv, r, Sq, Skv)[:, :, :, q0:q1]
+                bb = lax.dynamic_slice_in_dim(bb, lo + k0, kb.shape[2], axis=4)
+                s = s + bb.astype(jnp.float32)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhrqk,bhkd->bhrqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, Hkv, r, bq), _NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, r, bq), jnp.float32),
+            jnp.zeros((B, Hkv, r, bq, Dv), jnp.float32),
+        )
+        # checkpoint the KV-block body: without it reverse-mode stores the
+        # [bq, kv_block] probability tile per block — i.e. the full attention
+        # matrix — defeating the point of flash attention (found via dry-run
+        # buffer dump on deepseek-v2 train_4k).
+        (m, l, acc), _ = lax.scan(jax.checkpoint(body), init,
+                                  jnp.arange(n_kv))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = out.at[:, :, :, q0:q1].set(ob)
+
+    return _gqa_merge(out).astype(q.dtype)
+
+
+# =========================================================================
+# Decode attention over a quantized cache
+# =========================================================================
+
+def _slice_committed_block(cache: LayerKVCache, start, size: int):
+    """Dequantized (K, V) for committed tokens [start, start+size)."""
+    G = cache.group
+    if cache.k_bits > 0:
+        kc = lax.dynamic_slice_in_dim(
+            cache.k_codes, start * cache.k_bits // 8, size * cache.k_bits // 8, axis=2)
+        ks = lax.dynamic_slice_in_dim(cache.k_scale, start // G, size // G, axis=2)
+        kz = lax.dynamic_slice_in_dim(cache.k_zero, start // G, size // G, axis=2)
+        k = dequantize(QuantArray(kc, ks, kz, cache.key_spec), cache.dtype)
+    else:
+        k = lax.dynamic_slice_in_dim(cache.k_fp, start, size, axis=2)
+    if cache.v_slice_offset >= 0:
+        v = k[..., cache.v_slice_offset:]
+    elif cache.v_bits > 0:
+        vc = lax.dynamic_slice_in_dim(cache.v_codes, start, size, axis=2)
+        vs = lax.dynamic_slice_in_dim(cache.v_scale, start, size, axis=2)
+        vz = lax.dynamic_slice_in_dim(cache.v_zero, start, size, axis=2)
+        v = dequantize(QuantArray(vc, vs, vz, cache.value_spec), cache.dtype)
+    else:
+        v = lax.dynamic_slice_in_dim(cache.v_fp, start, size, axis=2)
+    return k, v
+
+
+def _online_update(carry, s, v):
+    """One online-softmax accumulation step.  s: [B,H,r,T_blk] fp32."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhrk,bhkd->bhrd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def decode_attend(
+    q: jax.Array,
+    cache: LayerKVCache,
+    *,
+    scale: Optional[float] = None,
+    block: int = 1024,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token decode attention.  q: [B, Hq, 1, D] → output [B, Hq, 1, D].
+
+    Committed packed blocks are dequantized chunk-by-chunk inside a
+    ``lax.scan`` (online softmax), then the fp residual ring is folded in as
+    the final block.  ``window`` masks positions older than
+    ``length - window`` (sliding-window layers).
+    """
+    B, Hq, Sq, D = q.shape
+    assert Sq == 1, "decode_attend is single-token; use flash_prefill otherwise"
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = _gqa_split(q, Hkv)[:, :, :, 0]  # [B, Hkv, r, D]
+
+    commit = cache.commit_length()
+    length = cache.length
+    lo_valid = jnp.maximum(0, length - window) if window is not None else 0
+
+    T = cache.max_tokens
+    block = min(block, T)
+    n_blocks = T // block
+    # Value width differs from key width for MLA latent caches.
+    Dv = D - cache.v_slice_offset if cache.v_slice_offset >= 0 else D
+
+    init = (
+        jnp.full((B, Hkv, r), _NEG_INF, jnp.float32),
+        jnp.zeros((B, Hkv, r), jnp.float32),
+        jnp.zeros((B, Hkv, r, Dv), jnp.float32),
+    )
+
+    if n_blocks > 0:
+        def body(carry, ib):
+            start = ib * block
+            k_blk, v_blk = _slice_committed_block(cache, start, block)
+            s = jnp.einsum("bhrd,bhkd->bhrk", qh, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            # Ring-aware absolute position of each committed slot.
+            j = start + jnp.arange(block, dtype=jnp.int32)
+            pos = j + ((commit - 1 - j) // T) * T
+            valid = (pos >= 0) & (pos >= lo_valid)
+            s = jnp.where(valid[None, None, None], s, _NEG_INF)
+            return _online_update(carry, s, v_blk), None
+
+        (m, l, acc), _ = lax.scan(body, init, jnp.arange(n_blocks))
+    else:
+        m, l, acc = init
+
+    # Residual ring as the final block.
+    pos = cache.ring_positions()
+    valid = (pos >= commit) & (pos < length) & (pos >= lo_valid)
+    s = jnp.einsum("bhrd,bhkd->bhrk", qh, cache.resid_k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None], s, _NEG_INF)
+    m, l, acc = _online_update((m, l, acc), s, cache.residual_v())
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return _gqa_merge(out[:, :, :, None]).astype(q.dtype)
+
+
+def decode_attend_dense(
+    q: jax.Array,
+    cache: LayerKVCache,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Oracle decode attention: dequantize everything, one softmax."""
+    B, Hq, Sq, D = q.shape
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = _gqa_split(q, Hkv)[:, :, :, 0]
+
+    commit = cache.commit_length()
+    length = cache.length
+    lo_valid = jnp.maximum(0, length - window) if window is not None else 0
+
+    k_all = jnp.concatenate([cache.committed_k(), cache.resid_k], axis=2)
+    v_all = jnp.concatenate([cache.committed_v(), cache.residual_v()], axis=2)
+    pos_committed = cache.committed_slot_positions()
+    valid_committed = (pos_committed >= 0) & (pos_committed >= lo_valid)
+    pos_ring = cache.ring_positions()
+    valid_ring = (pos_ring >= commit) & (pos_ring < length) & (pos_ring >= lo_valid)
+    valid = jnp.concatenate([valid_committed, valid_ring])
+
+    s = jnp.einsum("bhrd,bhkd->bhrk", qh, k_all,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrk,bhkd->bhrd", p.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    return _gqa_merge(out[:, :, :, None]).astype(q.dtype)

@@ -1,0 +1,112 @@
+"""Reproduction of the paper's Sec. 3 error-propagation analysis (Figs 1–2).
+
+Given a (q, K, V) triple, measures the MSE between float attention and
+attention with *only K* (resp. *only V*) quantized, at each stage:
+
+  stage 0  ``dequant``   — MSE of the dequantized matrix itself (Equ. 6)
+  stage 1  ``logits``    — after the query contraction  (Equ. 1)
+  stage 2  ``softmax``   — after the softmax            (Equ. 2)
+  stage 3  ``output``    — attention output             (Equ. 3)
+
+The paper's Fig. 1 observation: with stage-0 MSE matched between K and V,
+the K-path error is amplified at stages 1–3 (query contraction accumulates
+error over the head dim; softmax exponentiates it — Theorem 1), while the
+V-path error stays linear (Prop. 2).  :func:`theorem1_predicted_error`
+evaluates the closed form of Theorem 1 so tests can check the analysis
+itself, not just the phenomenon.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec, quantize, dequantize
+
+__all__ = [
+    "attention_stages",
+    "stage_errors",
+    "kv_asymmetry_report",
+    "theorem1_predicted_error",
+]
+
+
+def attention_stages(q, k, v, scale=None):
+    """Returns (logits, weights, output) of single-query attention.
+
+    q: [T_q, D]; k, v: [T, D].  Everything fp32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if scale is None:
+        scale = k.shape[-1] ** -0.5
+    logits = (q @ k.T) * scale          # Equ. 1
+    weights = jax.nn.softmax(logits, -1)  # Equ. 2
+    output = weights @ v                # Equ. 3
+    return logits, weights, output
+
+
+def stage_errors(q, k, v, *, quantize_key: bool, spec: QuantSpec):
+    """MSE per stage when only K (or only V) is RTN-quantized with ``spec``."""
+    k2d = k[None] if k.ndim == 2 else k
+    v2d = v[None] if v.ndim == 2 else v
+    if quantize_key:
+        k_hat = dequantize(quantize(k2d, spec), jnp.float32)[0 if k.ndim == 2 else slice(None)]
+        v_hat = v
+        mat_mse = jnp.mean((k_hat - k) ** 2)
+    else:
+        k_hat = k
+        v_hat = dequantize(quantize(v2d, spec), jnp.float32)[0 if v.ndim == 2 else slice(None)]
+        mat_mse = jnp.mean((v_hat - v) ** 2)
+
+    lg0, w0, o0 = attention_stages(q, k, v)
+    lg1, w1, o1 = attention_stages(q, k_hat, v_hat)
+    return {
+        "dequant": mat_mse,
+        "logits": jnp.mean((lg1 - lg0) ** 2),
+        "softmax": jnp.mean((w1 - w0) ** 2),
+        "output": jnp.mean((o1 - o0) ** 2),
+    }
+
+
+def kv_asymmetry_report(q, k, v, *, bits=2, group=32):
+    """The Fig-1 experiment: stage MSEs for K-quant vs V-quant + their ratio."""
+    k_spec = QuantSpec(bits=bits, group=group, mode="per_channel")
+    v_spec = QuantSpec(bits=bits, group=group, mode="per_token")
+    ek = stage_errors(q, k, v, quantize_key=True, spec=k_spec)
+    ev = stage_errors(q, k, v, quantize_key=False, spec=v_spec)
+    ratio = {s: ek[s] / jnp.maximum(ev[s], 1e-30) for s in ek}
+    return {"key": ek, "value": ev, "ratio": ratio}
+
+
+def theorem1_predicted_error(q_vec, k, k_hat, v, scale=None):
+    """Closed-form attention-output error of Theorem 1.
+
+    ``err = (A^w ⊙ (1 − sr · exp(E^q/√h))) · V`` with ``E^q = x_q E^k``,
+    ``E^k = K − K*``, ``sr = sft / sft*``.  q_vec: [D]; k, k_hat, v: [T, D].
+    Returns (predicted_error [D_v], actual_error [D_v]).
+    """
+    q_vec = q_vec.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    k_hat = k_hat.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if scale is None:
+        scale = k.shape[-1] ** -0.5
+
+    logits = (k @ q_vec) * scale          # [T]
+    logits_hat = (k_hat @ q_vec) * scale
+    m = jnp.max(logits)                    # shared shift for stability
+    sft = jnp.sum(jnp.exp(logits - m))
+    sft_hat = jnp.sum(jnp.exp(logits_hat - m))
+    sr = sft / sft_hat
+    aw = jax.nn.softmax(logits)
+
+    e_q = ((k - k_hat) @ q_vec) * scale    # x_q E^k / sqrt(h)
+    # err(A^w)_r = A^w_r (1 - sr * exp(-e_q_r))  [Equ. 9 with E^q = x_q E^k]
+    err_aw = aw * (1.0 - sr * jnp.exp(-e_q))
+    predicted = err_aw @ v
+
+    aw_hat = jax.nn.softmax(logits_hat)
+    actual = aw @ v - aw_hat @ v
+    return predicted, actual

@@ -1,0 +1,367 @@
+"""Static-shape quantized KV cache with a full-precision residual ring.
+
+Layout per attention layer (all shapes static, jit/scan friendly):
+
+* committed store — tokens ``[0, commit_len)`` quantized in groups of ``G``
+  (per-channel for K, per-token for V), packed into ``uint8``;
+* residual ring — the most recent ``length - commit_len`` tokens
+  (``residual ≤ · < residual + G``) in full precision, as the paper/KIVI
+  require for per-channel K grouping (a group can only be quantized once all
+  ``G`` of its tokens exist);
+* ``commit_len(length) = max(0, (length - residual) // G * G)`` — committing
+  exactly one group whenever the fp window would exceed ``residual + G - 1``.
+
+Cache arrays are ``[batch, kv_heads, tokens, head_dim]``.  MLA-style latent
+caches use ``kv_heads = 1`` with ``head_dim = kv_lora_rank``.
+
+A full-precision layer (``bits = 0`` — the ``float`` baseline or a layer the
+policy leaves unquantized) stores committed tokens in a dense fp buffer
+through the same interface, so all baselines share one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.quant import QuantSpec, QuantArray, quantize, dequantize
+
+__all__ = ["LayerKVCache", "commit_len"]
+
+
+def commit_len(length: jax.Array | int, residual: int, group: int):
+    """Number of tokens in the committed (quantized) region."""
+    raw = (length - residual) // group * group
+    return jnp.maximum(0, raw) if not isinstance(length, int) else max(0, raw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LayerKVCache:
+    """One attention layer's cache.  See module docstring for layout."""
+
+    # -- dynamic leaves ------------------------------------------------------
+    # Quantized committed stores (present when the corresponding bits > 0).
+    k_codes: Optional[jax.Array]  # [B, H, T*k_bits//8, D] uint8
+    k_scale: Optional[jax.Array]  # [B, H, T//G, D]
+    k_zero: Optional[jax.Array]
+    v_codes: Optional[jax.Array]  # [B, H, T, D*v_bits//8] uint8
+    v_scale: Optional[jax.Array]  # [B, H, T, D//G]
+    v_zero: Optional[jax.Array]
+    # Full-precision committed stores (present when bits == 0).
+    k_fp: Optional[jax.Array]  # [B, H, T, D]
+    v_fp: Optional[jax.Array]
+    # Residual ring (always present; resid_v is None for latent caches).
+    resid_k: jax.Array  # [B, H, resid_cap, D]
+    resid_v: Optional[jax.Array]
+    length: jax.Array  # int32 scalar — tokens written so far
+
+    # -- static aux ----------------------------------------------------------
+    k_bits: int = 2
+    v_bits: int = 2
+    group: int = 32
+    residual: int = 128
+    max_tokens: int = 0
+    dtype: jnp.dtype = jnp.bfloat16
+    # MLA latent caches: V is K[..., v_slice_offset:] — one store serves both
+    # the score path (rope-key ‖ latent) and the value path (latent).
+    v_slice_offset: int = -1
+    # Channel-group for per-token V quantization.  Must divide head_dim, so
+    # it is auto-clamped to the largest divisor ≤ group (e.g. head_dim 80 →
+    # v_group 20).  The commit cadence always follows ``group`` (K/tokens).
+    v_group: int = 32
+
+    _STATIC = ("k_bits", "v_bits", "group", "residual", "max_tokens", "dtype",
+               "v_slice_offset", "v_group")
+    _LEAVES = (
+        "k_codes", "k_scale", "k_zero", "v_codes", "v_scale", "v_zero",
+        "k_fp", "v_fp", "resid_k", "resid_v", "length",
+    )
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, n) for n in self._LEAVES)
+        aux = tuple(getattr(self, n) for n in self._STATIC)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        kw = dict(zip(cls._LEAVES, leaves))
+        kw.update(dict(zip(cls._STATIC, aux)))
+        return cls(**kw)
+
+    # ------------------------------------------------------------------ init
+
+    @classmethod
+    def init(
+        cls,
+        batch: int,
+        kv_heads: int,
+        head_dim: int,
+        max_tokens: int,
+        *,
+        k_bits: int = 2,
+        v_bits: int = 2,
+        group: int = 32,
+        residual: int = 128,
+        dtype=jnp.bfloat16,
+        scale_dtype=jnp.bfloat16,
+        v_slice_offset: int = -1,
+    ) -> "LayerKVCache":
+        if max_tokens % group:
+            raise ValueError(f"max_tokens {max_tokens} % group {group} != 0")
+        if residual % group:
+            raise ValueError(f"residual {residual} % group {group} != 0")
+        cap = residual + group
+        B, H, T, D = batch, kv_heads, max_tokens, head_dim
+        # largest channel-group ≤ group dividing head_dim (zamba2: 80 → 20)
+        v_group = next(g for g in range(min(group, D), 0, -1) if D % g == 0)
+
+        def z(shape, dt):
+            return jnp.zeros(shape, dt)
+
+        k_codes = k_scale = k_zero = v_codes = v_scale = v_zero = None
+        k_fp = v_fp = resid_v = None
+        if k_bits > 0:
+            k_codes = z((B, H, T * k_bits // 8, D), jnp.uint8)
+            k_scale = z((B, H, T // group, D), scale_dtype)
+            k_zero = z((B, H, T // group, D), scale_dtype)
+        else:
+            k_fp = z((B, H, T, D), dtype)
+        if v_slice_offset < 0:
+            if v_bits > 0:
+                v_codes = z((B, H, T, D * v_bits // 8), jnp.uint8)
+                v_scale = z((B, H, T, D // v_group), scale_dtype)
+                v_zero = z((B, H, T, D // v_group), scale_dtype)
+            else:
+                v_fp = z((B, H, T, D), dtype)
+            resid_v = z((B, H, cap, D), dtype)
+        return cls(
+            k_codes=k_codes, k_scale=k_scale, k_zero=k_zero,
+            v_codes=v_codes, v_scale=v_scale, v_zero=v_zero,
+            k_fp=k_fp, v_fp=v_fp,
+            resid_k=z((B, H, cap, D), dtype), resid_v=resid_v,
+            length=jnp.zeros((), jnp.int32),
+            k_bits=k_bits, v_bits=v_bits, group=group, residual=residual,
+            max_tokens=max_tokens, dtype=dtype, v_slice_offset=v_slice_offset,
+            v_group=v_group,
+        )
+
+    # --------------------------------------------------------------- helpers
+
+    @property
+    def resid_cap(self) -> int:
+        return self.residual + self.group
+
+    @property
+    def key_spec(self) -> Optional[QuantSpec]:
+        if self.k_bits == 0:
+            return None
+        return QuantSpec(bits=self.k_bits, group=self.group,
+                         mode="per_channel",
+                         scale_dtype=self.k_scale.dtype)
+
+    @property
+    def value_spec(self) -> Optional[QuantSpec]:
+        if self.v_bits == 0:
+            return None
+        return QuantSpec(bits=self.v_bits, group=self.v_group,
+                         mode="per_token",
+                         scale_dtype=self.v_scale.dtype)
+
+    def commit_length(self) -> jax.Array:
+        return commit_len(self.length, self.residual, self.group)
+
+    def ring_positions(self) -> jax.Array:
+        """Absolute token index held by each ring slot (may exceed length —
+        mask with ``< length`` and ``>= commit_length``)."""
+        cap = self.resid_cap
+        commit = self.commit_length()
+        s = jnp.arange(cap, dtype=jnp.int32)
+        return commit + jnp.mod(s - commit, cap)
+
+    def committed_slot_positions(self) -> jax.Array:
+        """Absolute token index held by each committed slot.
+
+        The committed store is a ring of ``max_tokens`` slots: slot ``j``
+        holds the *largest* committed token ``t < commit`` with
+        ``t ≡ j (mod max_tokens)`` — i.e. ``t = j + ⌊(commit-1-j)/T⌋·T``.
+        Negative values mean the slot is empty.  Wraparound only happens for
+        windowed (local-attention) layers whose ring capacity is below the
+        stream length; global caches must be sized ≥ the stream.
+        """
+        T = self.max_tokens
+        commit = self.commit_length()
+        j = jnp.arange(T, dtype=jnp.int32)
+        return j + ((commit - 1 - j) // T) * T
+
+    # ------------------------------------------------------------- mutation
+
+    def _quantize_k_group(self, k_grp: jax.Array) -> QuantArray:
+        return quantize(k_grp, self.key_spec)
+
+    def _quantize_v_group(self, v_grp: jax.Array) -> QuantArray:
+        return quantize(v_grp, self.value_spec)
+
+    def _write_committed(self, cache: "LayerKVCache", k_grp, v_grp, start):
+        """Writes one committed group of ``G`` tokens at token offset ``start``
+        (a multiple of G; may be traced)."""
+        G = self.group
+        upd = dict()
+        if self.k_bits > 0:
+            qk = self._quantize_k_group(k_grp)
+            upd["k_codes"] = lax.dynamic_update_slice(
+                cache.k_codes, qk.codes, (0, 0, start * self.k_bits // 8, 0))
+            upd["k_scale"] = lax.dynamic_update_slice(
+                cache.k_scale, qk.scale, (0, 0, start // G, 0))
+            upd["k_zero"] = lax.dynamic_update_slice(
+                cache.k_zero, qk.zero, (0, 0, start // G, 0))
+        else:
+            upd["k_fp"] = lax.dynamic_update_slice(
+                cache.k_fp, k_grp.astype(self.dtype), (0, 0, start, 0))
+        if self.v_slice_offset >= 0:
+            pass  # V lives inside the K store
+        elif self.v_bits > 0:
+            qv = self._quantize_v_group(v_grp)
+            upd["v_codes"] = lax.dynamic_update_slice(
+                cache.v_codes, qv.codes, (0, 0, start, 0))
+            upd["v_scale"] = lax.dynamic_update_slice(
+                cache.v_scale, qv.scale, (0, 0, start, 0))
+            upd["v_zero"] = lax.dynamic_update_slice(
+                cache.v_zero, qv.zero, (0, 0, start, 0))
+        else:
+            upd["v_fp"] = lax.dynamic_update_slice(
+                cache.v_fp, v_grp.astype(self.dtype), (0, 0, start, 0))
+        return dataclasses.replace(cache, **upd)
+
+    def append(self, k_t: jax.Array, v_t: Optional[jax.Array] = None
+               ) -> "LayerKVCache":
+        """Appends one decode-step token ``[B, H, 1, D]``; commits a group when
+        the fp window overflows ``residual``.  Returns the updated cache."""
+        cap = self.resid_cap
+        G = self.group
+        slot = jnp.mod(self.length, cap)
+        resid_k = lax.dynamic_update_slice(
+            self.resid_k, k_t.astype(self.dtype), (0, 0, slot, 0))
+        if self.v_slice_offset < 0:
+            resid_v = lax.dynamic_update_slice(
+                self.resid_v, v_t.astype(self.dtype), (0, 0, slot, 0))
+        else:
+            resid_v = None
+        new_len = self.length + 1
+        cache = dataclasses.replace(
+            self, resid_k=resid_k, resid_v=resid_v, length=new_len)
+
+        old_commit = commit_len(self.length, self.residual, G)
+        new_commit = commit_len(new_len, self.residual, G)
+
+        def do_commit(c: "LayerKVCache") -> "LayerKVCache":
+            # Gather the G tokens [old_commit, old_commit+G) from the ring.
+            idx = jnp.mod(old_commit + jnp.arange(G, dtype=jnp.int32), cap)
+            k_grp = jnp.take(c.resid_k, idx, axis=2)
+            v_grp = (jnp.take(c.resid_v, idx, axis=2)
+                     if self.v_slice_offset < 0 else None)
+            # Ring-wrap the committed store (windowed layers).
+            start = jnp.mod(old_commit, self.max_tokens)
+            return self._write_committed(c, k_grp, v_grp, start)
+
+        return lax.cond(new_commit > old_commit, do_commit, lambda c: c, cache)
+
+    def prefill(self, k: jax.Array, v: Optional[jax.Array] = None
+                ) -> "LayerKVCache":
+        """Bulk-writes a prompt ``[B, H, P, D]`` into an empty cache.
+
+        ``P`` is static, so the committed/residual split happens at trace
+        time: tokens ``[0, commit_p)`` are quantized in one vectorized pass,
+        the tail goes to the ring at its steady-state slots.
+        """
+        P = k.shape[2]
+        G = self.group
+        commit_p = max(0, (P - self.residual) // G * G)
+        cap = self.resid_cap
+        cache = self
+
+        if commit_p > 0:
+            upd = {}
+            if self.k_bits > 0:
+                qk = quantize(k[:, :, :commit_p], self.key_spec)
+                upd |= {
+                    "k_codes": lax.dynamic_update_slice(
+                        cache.k_codes, qk.codes, (0, 0, 0, 0)),
+                    "k_scale": lax.dynamic_update_slice(
+                        cache.k_scale, qk.scale, (0, 0, 0, 0)),
+                    "k_zero": lax.dynamic_update_slice(
+                        cache.k_zero, qk.zero, (0, 0, 0, 0)),
+                }
+            else:
+                upd["k_fp"] = lax.dynamic_update_slice(
+                    cache.k_fp, k[:, :, :commit_p].astype(self.dtype),
+                    (0, 0, 0, 0))
+            if self.v_slice_offset >= 0:
+                pass
+            elif self.v_bits > 0:
+                qv = quantize(v[:, :, :commit_p], self.value_spec)
+                upd |= {
+                    "v_codes": lax.dynamic_update_slice(
+                        cache.v_codes, qv.codes, (0, 0, 0, 0)),
+                    "v_scale": lax.dynamic_update_slice(
+                        cache.v_scale, qv.scale, (0, 0, 0, 0)),
+                    "v_zero": lax.dynamic_update_slice(
+                        cache.v_zero, qv.zero, (0, 0, 0, 0)),
+                }
+            else:
+                upd["v_fp"] = lax.dynamic_update_slice(
+                    cache.v_fp, v[:, :, :commit_p].astype(self.dtype),
+                    (0, 0, 0, 0))
+            cache = dataclasses.replace(cache, **upd)
+
+        # Residual tail [commit_p, P) at slots t % cap.
+        import numpy as np
+        tail = np.arange(commit_p, P)
+        slots = tail % cap
+        resid_k = cache.resid_k.at[:, :, slots, :].set(
+            k[:, :, commit_p:].astype(self.dtype))
+        resid_v = None
+        if self.v_slice_offset < 0:
+            resid_v = cache.resid_v.at[:, :, slots, :].set(
+                v[:, :, commit_p:].astype(self.dtype))
+        return dataclasses.replace(
+            cache, resid_k=resid_k, resid_v=resid_v,
+            length=jnp.asarray(P, jnp.int32))
+
+    # --------------------------------------------------------------- reads
+
+    def committed_k(self) -> jax.Array:
+        """Dequantized committed K ``[B, H, T, D]`` (mask with commit_length)."""
+        if self.k_bits == 0:
+            return self.k_fp
+        q = QuantArray(codes=self.k_codes, scale=self.k_scale,
+                       zero=self.k_zero, spec=self.key_spec)
+        return dequantize(q, self.dtype)
+
+    def committed_v(self) -> jax.Array:
+        if self.v_slice_offset >= 0:
+            return self.committed_k()[..., self.v_slice_offset:]
+        if self.v_bits == 0:
+            return self.v_fp
+        q = QuantArray(codes=self.v_codes, scale=self.v_scale,
+                       zero=self.v_zero, spec=self.value_spec)
+        return dequantize(q, self.dtype)
+
+    def residual_v(self) -> jax.Array:
+        if self.v_slice_offset >= 0:
+            return self.resid_k[..., self.v_slice_offset:]
+        return self.resid_v
+
+    def nbytes(self) -> int:
+        """Total cache storage in bytes (static accounting)."""
+        import numpy as np
+        total = 0
+        for name in self._LEAVES:
+            a = getattr(self, name)
+            if a is not None and name != "length":
+                total += int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+        return total

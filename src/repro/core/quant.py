@@ -1,0 +1,256 @@
+"""Round-To-Nearest (RTN) group quantization with sub-byte bit packing.
+
+Implements the quantization substrate of AsymKV (Tao et al., COLING 2025),
+which itself follows KIVI (Liu et al., ICML 2024):
+
+* **per-channel** quantization for key matrices — scale/zero-point are computed
+  per channel over a *group of tokens* (group size ``G`` along the token axis);
+* **per-token** quantization for value matrices — scale/zero-point are computed
+  per token over a *group of channels* (group size ``G`` along the channel axis).
+
+Quantization phase (paper Equ. 4–5)::
+
+    z = min_g(M)                       # per group
+    s = (max_g(M) - min_g(M)) / (2^b - 1)
+    M_Q = round((M - z) / s)
+
+Dequantization (paper Equ. 6 contains a typo — ``(M_Q + z) * s``; the
+standard affine form consistent with Equ. 4–5 and the KIVI reference
+implementation is)::
+
+    M* = M_Q * s + z
+
+Codes are packed ``8 // bits`` values per ``uint8`` byte along the *group*
+axis, so a 1-bit cache stores 8 tokens (K) or 8 channels (V) per byte.
+
+Everything here is pure ``jnp`` — shardable under ``pjit`` and usable inside
+``lax.scan`` bodies.  The Pallas kernel in ``repro.kernels.rtn_pack`` fuses
+the same math for the TPU hot path and is validated against this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantSpec",
+    "QuantArray",
+    "pack_bits",
+    "unpack_bits",
+    "quantize",
+    "dequantize",
+    "quantized_bytes_per_element",
+]
+
+Mode = Literal["per_channel", "per_token"]
+
+# Axis conventions: inputs are [..., T, H] (tokens × head/channel dim).
+_TOKEN_AXIS = -2
+_CHANNEL_AXIS = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of an RTN group-quantization scheme.
+
+    Attributes:
+      bits: code width in bits; one of {1, 2, 4, 8}.
+      group: group size along the grouping axis (tokens for ``per_channel``,
+        channels for ``per_token``).  The grouped axis length must be a
+        multiple of ``group``.
+      mode: ``"per_channel"`` (the K layout — scales per channel over a token
+        group) or ``"per_token"`` (the V layout — scales per token over a
+        channel group).
+      scale_dtype: dtype used to store scales / zero points.
+    """
+
+    bits: int = 2
+    group: int = 32
+    mode: Mode = "per_channel"
+    scale_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.bits not in (1, 2, 4, 8):
+            raise ValueError(f"bits must be in {{1,2,4,8}}, got {self.bits}")
+        if self.group <= 0:
+            raise ValueError(f"group must be positive, got {self.group}")
+        if self.mode not in ("per_channel", "per_token"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def pack_factor(self) -> int:
+        """How many codes fit in one uint8 byte."""
+        return 8 // self.bits
+
+    @property
+    def group_axis(self) -> int:
+        return _TOKEN_AXIS if self.mode == "per_channel" else _CHANNEL_AXIS
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantArray:
+    """A packed RTN-quantized array plus its affine parameters.
+
+    ``codes`` has the grouped axis shrunk by ``spec.pack_factor``; ``scale``
+    and ``zero`` have the grouped axis shrunk by ``spec.group``.
+    """
+
+    codes: jax.Array  # uint8, packed
+    scale: jax.Array
+    zero: jax.Array
+    spec: QuantSpec  # static
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.zero), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, leaves):
+        codes, scale, zero = leaves
+        return cls(codes=codes, scale=scale, zero=zero, spec=spec)
+
+    @property
+    def unpacked_shape(self) -> tuple[int, ...]:
+        shape = list(self.codes.shape)
+        ax = self.spec.group_axis
+        shape[ax] = shape[ax] * self.spec.pack_factor
+        return tuple(shape)
+
+    def nbytes(self) -> int:
+        return int(
+            np.prod(self.codes.shape)
+            + np.prod(self.scale.shape) * self.scale.dtype.itemsize
+            + np.prod(self.zero.shape) * self.zero.dtype.itemsize
+        )
+
+
+def _move_group_axis_last(x: jax.Array, axis: int) -> jax.Array:
+    return jnp.moveaxis(x, axis, -1)
+
+
+def pack_bits(codes: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Packs integer codes (< 2**bits) into uint8 along ``axis``.
+
+    ``axis`` length must be a multiple of ``8 // bits``.  Little-endian within
+    a byte: element ``i`` of a pack-group occupies bits ``[i*bits, (i+1)*bits)``.
+    """
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    factor = 8 // bits
+    x = _move_group_axis_last(codes.astype(jnp.uint8), axis)
+    if x.shape[-1] % factor:
+        raise ValueError(
+            f"axis length {x.shape[-1]} not divisible by pack factor {factor}"
+        )
+    x = x.reshape(*x.shape[:-1], x.shape[-1] // factor, factor)
+    shifts = (jnp.arange(factor, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    packed = jnp.sum(
+        (x.astype(jnp.uint32) << shifts.astype(jnp.uint32)), axis=-1
+    ).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis if axis >= 0 else axis)
+
+
+def unpack_bits(packed: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns uint8 codes."""
+    if bits == 8:
+        return packed
+    factor = 8 // bits
+    x = _move_group_axis_last(packed, axis)
+    shifts = (jnp.arange(factor, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    mask = jnp.uint8((1 << bits) - 1)
+    out = (x[..., None] >> shifts) & mask  # [..., n_bytes, factor]
+    out = out.reshape(*x.shape[:-1], x.shape[-1] * factor)
+    return jnp.moveaxis(out, -1, axis if axis >= 0 else axis)
+
+
+def _group_reduce_shape(x: jax.Array, axis: int, group: int):
+    """Reshapes ``axis`` into (n_groups, group) as trailing-structured view."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n % group:
+        raise ValueError(f"grouped axis length {n} not divisible by group {group}")
+    return x.reshape(*x.shape[:-1], n // group, group)
+
+
+def _scale_to_canonical(scale: jax.Array, mode: Mode) -> jax.Array:
+    """Grouped-internal scale layout -> canonical layout.
+
+    Internally group reduction yields ``[..., H, T/G]`` for ``per_channel``
+    (token axis moved last); canonically we store ``[..., T/G, H]`` so the
+    group axis sits where the token axis sits — making committed-cache
+    slicing uniform across K and V.  ``per_token`` is already canonical
+    (``[..., T, H/G]``).
+    """
+    if mode == "per_channel":
+        return jnp.swapaxes(scale, -1, -2)
+    return scale
+
+
+def _scale_from_canonical(scale: jax.Array, mode: Mode) -> jax.Array:
+    if mode == "per_channel":
+        return jnp.swapaxes(scale, -1, -2)
+    return scale
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantize(x: jax.Array, spec: QuantSpec) -> QuantArray:
+    """RTN group-quantizes ``x`` (shape [..., T, H]) per ``spec``.
+
+    Returns a :class:`QuantArray` with packed uint8 codes.  The grouped-axis
+    length must be divisible by both ``spec.group`` and ``spec.pack_factor``
+    (group sizes are multiples of 8/bits for all supported configs).
+    """
+    axis = spec.group_axis
+    xg = _group_reduce_shape(x.astype(jnp.float32), axis, spec.group)
+    lo = jnp.min(xg, axis=-1)
+    hi = jnp.max(xg, axis=-1)
+    scale = (hi - lo) / spec.levels
+    # Guard degenerate groups (constant values) against div-by-zero.
+    safe_scale = jnp.where(scale <= 0, 1.0, scale)
+    codes = jnp.round((xg - lo[..., None]) / safe_scale[..., None])
+    codes = jnp.clip(codes, 0, spec.levels).astype(jnp.uint8)
+    # Restore layout: [..., n_groups, group] -> grouped axis back in place.
+    codes = codes.reshape(*codes.shape[:-2], -1)
+    codes = jnp.moveaxis(codes, -1, axis)
+    packed = pack_bits(codes, spec.bits, axis)
+    return QuantArray(
+        codes=packed,
+        scale=_scale_to_canonical(scale.astype(spec.scale_dtype), spec.mode),
+        zero=_scale_to_canonical(lo.astype(spec.scale_dtype), spec.mode),
+        spec=spec,
+    )
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize(q: QuantArray, dtype: jnp.dtype = jnp.bfloat16) -> jax.Array:
+    """Dequantizes a :class:`QuantArray` back to ``dtype``: ``q*s + z``."""
+    spec = q.spec
+    axis = spec.group_axis
+    codes = unpack_bits(q.codes, spec.bits, axis)
+    cg = _group_reduce_shape(codes, axis, spec.group).astype(jnp.float32)
+    scale = _scale_from_canonical(q.scale, spec.mode).astype(jnp.float32)
+    zero = _scale_from_canonical(q.zero, spec.mode).astype(jnp.float32)
+    out = cg * scale[..., None] + zero[..., None]
+    out = out.reshape(*out.shape[:-2], -1)
+    return jnp.moveaxis(out, -1, axis).astype(dtype)
+
+
+def quantized_bytes_per_element(spec: QuantSpec, scale_bytes: int | None = None) -> float:
+    """Average storage bytes per cached element under ``spec``.
+
+    Packed codes contribute ``bits/8``; scale+zero amortize over the group.
+    Used by the Fig-4 memory-accounting benchmark.
+    """
+    if scale_bytes is None:
+        scale_bytes = jnp.dtype(spec.scale_dtype).itemsize
+    return spec.bits / 8.0 + 2.0 * scale_bytes / spec.group

@@ -1,0 +1,81 @@
+"""Active-mesh context: lets deeply nested modules (MoE's shard_map) find
+the mesh and axis-name conventions without threading them through every
+call signature."""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["MeshContext", "use_mesh", "current_mesh_context"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    batch_axes: tuple[str, ...]  # axes the global batch shards over
+    model_axis: Optional[str]    # tensor/expert-parallel axis
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.batch_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def mp_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+
+_state = threading.local()
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return getattr(_state, "ctx", None)
+
+
+def constrain_axis(x, dim: int, *, batch_dim: Optional[int] = 0):
+    """Sharding-constrains ``x`` so axis ``dim`` shards over the model axis
+    (when divisible) and ``batch_dim`` over the data axes.  No-op without an
+    active mesh.  Used to pin the head axis of attention intermediates —
+    XLA otherwise sometimes replicates heads materialized from replicated
+    inputs (e.g. MLA's latent up-projections)."""
+    ctx = current_mesh_context()
+    if ctx is None or ctx.model_axis is None:
+        return x
+    if x.shape[dim] % ctx.mesh.shape[ctx.model_axis]:
+        return x
+    parts: list = [None] * x.ndim
+    parts[dim] = ctx.model_axis
+    if batch_dim is not None and ctx.batch_axes:
+        ba = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+        size = 1
+        for a in ctx.batch_axes:
+            size *= ctx.mesh.shape[a]
+        if x.shape[batch_dim] % size == 0:
+            parts[batch_dim] = ba
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except (ValueError, RuntimeError):
+        return x
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, *, batch_axes=("data",), model_axis="model"):
+    """Activates ``mesh`` for model code AND as the pjit default mesh."""
+    batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    model_axis = model_axis if model_axis in mesh.axis_names else None
+    prev = current_mesh_context()
+    _state.ctx = MeshContext(mesh, batch_axes, model_axis)
+    try:
+        with mesh:
+            yield _state.ctx
+    finally:
+        _state.ctx = prev

@@ -1,0 +1,104 @@
+"""Logical-axis → mesh-axis sharding resolution.
+
+Models annotate parameters with *logical* axes (``repro.models.layers.Spec``);
+this module maps them onto the physical mesh with divisibility-aware
+fallback (an axis that doesn't divide evenly is left unsharded rather than
+failing — e.g. MQA's ``kv_heads=1`` can never shard over ``model=16``).
+
+Default rules (Megatron-style TP over ``model``, optional FSDP over the
+data axes for big archs):
+
+  vocab   → model          heads/kv_heads/experts → model
+  mlp     → model          embed → (pod, data) when cfg.fsdp else replicated
+  layers  → never sharded
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import Spec, is_spec
+
+__all__ = [
+    "ShardingRules", "default_rules", "resolve_pspec", "param_pspecs",
+    "param_shardings", "batch_pspec", "cast_tree",
+]
+
+
+class ShardingRules(dict):
+    """logical-axis name → tuple of candidate mesh axes (tried greedily)."""
+
+
+def default_rules(fsdp: bool, mesh: Mesh) -> ShardingRules:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = ("model",) if "model" in mesh.axis_names else ()
+    r = ShardingRules({
+        "vocab": model,
+        "heads": model,
+        "kv_heads": model,
+        "mlp": model,
+        "experts": model,
+        "embed": data_axes if fsdp else (),
+        "expert_ff": data_axes if fsdp else (),  # see moe_specs
+        "layers": (),
+    })
+    return r
+
+
+def _fit_axes(dim: int, candidates: tuple[str, ...], mesh: Mesh,
+              used: set[str]) -> tuple[str, ...]:
+    """Largest prefix of candidate axes (unused, divisible) for this dim."""
+    chosen: list[str] = []
+    prod = 1
+    for a in candidates:
+        if a in used:
+            continue
+        if dim % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def resolve_pspec(spec: Spec, rules: ShardingRules, mesh: Mesh) -> P:
+    used: set[str] = set()
+    parts = []
+    for dim, ax in zip(spec.shape, spec.axes):
+        cands = rules.get(ax, ()) if ax else ()
+        fit = _fit_axes(dim, cands, mesh, used)
+        used |= set(fit)
+        if len(fit) == 0:
+            parts.append(None)
+        elif len(fit) == 1:
+            parts.append(fit[0])
+        else:
+            parts.append(tuple(fit))
+    return P(*parts)
+
+
+def param_pspecs(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(lambda s: resolve_pspec(s, rules, mesh),
+                        spec_tree, is_leaf=is_spec)
+
+
+def param_shardings(spec_tree, rules: ShardingRules, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, resolve_pspec(s, rules, mesh)),
+                        spec_tree, is_leaf=is_spec)
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch axis over (pod, data); remaining dims replicated."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    first = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    return P(first, *([None] * extra_dims))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)

@@ -1,0 +1,133 @@
+"""Elastic fault tolerance: failure detection, mesh reconstruction, state
+resharding, and straggler mitigation.
+
+Designed for 1000+-node fleets; exercised on CPU by *simulating* host loss
+(the controller logic is identical — only the device source differs):
+
+1. :class:`HeartbeatRegistry` — hosts report per-step heartbeats; the
+   controller marks a host dead after ``timeout_steps`` silent steps.
+2. :func:`plan_remesh` — given surviving device count, picks the largest
+   feasible (data × model) mesh ≤ survivors that preserves the model-axis
+   size (TP degree must not change — parameter shards live there), shrinking
+   the data axis and rescaling the global batch.
+3. On restart, :class:`repro.checkpoint.manager.CheckpointManager.restore`
+   replaces device→shard placement onto the new mesh (shardings argument),
+   so elastic restart = detect → plan → restore → continue.
+4. :class:`StragglerDetector` — robust (median + MAD) per-host step-time
+   outlier detection; persistent stragglers get demoted to the blocklist so
+   the next re-mesh excludes them (slow host ≈ failed host at scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Optional
+
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "plan_remesh",
+           "RemeshPlan"]
+
+
+class HeartbeatRegistry:
+    def __init__(self, hosts: list[int], timeout_steps: int = 3):
+        self.hosts = set(hosts)
+        self.timeout = timeout_steps
+        self.last_step: dict[int, int] = {h: -1 for h in hosts}
+
+    def beat(self, host: int, step: int):
+        if host in self.hosts:
+            self.last_step[host] = max(self.last_step[host], step)
+
+    def dead_hosts(self, current_step: int) -> set[int]:
+        return {h for h in self.hosts
+                if current_step - self.last_step[h] > self.timeout}
+
+    def alive(self, current_step: int) -> set[int]:
+        return self.hosts - self.dead_hosts(current_step)
+
+    def remove(self, hosts: set[int]):
+        self.hosts -= hosts
+        for h in hosts:
+            self.last_step.pop(h, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    pod: int
+    global_batch: int
+    dropped_hosts: int
+
+    @property
+    def devices(self) -> int:
+        return max(self.pod, 1) * self.data * self.model
+
+
+def plan_remesh(
+    surviving_devices: int,
+    *,
+    model_size: int,
+    batch_per_data_shard: int,
+    old_data: int,
+    pods: int = 1,
+    min_data: int = 1,
+) -> Optional[RemeshPlan]:
+    """Largest feasible mesh after failures.
+
+    The model axis is pinned (TP shards are stateful); the data axis shrinks
+    to the largest ``d ≤ old_data`` with ``pods·d·model ≤ survivors``.
+    Global batch rescales with it (per-shard batch stays constant so the
+    compiled step is shape-compatible after resharding).
+    """
+    for d in range(old_data, min_data - 1, -1):
+        if pods * d * model_size <= surviving_devices:
+            return RemeshPlan(data=d, model=model_size, pod=pods,
+                              global_batch=batch_per_data_shard * d * max(pods, 1),
+                              dropped_hosts=old_data - d)
+    return None
+
+
+class StragglerDetector:
+    """Median+MAD step-time outlier detection with a strike counter."""
+
+    def __init__(self, window: int = 32, threshold: float = 3.0,
+                 strikes: int = 5):
+        self.window = window
+        self.threshold = threshold
+        self.strikes = strikes
+        self.times: dict[int, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+        self.strike_count: dict[int, int] = defaultdict(int)
+        self.blocklist: set[int] = set()
+
+    def report(self, host: int, step_time: float):
+        self.times[host].append(step_time)
+
+    def _stats(self):
+        import statistics
+        last = [t[-1] for t in self.times.values() if t]
+        if len(last) < 2:
+            return None, None
+        med = statistics.median(last)
+        mad = statistics.median(abs(x - med) for x in last) or 1e-9
+        return med, mad
+
+    def check(self) -> set[int]:
+        """Returns hosts that just crossed the persistent-straggler bar."""
+        med, mad = self._stats()
+        if med is None:
+            return set()
+        newly = set()
+        for h, t in self.times.items():
+            if not t or h in self.blocklist:
+                continue
+            if (t[-1] - med) / (1.4826 * mad) > self.threshold:
+                self.strike_count[h] += 1
+                if self.strike_count[h] >= self.strikes:
+                    self.blocklist.add(h)
+                    newly.add(h)
+            else:
+                self.strike_count[h] = max(0, self.strike_count[h] - 1)
+        return newly

@@ -1,0 +1,12 @@
+"""TPU Pallas kernels for the AsymKV hot paths.
+
+``asym_decode_attn`` — fused dequant-inside-attention flash decode;
+``rtn_pack``         — group quantize + sub-byte bit-pack (cache commit);
+``flash_prefill``    — blocked causal/windowed attention.
+
+Each has a pure-jnp oracle in ``ref.py``; interpret-mode sweeps in
+``tests/test_kernels.py`` assert allclose against it.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    asym_decode_attention, rtn_pack, flash_prefill_kernel,
+)

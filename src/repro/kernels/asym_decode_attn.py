@@ -1,0 +1,184 @@
+"""Fused AsymKV decode attention — the paper's hot spot on TPU.
+
+Flash-decode over the *packed* quantized KV store: each grid step streams
+one block of packed K/V codes + group scales from HBM into VMEM, unpacks
+sub-byte codes with shift/mask ops, dequantizes to fp32 *in VMEM*, and runs
+the two MXU matmuls of online-softmax attention.  HBM traffic is therefore
+``bits/16`` of a bf16 cache — exactly the paper's memory saving, realized at
+the bandwidth-bound decode step.
+
+Layout (per KV head; ``f = 8 // bits`` codes per byte):
+
+  K codes  [T·k_bits/8, D]  packed along tokens  (per-channel scales [T/G, D])
+  V codes  [T, D·v_bits/8]  packed along channels (per-token scales [T, D/G])
+
+Grid ``(B·Hkv, T/BLK)`` — the token dimension iterates minor-most, so the
+online-softmax scratch (m, l, acc in VMEM) accumulates sequentially; outputs
+are partial stats ``(m, l, acc)`` that the wrapper merges with the fp
+residual ring (see ``ops.asym_decode_attention``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["asym_decode_attn"]
+
+NEG_INF = -1e30
+
+
+def _unpack_tokens(packed, bits: int):
+    """[Tp, D] uint8 → [Tp·f, D] codes (token-packed, K layout)."""
+    if bits == 8:
+        return packed
+    f = 8 // bits
+    mask = (1 << bits) - 1
+    parts = [(packed >> (k * bits)) & mask for k in range(f)]
+    x = jnp.stack(parts, axis=1)           # [Tp, f, D]
+    return x.reshape(packed.shape[0] * f, packed.shape[1])
+
+
+def _unpack_channels(packed, bits: int):
+    """[T, Dp] uint8 → [T, Dp·f] codes (channel-packed, V layout)."""
+    if bits == 8:
+        return packed
+    f = 8 // bits
+    mask = (1 << bits) - 1
+    parts = [(packed >> (k * bits)) & mask for k in range(f)]
+    x = jnp.stack(parts, axis=2)           # [T, Dp, f]
+    return x.reshape(packed.shape[0], packed.shape[1] * f)
+
+
+def _kernel(commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref,
+            vz_ref, m_out, l_out, acc_out, m_scr, l_scr, acc_scr, *,
+            k_bits: int, v_bits: int, group: int, v_group: int, block: int,
+            scale: float):
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- dequantize K block: [BLK, D] --------------------------------
+    k_codes = _unpack_tokens(kc_ref[0, 0], k_bits).astype(jnp.float32)
+    ks = jnp.repeat(ks_ref[0, 0], group, axis=0)   # [BLK, D]
+    kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
+    k = k_codes * ks + kz
+
+    # ---- scores + mask ------------------------------------------------
+    q = q_ref[0, 0].astype(jnp.float32)            # [r, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = t * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    valid = pos < commit_ref[0]
+    s = jnp.where(valid, s, NEG_INF)               # [r, BLK]
+
+    # ---- dequantize V block: [BLK, Dv] --------------------------------
+    v_codes = _unpack_channels(vc_ref[0, 0], v_bits).astype(jnp.float32)
+    vs = jnp.repeat(vs_ref[0, 0], v_group, axis=1)  # [BLK, Dv]
+    vz = jnp.repeat(vz_ref[0, 0], v_group, axis=1)
+    v = v_codes * vs + vz
+
+    # ---- online softmax -----------------------------------------------
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _finalize():
+        m_out[0, 0] = m_scr[...]
+        l_out[0, 0] = l_scr[...]
+        acc_out[0, 0] = acc_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "v_bits", "group", "v_group", "block",
+                     "scale", "interpret"))
+def asym_decode_attn(
+    q: jax.Array,        # [B, Hkv, r, D]
+    k_codes: jax.Array,  # [B, Hkv, T·k_bits/8, D] uint8
+    k_scale: jax.Array,  # [B, Hkv, T/G, D]
+    k_zero: jax.Array,
+    v_codes: jax.Array,  # [B, Hkv, T, Dv·v_bits/8] uint8
+    v_scale: jax.Array,  # [B, Hkv, T, Dv/G]
+    v_zero: jax.Array,
+    commit: jax.Array,   # [1] int32
+    *,
+    k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
+    block: int = 512, scale: float, interpret: bool = True,
+):
+    """Partial flash-decode stats over the committed quantized cache.
+    Returns (m [B,H,r], l [B,H,r], acc [B,H,r,Dv]) in fp32."""
+    B, H, r, D = q.shape
+    T = v_codes.shape[2]
+    v_group = v_group or group
+    Dv = v_scale.shape[3] * v_group
+    block = min(block, T)
+    assert T % block == 0 and block % group == 0
+    n_t = T // block
+    grid = (B * H, n_t)
+
+    kb = k_bits
+    vb = v_bits
+
+    def bh(i, t):
+        return (i // H, i % H)
+
+    specs_in = [
+        pl.BlockSpec((1,), lambda i, t: (0,)),                    # commit
+        pl.BlockSpec((1, 1, r, D), lambda i, t: (*bh(i, t), 0, 0)),
+        pl.BlockSpec((1, 1, block * kb // 8, D),
+                     lambda i, t: (*bh(i, t), t, 0)),
+        pl.BlockSpec((1, 1, block // group, D),
+                     lambda i, t: (*bh(i, t), t, 0)),
+        pl.BlockSpec((1, 1, block // group, D),
+                     lambda i, t: (*bh(i, t), t, 0)),
+        pl.BlockSpec((1, 1, block, Dv * vb // 8),
+                     lambda i, t: (*bh(i, t), t, 0)),
+        pl.BlockSpec((1, 1, block, Dv // v_group),
+                     lambda i, t: (*bh(i, t), t, 0)),
+        pl.BlockSpec((1, 1, block, Dv // v_group),
+                     lambda i, t: (*bh(i, t), t, 0)),
+    ]
+    specs_out = [
+        pl.BlockSpec((1, 1, r), lambda i, t: (*bh(i, t), 0)),
+        pl.BlockSpec((1, 1, r), lambda i, t: (*bh(i, t), 0)),
+        pl.BlockSpec((1, 1, r, Dv), lambda i, t: (*bh(i, t), 0, 0)),
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, H, r), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, r), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, r, Dv), jnp.float32),
+    ]
+    from jax.experimental.pallas import tpu as pltpu
+    scratch = [
+        pltpu.VMEM((r,), jnp.float32),
+        pltpu.VMEM((r,), jnp.float32),
+        pltpu.VMEM((r, Dv), jnp.float32),
+    ]
+    kernel = functools.partial(
+        _kernel, k_bits=k_bits, v_bits=v_bits, group=group, v_group=v_group,
+        block=block, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=specs_in,
+        out_specs=specs_out,
+        out_shape=out_shapes,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(commit, q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero)

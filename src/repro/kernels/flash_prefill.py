@@ -1,0 +1,127 @@
+"""Blocked flash attention (prefill/training) — causal and sliding-window.
+
+Grid ``(B·Hq, nQ, nKV)`` with the KV dimension minor-most; online-softmax
+scratch per query block.  Causal/window block skipping via ``pl.when`` —
+fully-masked KV blocks never touch the MXU.  GQA folds ``r`` query heads
+onto one KV stream via the index map (kv head = q head // r).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_prefill_kernel"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, causal: bool, window, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * block_q
+    k0 = kj * block_k
+    # Static-shape block skip predicate (traced on grid indices).
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k0 <= q0 + block_q - 1)
+    if window is not None:
+        live = live & (k0 + block_k - 1 >= q0 - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "scale",
+                     "interpret"))
+def flash_prefill_kernel(
+    q: jax.Array,  # [B, Hq, S, D]
+    k: jax.Array,  # [B, Hkv, S, D]
+    v: jax.Array,
+    *,
+    causal: bool = True, window=None, block_q: int = 512,
+    block_k: int = 512, scale: float | None = None, interpret: bool = True,
+):
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, Skv)
+    assert S % block_q == 0 and Skv % block_k == 0
+    grid = (B * Hq, S // block_q, Skv // block_k)
+
+    def b(i):
+        return i // Hq
+
+    def h(i):
+        return i % Hq
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, scale=scale)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D),
+                         lambda i, qi, kj: (b(i) * Hq + h(i), qi, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda i, qi, kj: (b(i) * Hkv + h(i) // r, kj, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda i, qi, kj: (b(i) * Hkv + h(i) // r, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda i, qi, kj: (b(i) * Hq + h(i), qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B * Hq, S, D), k.reshape(B * Hkv, Skv, D),
+      v.reshape(B * Hkv, Skv, D)).reshape(B, Hq, S, D)

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``asym_decode_attention`` is the full decode-attention entry point: the
+kernel produces partial flash stats over the packed committed store and this
+wrapper folds in the fp residual ring — numerically identical (≤1e-5) to
+``repro.core.attention_quant.decode_attend``.
+
+On CPU the kernels run in interpret mode (``interpret=True`` default); on
+TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvcache import LayerKVCache
+from repro.kernels.asym_decode_attn import asym_decode_attn
+from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.rtn_pack import rtn_pack
+
+__all__ = ["asym_decode_attention", "rtn_pack", "flash_prefill_kernel"]
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def asym_decode_attention(
+    q: jax.Array,            # [B, Hq, 1, D]
+    cache: LayerKVCache,
+    *,
+    block: int = 512,
+    interpret: bool = True,
+):
+    """Kernel-backed decode attention over a quantized cache (+ fp ring)."""
+    B, Hq, Sq, D = q.shape
+    assert Sq == 1
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    scale = D ** -0.5
+    qh = q.reshape(B, Hkv, r, D)
+    commit = cache.commit_length().reshape(1).astype(jnp.int32)
+
+    assert cache.k_bits > 0 and cache.v_bits > 0 and \
+        cache.v_slice_offset < 0, \
+        "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
+    m, l, acc = asym_decode_attn(
+        qh, cache.k_codes, cache.k_scale.astype(jnp.float32),
+        cache.k_zero.astype(jnp.float32), cache.v_codes,
+        cache.v_scale.astype(jnp.float32),
+        cache.v_zero.astype(jnp.float32), commit,
+        k_bits=cache.k_bits, v_bits=cache.v_bits, group=cache.group,
+        v_group=cache.v_group, block=block, scale=scale,
+        interpret=interpret)
+
+    # fold in the fp residual ring (tiny — pure jnp)
+    pos = cache.ring_positions()
+    valid = (pos >= cache.commit_length()) & (pos < cache.length)
+    s = jnp.einsum("bhrd,bhkd->bhrk", qh.astype(jnp.float32),
+                   cache.resid_k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.where(valid[None, None, None],
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhrk,bhkd->bhrd", p, cache.residual_v().astype(jnp.float32))
+    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)

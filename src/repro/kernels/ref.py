@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose``
+source of truth for the interpret-mode shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantArray, QuantSpec, dequantize, quantize
+
+__all__ = ["rtn_pack_ref", "asym_decode_attn_ref", "flash_prefill_ref"]
+
+
+def rtn_pack_ref(x: jax.Array, bits: int, group: int, mode: str):
+    """Group-quantize + pack.  x: [B, H, T, D] → (codes, scale, zero)."""
+    spec = QuantSpec(bits=bits, group=group, mode=mode)
+    q = quantize(x, spec)
+    return q.codes, q.scale, q.zero
+
+
+def asym_decode_attn_ref(
+    q: jax.Array,            # [B, Hkv, r, D]
+    k_codes, k_scale, k_zero,  # packed per-channel K
+    v_codes, v_scale, v_zero,  # packed per-token V
+    commit: jax.Array,         # scalar int32 — valid prefix length
+    *,
+    k_bits: int, v_bits: int, group: int, scale: float,
+):
+    """Partial flash-decode stats over the committed quantized store.
+
+    Returns (m, l, acc): running max [B,Hkv,r], sum [B,Hkv,r], weighted
+    values [B,Hkv,r,Dv] — the caller folds in the fp residual ring.
+    """
+    kq = QuantArray(k_codes, k_scale, k_zero,
+                    QuantSpec(bits=k_bits, group=group, mode="per_channel"))
+    k = dequantize(kq, jnp.float32)
+    vq = QuantArray(v_codes, v_scale, v_zero,
+                    QuantSpec(bits=v_bits, group=group, mode="per_token"))
+    v = dequantize(vq, jnp.float32)
+    T = k.shape[2]
+    s = jnp.einsum("bhrd,bhtd->bhrt", q.astype(jnp.float32), k) * scale
+    valid = jnp.arange(T) < commit
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhrt,bhtd->bhrd", p, v)
+    return m, l, acc
+
+
+def flash_prefill_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Plain masked attention.  q: [B,Hq,Sq,D]; k,v: [B,Hkv,Skv,D]."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = q.reshape(B, Hkv, r, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qh, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bhkd->bhrqd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

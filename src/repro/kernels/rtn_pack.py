@@ -1,0 +1,124 @@
+"""RTN group-quantize + bit-pack kernel — the cache-commit hot path.
+
+One pass per committed group: min/max reduction → scale/zero → round →
+shift/OR pack into uint8, all in VMEM (no HBM round-trip of intermediate
+codes).  Grid ``(B·H, T/BLK)``; per-channel (K) packs along tokens,
+per-token (V) packs along channels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rtn_pack"]
+
+
+def _pack_tokens(codes, bits: int):
+    """[T, D] uint8 codes → [T·bits/8, D] packed."""
+    if bits == 8:
+        return codes
+    f = 8 // bits
+    T, D = codes.shape
+    x = codes.reshape(T // f, f, D).astype(jnp.uint32)
+    out = jnp.zeros((T // f, D), jnp.uint32)
+    for k in range(f):
+        out = out | (x[:, k] << (k * bits))
+    return out.astype(jnp.uint8)
+
+
+def _pack_channels(codes, bits: int):
+    """[T, D] uint8 codes → [T, D·bits/8] packed."""
+    if bits == 8:
+        return codes
+    f = 8 // bits
+    T, D = codes.shape
+    x = codes.reshape(T, D // f, f).astype(jnp.uint32)
+    out = jnp.zeros((T, D // f), jnp.uint32)
+    for k in range(f):
+        out = out | (x[:, :, k] << (k * bits))
+    return out.astype(jnp.uint8)
+
+
+def _kernel(x_ref, codes_out, scale_out, zero_out, *, bits: int, group: int,
+            mode: str):
+    x = x_ref[0, 0].astype(jnp.float32)  # [BLK, D]
+    levels = (1 << bits) - 1
+    BLK, D = x.shape
+    if mode == "per_channel":
+        # scales per channel over token groups: [BLK/G, D]
+        xg = x.reshape(BLK // group, group, D)
+        lo = jnp.min(xg, axis=1)
+        hi = jnp.max(xg, axis=1)
+        s = (hi - lo) / levels
+        s_safe = jnp.where(s <= 0, 1.0, s)
+        codes = jnp.round((xg - lo[:, None]) / s_safe[:, None])
+        codes = jnp.clip(codes, 0, levels).astype(jnp.uint8)
+        codes = codes.reshape(BLK, D)
+        codes_out[0, 0] = _pack_tokens(codes, bits)
+    else:
+        # scales per token over channel groups: [BLK, D/G]
+        xg = x.reshape(BLK, D // group, group)
+        lo = jnp.min(xg, axis=2)
+        hi = jnp.max(xg, axis=2)
+        s = (hi - lo) / levels
+        s_safe = jnp.where(s <= 0, 1.0, s)
+        codes = jnp.round((xg - lo[..., None]) / s_safe[..., None])
+        codes = jnp.clip(codes, 0, levels).astype(jnp.uint8)
+        codes = codes.reshape(BLK, D)
+        codes_out[0, 0] = _pack_channels(codes, bits)
+    scale_out[0, 0] = s
+    zero_out[0, 0] = lo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group", "mode", "block", "interpret"))
+def rtn_pack(
+    x: jax.Array,  # [B, H, T, D]
+    *,
+    bits: int, group: int = 32, mode: str = "per_channel",
+    block: int = 256, interpret: bool = True,
+):
+    """Quantize+pack a committed span.  Returns (codes, scale, zero) with
+    the same layouts as ``repro.core.quant.quantize``."""
+    B, H, T, D = x.shape
+    block = min(block, T)
+    assert T % block == 0 and block % group == 0 and D % group == 0
+    grid = (B * H, T // block)
+
+    def bh(i, t):
+        return (i // H, i % H)
+
+    if mode == "per_channel":
+        codes_shape = (B, H, T * bits // 8, D)
+        codes_blk = (1, 1, block * bits // 8, D)
+        sc_shape = (B, H, T // group, D)
+        sc_blk = (1, 1, block // group, D)
+    else:
+        codes_shape = (B, H, T, D * bits // 8)
+        codes_blk = (1, 1, block, D * bits // 8)
+        sc_shape = (B, H, T, D // group)
+        sc_blk = (1, 1, block, D // group)
+
+    kernel = functools.partial(_kernel, bits=bits, group=group, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1, block, D),
+                               lambda i, t: (*bh(i, t), t, 0))],
+        out_specs=[
+            pl.BlockSpec(codes_blk, lambda i, t: (*bh(i, t), t, 0)),
+            pl.BlockSpec(sc_blk, lambda i, t: (*bh(i, t), t, 0)),
+            pl.BlockSpec(sc_blk, lambda i, t: (*bh(i, t), t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(codes_shape, jnp.uint8),
+            jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+            jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

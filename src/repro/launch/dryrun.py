@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production mesh, and record memory/cost/collective analysis.
+
+MUST be the first import in the process (the XLA_FLAGS line above runs
+before jax locks the device count) — run as::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
+        --shape train_4k [--multipod] [--out experiments/dryrun]
+
+``--all`` sweeps every assigned cell (33 live cells × both meshes).  Output
+is one JSON per cell consumed by benchmarks/roofline aggregation and
+EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed.context import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cells_for
+from repro.launch.steps import make_step_bundle
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+from benchmarks.roofline import (model_flops, model_flops_attn,  # noqa: E402
+                                 roofline)
+
+# Per-arch microbatch knobs.  With Megatron-style sequence sharding of
+# activations (steps.build_model) the MoE dispatch buffers and remat carries
+# are already /model_size, and every extra microbatch re-gathers the FSDP
+# weight shards — so 1 is both the fastest AND the leanest setting for all
+# but the 236B arch (which is optimizer-state-bound; it also runs bf16
+# moments — see EXPERIMENTS.md §Dry-run).
+MICROBATCHES: dict = {
+    ("deepseek-v2-236b", "train_4k"): 4,
+    # SSD fwd holds [B,H,Q,Q] intra-chunk tiles per remat segment; 4 micro-
+    # batches bound them (B_loc 16→4) without the FSDP-regather penalty
+    # (zamba2 is not FSDP-sharded).
+    ("zamba2-2.7b", "train_4k"): 4,
+}
+BF16_MOMENTS = {"deepseek-v2-236b"}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             seq_parallel_min: int = 1 << 62) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        from repro.training.optimizer import AdamWConfig
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if arch in BF16_MOMENTS else "float32")
+        with use_mesh(mesh, batch_axes=("pod", "data"), model_axis="model"):
+            bundle = make_step_bundle(
+                cfg, cell, mesh,
+                microbatches=MICROBATCHES.get((arch, shape), 1),
+                seq_parallel_min=seq_parallel_min,
+                opt_cfg=opt_cfg)
+            jf = jax.jit(
+                bundle.fn,
+                in_shardings=bundle.in_shardings,
+                out_shardings=bundle.out_shardings,
+                donate_argnums=bundle.donate_argnums)
+            lowered = jf.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            # persist the HLO so roofline iterations re-analyze offline
+            import gzip
+            hlo_dir = out_dir / "hlo"
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            with gzip.open(hlo_dir / f"{arch}_{shape}_{mesh_name}.txt.gz",
+                           "wt") as fh:
+                fh.write(hlo)
+            rl = roofline(cost, hlo)
+            mf = model_flops(cfg, cell)
+            mfa = model_flops_attn(cfg, cell)
+            n_dev = mesh.devices.size
+            rec.update(
+                ok=True,
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory=dict(
+                    argument_gb=mem.argument_size_in_bytes / 1e9,
+                    output_gb=mem.output_size_in_bytes / 1e9,
+                    temp_gb=mem.temp_size_in_bytes / 1e9,
+                    alias_gb=mem.alias_size_in_bytes / 1e9,
+                    peak_gb=(mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             - mem.alias_size_in_bytes) / 1e9,
+                ),
+                roofline=rl.as_dict(),
+                model_flops_total=mf,
+                model_flops_per_device=mf / n_dev,
+                model_flops_attn_total=mfa,
+                useful_flop_ratio=(mf / n_dev) / max(rl.flops, 1.0),
+                useful_flop_ratio_attn=(mfa / n_dev) / max(rl.flops, 1.0),
+                devices=n_dev,
+            )
+            print(f"[{arch} × {shape} × {mesh_name}] OK  "
+                  f"compile={t_compile:.0f}s  "
+                  f"peak={rec['memory']['peak_gb']:.2f}GB/dev  "
+                  f"compute={rl.compute_s*1e3:.2f}ms "
+                  f"memory={rl.memory_s*1e3:.2f}ms "
+                  f"collective={rl.collective_s*1e3:.2f}ms "
+                  f"→ {rl.dominant}-bound  "
+                  f"useful={rec['useful_flop_ratio']*100:.0f}%")
+            print("  memory_analysis:", mem)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[{arch} × {shape} × {mesh_name}] FAIL {rec['error'][:200]}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fn = out_dir / f"{arch}_{shape}_{mesh_name}.json"
+    fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-parallel-min", type=int, default=1 << 62,
+                    help="caches ≥ this many tokens shard over model "
+                         "(sequence-parallel decode)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    out = Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    n_ok = n_fail = 0
+    for arch in archs:
+        cells = cells_for(arch)
+        shapes = ([c.name for c in cells] if args.shape == "all"
+                  else ([args.shape] if args.shape in
+                        {c.name for c in cells} else []))
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out,
+                               seq_parallel_min=args.seq_parallel_min)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""The assigned (architecture × input-shape) grid.
+
+LM-transformer shapes are seq_len × global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a seq_len KV cache), not
+``train_step``.  ``long_500k`` requires sub-quadratic attention: it runs for
+the SSM/hybrid/local archs and is skipped (with a DESIGN.md note) for pure
+full-attention archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ShapeCell", "SHAPES", "LONG_OK", "cells_for", "all_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# Sub-quadratic archs that run the 500k-context decode cell.
+LONG_OK = {"mamba2-370m", "zamba2-2.7b", "gemma3-1b"}
+
+
+def cells_for(arch: str) -> list[ShapeCell]:
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if arch in LONG_OK:
+        cells.append(SHAPES["long_500k"])
+    return cells
+
+
+def all_cells() -> list[tuple[str, ShapeCell]]:
+    from repro.configs import ASSIGNED
+    return [(a, c) for a in ASSIGNED for c in cells_for(a)]

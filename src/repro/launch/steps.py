@@ -1,0 +1,303 @@
+"""Step builders: (config × shape-cell × mesh) → jit-able step function with
+input ShapeDtypeStructs and in/out shardings.
+
+Used by the dry-run (lower+compile only), the trainer, and the serving
+engine, so the exact computation that is dry-run-validated is the one that
+runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.asymkv import AsymKVPolicy
+from repro.core.kvcache import LayerKVCache
+from repro.distributed.sharding import (
+    batch_pspec, cast_tree, default_rules, param_pspecs, param_shardings,
+)
+from repro.launch.shapes import ShapeCell
+from repro.models.layers import spec_shapes
+from repro.models.ssm import SSMState
+from repro.models.transformer import Model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+__all__ = ["StepBundle", "build_model", "input_specs", "make_step_bundle",
+           "cache_pspecs", "default_policy"]
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower/run one (arch × shape × mesh) cell."""
+    fn: Any                   # step function
+    args: tuple               # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    model: Model
+    donate_argnums: tuple = ()
+
+
+def default_policy(cfg: ModelConfig, cell: ShapeCell) -> AsymKVPolicy:
+    """The paper-faithful default: AsymKV-(L/2)/0 at 2/1 bits, residual 128
+    for ≤4k contexts and 512 beyond (paper App. A.1)."""
+    n = cfg.n_cache_layers
+    if n == 0:
+        return AsymKVPolicy.float_cache(max(n, 0)) if n else \
+            AsymKVPolicy(n_layers=0, l_k=0, l_v=0, enabled=False)
+    residual = 128 if cell.seq <= 4096 else 512
+    return AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0,
+                        high_bits=2, low_bits=1, residual=residual)
+
+
+def build_model(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
+                policy: Optional[AsymKVPolicy] = None) -> Model:
+    policy = policy or default_policy(cfg, cell)
+    act_pspec = None
+    if mesh is not None and cell.kind == "train" and "model" in mesh.axis_names:
+        if cell.seq % mesh.shape["model"] == 0:
+            act_pspec = P(batch_pspec(mesh)[0], "model", None)
+    return Model(cfg, policy, residual=policy.residual,
+                 enc_len_hint=4096, act_pspec=act_pspec)
+
+
+# ---------------------------------------------------------------- inputs
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    B, S = cell.batch, cell.seq
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def sd(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    if cell.kind == "decode":
+        return {"token": sd((B,), i32), "pos": sd((), i32)}
+
+    specs: dict[str, Any] = {}
+    s_text = S
+    if cfg.frontend and cfg.frontend.kind == "vision":
+        s_text = S - cfg.frontend.n_positions
+        specs["patch_embeds"] = sd(
+            (B, cfg.frontend.n_positions, cfg.frontend.embed_dim or cfg.d_model),
+            f32)
+    if cfg.is_encdec:
+        specs["frame_embeds"] = sd(
+            (B, min(S, 4096), cfg.frontend.embed_dim or cfg.d_model), f32)
+    specs["tokens"] = sd((B, s_text), i32)
+    if cell.kind == "train":
+        specs["labels"] = sd((B, s_text), i32)
+    return specs
+
+
+def cache_structs(model: Model, cell: ShapeCell, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the serving caches (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_caches(cell.batch, cell.seq, dtype=dtype))
+
+
+# ---------------------------------------------------------------- shardings
+
+def _axes_fit(n: int, axes: tuple[str, ...], mesh: Mesh):
+    chosen, prod = [], 1
+    for a in axes:
+        if a in mesh.axis_names and n % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
+                 seq_parallel_min: int = 1 << 62):
+    """PartitionSpecs for the cache pytree.
+
+    Per LayerKVCache (stacked leaves [L, B, H, T…, D…]): batch over the data
+    axes, KV heads over model when divisible; caches of ≥
+    ``seq_parallel_min`` tokens additionally shard the committed token axis
+    over ``seq_axes`` (sequence-parallel decode — must match the model's
+    ``seqpar_axes``).  SSMState: heads over model.
+    """
+    mdl = "model" if "model" in mesh.axis_names else None
+
+    def one_cache(c: LayerKVCache):
+        B = c.resid_k.shape[1]
+        H = c.resid_k.shape[2]
+        b_ax = _axes_fit(B, ("pod", "data"), mesh)
+        b_used = b_ax if isinstance(b_ax, tuple) else \
+            ((b_ax,) if b_ax else ())
+        h_ax = mdl if (mdl and H % mesh.shape[mdl] == 0 and H > 1
+                       and mdl not in b_used) else None
+        t_ax: tuple = ()
+        if c.max_tokens >= seq_parallel_min:
+            t_ax = tuple(a for a in seq_axes
+                         if a not in b_used and a != h_ax)
+            n = 1
+            for a in t_ax:
+                n *= mesh.shape[a]
+            if n <= 1 or c.max_tokens % (n * c.group) != 0:
+                t_ax = ()
+        t = (t_ax if len(t_ax) > 1 else (t_ax[0] if t_ax else None))
+
+        def leaf(name, a):
+            if a is None:
+                return None
+            if name == "length":
+                return P(None)
+            # [L, B, H, T…, D…]
+            tt = t if name in ("k_codes", "k_scale", "k_zero", "v_codes",
+                               "v_scale", "v_zero", "k_fp", "v_fp") else None
+            return P(None, b_ax, h_ax, tt, *([None] * (a.ndim - 4)))
+
+        leaves = {n: leaf(n, getattr(c, n)) for n in LayerKVCache._LEAVES}
+        return LayerKVCache(
+            **leaves,
+            **{n: getattr(c, n) for n in LayerKVCache._STATIC})
+
+    def one_ssm(s: SSMState):
+        B = s.conv.shape[1]
+        b_ax = _axes_fit(B, ("pod", "data"), mesh)
+        H = s.h.shape[2]
+        h_ax = mdl if (mdl and H % mesh.shape[mdl] == 0) else None
+        cc = s.conv.shape[-1]
+        c_ax = mdl if (mdl and cc % mesh.shape[mdl] == 0) else None
+        return SSMState(conv=P(None, b_ax, None, c_ax),
+                        h=P(None, b_ax, h_ax, None, None))
+
+    def dispatch(x):
+        if isinstance(x, LayerKVCache):
+            return one_cache(x)
+        if isinstance(x, SSMState):
+            return one_ssm(x)
+        return x
+
+    return jax.tree.map(
+        dispatch, caches_struct,
+        is_leaf=lambda x: isinstance(x, (LayerKVCache, SSMState)))
+
+
+def _to_shardings(pspec_tree, mesh):
+    """PartitionSpec leaves → NamedShardings (None subtrees untouched)."""
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    dp = batch_pspec(mesh)[0]
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            b_ax = _axes_fit(v.shape[0], ("pod", "data"), mesh)
+            out[k] = NamedSharding(mesh, P(b_ax, *([None] * (v.ndim - 1))))
+    return out
+
+
+# ---------------------------------------------------------------- bundles
+
+def make_step_bundle(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh: Mesh,
+    *,
+    policy: Optional[AsymKVPolicy] = None,
+    microbatches: int = 1,
+    seq_parallel_min: int = 1 << 62,
+    opt_cfg: Optional[AdamWConfig] = None,
+) -> StepBundle:
+    model = build_model(cfg, cell, mesh, policy)
+    rules = default_rules(cfg.fsdp, mesh)
+    p_shard = param_shardings(model.spec, rules, mesh)
+    inputs = input_specs(cfg, cell)
+    in_batch_shard = batch_shardings(inputs, mesh)
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        mdt = (jnp.bfloat16 if opt_cfg.moment_dtype == "bfloat16"
+               else jnp.float32)
+        params_struct = spec_shapes(model.spec)
+        state_struct = jax.eval_shape(
+            lambda p: init_train_state(p, moment_dtype=mdt), params_struct)
+        rep = NamedSharding(mesh, P())
+        # params + mu/nu mirror param shardings; scalars replicated
+        from repro.training.train_step import TrainState
+        from repro.training.optimizer import OptState
+        state_shard = TrainState(
+            params=p_shard,
+            opt=OptState(mu=p_shard, nu=p_shard, count=rep),
+            step=rep, ef=None)
+        step = make_train_step(model, opt_cfg, microbatches=microbatches)
+        return StepBundle(
+            fn=step,
+            args=(state_struct, inputs),
+            in_shardings=(state_shard, in_batch_shard),
+            out_shardings=(state_shard, None),  # metrics: auto
+            model=model,
+            donate_argnums=(0,),
+        )
+
+    # serving: params in bf16
+    params_struct = spec_shapes(model.spec, dtype=jnp.bfloat16)
+    caches_struct = cache_structs(model, cell)
+
+    # Sequence-parallel decode policy: engage when KV heads can't shard over
+    # model (MQA/GQA remainders, MLA's single latent head) or the batch
+    # can't cover the data axes (long_500k's batch=1).
+    seq_axes: tuple = ()
+    if cell.kind in ("decode", "prefill") and "model" in mesh.axis_names:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_size = 1
+        for a in data_axes:
+            dp_size *= mesh.shape[a]
+        batch_ok = cell.batch % dp_size == 0
+        kvh = 1 if cfg.mla else cfg.n_kv_heads
+        heads_ok = kvh % mesh.shape["model"] == 0
+        if not heads_ok:
+            seq_axes += ("model",)
+        if not batch_ok:
+            seq_axes = data_axes + seq_axes
+        if seq_axes:
+            seq_parallel_min = min(seq_parallel_min, 8192)
+            model.seqpar_axes = seq_axes
+            model.seqpar_min_tokens = seq_parallel_min
+
+    c_pspecs = cache_pspecs(caches_struct, mesh, seq_axes=seq_axes,
+                            seq_parallel_min=seq_parallel_min)
+    c_shard = _to_shardings(c_pspecs, mesh)
+    rep = NamedSharding(mesh, P())
+
+    if cell.kind == "prefill":
+        def fn(params, batch, caches):
+            return model.prefill(params, batch, caches)
+        logits_shard = rep
+        return StepBundle(
+            fn=fn,
+            args=(params_struct, inputs, caches_struct),
+            in_shardings=(p_shard, in_batch_shard, c_shard),
+            out_shardings=(logits_shard, c_shard),
+            model=model,
+            donate_argnums=(2,),
+        )
+
+    def fn(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos)
+
+    tok_shard = in_batch_shard["token"]
+    return StepBundle(
+        fn=fn,
+        args=(params_struct, inputs["token"], caches_struct, inputs["pos"]),
+        in_shardings=(p_shard, tok_shard, c_shard, rep),
+        out_shardings=(rep, c_shard),
+        model=model,
+        donate_argnums=(2,),
+    )

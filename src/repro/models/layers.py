@@ -1,0 +1,198 @@
+"""Parameter-spec system and elementary layers (pure-function style).
+
+Parameters are plain nested-dict pytrees.  Every leaf is described by a
+:class:`Spec` carrying shape, *logical* sharding axes, and an initializer;
+``init_params`` materializes them and ``spec_tree -> PartitionSpec tree``
+happens in ``repro.distributed.sharding`` so the model code never mentions
+mesh axes.
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+
+  ``vocab``    embedding rows            → model
+  ``embed``    the d_model axis          → fsdp (pod×data) for big archs
+  ``heads``    attention heads           → model
+  ``q_heads``  query heads (GQA)         → model
+  ``mlp``      FFN hidden                → model
+  ``experts``  MoE expert axis           → model  (expert parallelism)
+  ``layers``   scan-stacked layer axis   → (never sharded)
+  ``kv_lora``, ``conv``, ``state`` …     → replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Spec", "init_params", "spec_shapes", "stack_specs", "param_bytes",
+    "rms_norm", "layer_norm", "linear", "embed_lookup",
+    "rope_freqs", "apply_rope", "gelu_mlp", "swiglu_mlp",
+    "ACT_FNS",
+]
+
+
+# ==========================================================================
+# Param specs
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical sharding axes, len == ndim
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # stddev for "normal"; default fan-in
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+    def initializer(self) -> Callable[[jax.Array], jax.Array]:
+        if self.init == "zeros":
+            return lambda key: jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return lambda key: jnp.ones(self.shape, self.dtype)
+        if self.init == "normal":
+            if self.scale is not None:
+                std = self.scale
+            else:
+                # fan-in over all but the last axis
+                fan_in = max(1, math.prod(self.shape[:-1]))
+                std = fan_in ** -0.5
+            return lambda key: (
+                jax.random.normal(key, self.shape, jnp.float32) * std
+            ).astype(self.dtype)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materializes a Spec pytree into parameter arrays (unique keys/leaf)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [s.initializer()(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def spec_shapes(spec_tree, dtype=None):
+    """Spec pytree -> ShapeDtypeStruct pytree (for dry-run lowering)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Adds a leading ``layers`` axis of length ``n`` to every Spec —
+    the parameter layout consumed by ``lax.scan`` over a layer run."""
+    def f(s: Spec) -> Spec:
+        return dataclasses.replace(
+            s, shape=(n, *s.shape), axes=("layers", *s.axes))
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+# ==========================================================================
+# Elementary ops (compute in bf16-ish, norms/softmax in fp32)
+# ==========================================================================
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm.  ``plus_one=True`` uses the Gemma convention ``(1 + w)`` with
+    zero-initialized weight."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    out = out * (1.0 + w) if plus_one else out * w
+    return out.astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def linear(x, w, b=None, *, compute_dtype=None):
+    """x @ w (+ b); w may be rank-2 [in, out] or rank-3 [in, heads, hd]."""
+    dt = compute_dtype or x.dtype
+    w = w.astype(dt)
+    if w.ndim == 2:
+        out = jnp.einsum("...d,df->...f", x.astype(dt), w)
+    elif w.ndim == 3:
+        out = jnp.einsum("...d,dhf->...hf", x.astype(dt), w)
+    else:
+        raise ValueError(f"linear weight rank {w.ndim}")
+    if b is not None:
+        out = out + b.astype(dt)
+    return out
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, compute_dtype=jnp.bfloat16):
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+ACT_FNS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def gelu_mlp(params, x, act="gelu"):
+    """Non-gated MLP: act(x W_in + b) W_out + b (StarCoder2/Granite style)."""
+    h = linear(x, params["w_in"], params.get("b_in"))
+    h = ACT_FNS[act](h)
+    return linear(h, params["w_out"], params.get("b_out"))
+
+
+def swiglu_mlp(params, x, act="silu"):
+    """Gated MLP: (act(x W_gate) * (x W_up)) W_down (Llama/Qwen style)."""
+    g = ACT_FNS[act](linear(x, params["w_gate"]))
+    u = linear(x, params["w_up"])
+    return linear(g * u, params["w_down"])
+
+
+# ==========================================================================
+# Rotary position embeddings
+# ==========================================================================
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    """Inverse frequencies [head_dim // 2] (fp32)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               freqs: Optional[jax.Array] = None) -> jax.Array:
+    """Rotates pairs (split-half convention).  x: [..., S, D], positions: [S]
+    or broadcastable to x's token axis."""
+    D = x.shape[-1]
+    if freqs is None:
+        freqs = rope_freqs(D, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [S, D/2]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with an AsymKV-quantized
+latent cache.
+
+Cache layout (absorbed decode form): one store per token of width
+``rope_head_dim + kv_lora_rank`` — ``[k_rope ‖ c_kv]`` — with ``kv_heads=1``.
+Scores use the whole row (``q_cat = [q_rope ‖ q_nope·W_uk]``); values are the
+``c_kv`` slice (``v_slice_offset = rope_head_dim`` in :class:`LayerKVCache`).
+The latent feeds the *score* path, so AsymKV's **key** policy governs its
+bit width (DESIGN.md §Arch-applicability).
+
+Train/prefill run the naive (non-absorbed) form — materialize K/V per head —
+which is matmul-optimal for long sequences; decode runs the absorbed form,
+which is what makes the tiny latent cache the only thing read per step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention_quant import decode_attend, flash_prefill
+from repro.core.kvcache import LayerKVCache
+from repro.models.layers import Spec, apply_rope, linear, rms_norm
+
+__all__ = ["mla_specs", "mla_fwd", "init_mla_cache"]
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = cfg.mla
+    H = cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    return {
+        "w_dq": Spec((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": Spec((m.q_lora_rank,), (None,), init="ones"),
+        "w_uq": Spec((m.q_lora_rank, H, qk), (None, "heads", None)),
+        # joint kv down-projection: [c_kv ‖ k_rope]
+        "w_dkv": Spec((d, m.kv_lora_rank + m.rope_head_dim), ("embed", None)),
+        "kv_norm": Spec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": Spec((m.kv_lora_rank, H, m.nope_head_dim),
+                     (None, "heads", None)),
+        "w_uv": Spec((m.kv_lora_rank, H, m.v_head_dim),
+                     (None, "heads", None)),
+        "wo": Spec((H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def init_mla_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_tokens: int,
+    k_bits: int,
+    v_bits: int,  # unused — the latent is score-path, K policy governs
+    *,
+    group: int = 32,
+    residual: int = 128,
+    dtype=jnp.bfloat16,
+) -> LayerKVCache:
+    m = cfg.mla
+    width = m.rope_head_dim + m.kv_lora_rank
+    return LayerKVCache.init(
+        batch, 1, width, max_tokens,
+        k_bits=k_bits, v_bits=0, group=group, residual=residual,
+        dtype=dtype, v_slice_offset=m.rope_head_dim)
+
+
+def _project(params, x, cfg: ModelConfig, positions):
+    """Shared q / latent projections.  Returns (q_nope, q_rope, c_kv, k_rope)
+    with shapes [B,S,H,·], [B,S,H,rope], [B,S,kv_lora], [B,S,rope]."""
+    m = cfg.mla
+    cq = rms_norm(linear(x, params["w_dq"]), params["q_norm"], cfg.norm_eps)
+    q = linear(cq, params["w_uq"])  # [B,S,H,nope+rope]
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions,
+                        cfg.rope_theta).swapaxes(1, 2)
+
+    ckv_full = linear(x, params["w_dkv"])  # [B,S,kv_lora+rope]
+    c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], params["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., m.kv_lora_rank:], positions,
+                        cfg.rope_theta)  # [B,S,rope] shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_fwd(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache: Optional[LayerKVCache] = None,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    decode_block: int = 1024,
+    seqpar_axes: Optional[tuple] = None,
+    seqpar_min: int = 1 << 62,
+):
+    """Returns (out [B,S,d], updated cache or None)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    sm_scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _project(params, x, cfg, positions)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        # Latent row [k_rope ‖ c_kv]; kv_heads axis = 1.
+        row = jnp.concatenate([k_rope, c_kv], axis=-1)[:, None]  # [B,1,S,W]
+        cache = cache.append(row)
+        # Absorb W_uk into the query: q_abs = q_nope · W_uk → latent space,
+        # so scores against the cached row equal [q_rope·k_rope + q_nope·k_nope].
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope,
+                           params["w_uk"].astype(q_nope.dtype))
+        q_cat = jnp.concatenate([q_rope, q_abs], axis=-1)  # [B,S,H,rope+lora]
+        if seqpar_axes and cache.max_tokens >= seqpar_min:
+            from repro.core.seqpar import decode_attend_seqpar
+            out_latent = decode_attend_seqpar(
+                q_cat.swapaxes(1, 2), cache, axes=seqpar_axes,
+                scale=sm_scale, block=decode_block)
+        else:
+            out_latent = decode_attend(q_cat.swapaxes(1, 2), cache,
+                                       scale=sm_scale, block=decode_block)
+        out_latent = out_latent.swapaxes(1, 2)  # [B,S,H,kv_lora]
+        # Absorb W_uv on the way out.
+        out = jnp.einsum("bshl,lhv->bshv", out_latent,
+                         params["w_uv"].astype(out_latent.dtype))
+    else:
+        # Naive form: materialize per-head K/V — with the head axis pinned
+        # to the model shards (XLA otherwise replicates the up-projected
+        # heads because the latent they come from is replicated: 6.4 GB/dev
+        # f32 buffers + all-gathers in the bwd, found via dry-run buffer
+        # dump; see EXPERIMENTS.md §Perf).
+        from repro.distributed.context import constrain_axis
+        k_nope = constrain_axis(linear(c_kv, params["w_uk"]), 2)
+        v = constrain_axis(linear(c_kv, params["w_uv"]), 2)  # [B,S,H,vdim]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                      (B, S, H, m.rope_head_dim))], axis=-1)
+        k = constrain_axis(k, 2)
+        q = constrain_axis(
+            jnp.concatenate([q_nope, q_rope], axis=-1), 2)
+        out = flash_prefill(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                            v.swapaxes(1, 2), causal=True, scale=sm_scale,
+                            q_block=q_block, kv_block=kv_block)
+        out = constrain_axis(out, 1)  # [B, H, S, vdim] — heads on model
+        out = out.swapaxes(1, 2)  # [B,S,H,vdim]
+        if mode == "prefill":
+            assert cache is not None
+            row = jnp.concatenate([k_rope, c_kv], axis=-1)[:, None]
+            cache = cache.prefill(row)
+
+    o = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(out.dtype))
+    return o, cache

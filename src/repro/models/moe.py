@@ -1,0 +1,233 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeek-MoE family).
+
+Two implementations behind one interface:
+
+* ``reference`` — every token through every expert, masked combine.  O(E/k)
+  overcompute; used as the correctness oracle and for CPU smoke tests.
+* ``shard_map`` — production expert parallelism: tokens are *sequence-sharded*
+  over the EP axis on entry, routed locally (softmax → top-k → renormalize),
+  sort-dispatched into fixed-capacity per-expert buffers, exchanged with
+  ``all_to_all``, run through the local expert shard as grouped GEMMs, and
+  combined back with a second ``all_to_all``.  Capacity overflow drops
+  (GShard-style), deterministically by routing order.
+
+Shared (always-on) experts are a plain gated MLP over all tokens, sharded
+over the model axis like any FFN.  Router runs in fp32; an auxiliary
+load-balance loss (Switch-style ``E · Σ f_e·P_e``) is returned for training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import current_mesh_context
+from repro.models.layers import ACT_FNS, Spec, linear
+
+__all__ = ["moe_specs", "moe_fwd", "moe_fwd_reference"]
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    # Expert weights shard over (experts → model) × (d_expert → data when
+    # fsdp).  Sharding the FFN-hidden axis (not d_model) means the EP body
+    # never gathers weights: wg/wu contract d locally, wd's partial outputs
+    # reduce with ONE small activation psum over the data axes — 8×+ less
+    # collective traffic than gathering FSDP shards per layer (measured on
+    # deepseek-v2-236b decode_32k, see EXPERIMENTS.md §Perf).
+    specs = {
+        "router": Spec((d, m.n_experts), ("embed", "experts"),
+                       dtype=jnp.float32),
+        "wg": Spec((m.n_experts, d, m.d_expert),
+                   ("experts", None, "expert_ff")),
+        "wu": Spec((m.n_experts, d, m.d_expert),
+                   ("experts", None, "expert_ff")),
+        "wd": Spec((m.n_experts, m.d_expert, d),
+                   ("experts", "expert_ff", None)),
+    }
+    if m.n_shared:
+        f = m.n_shared * m.d_expert
+        specs |= {
+            "shared_wg": Spec((d, f), ("embed", "mlp")),
+            "shared_wu": Spec((d, f), ("embed", "mlp")),
+            "shared_wd": Spec((f, d), ("mlp", "embed")),
+        }
+    return specs
+
+
+def _route(xf: jax.Array, router_w: jax.Array, top_k: int):
+    """Returns (gates [T,k], expert_idx [T,k], probs [T,E]) — fp32 router."""
+    logits = xf.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, eidx, probs
+
+
+def _aux_loss(probs: jax.Array, eidx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss over the local token shard."""
+    T = probs.shape[0]
+    onehot = jax.nn.one_hot(eidx, n_experts, dtype=jnp.float32)  # [T,k,E]
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # dispatch fraction [E]
+    p = jnp.mean(probs, axis=0)                    # mean router prob [E]
+    return n_experts * jnp.sum(f * p)
+
+
+def _expert_ffn(x: jax.Array, wg, wu, wd, act: str) -> jax.Array:
+    """Grouped gated FFN: x [E, C, d], weights [E, d, f] / [E, f, d]."""
+    dt = x.dtype
+    g = ACT_FNS[act](jnp.einsum("ecd,edf->ecf", x, wg.astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", x, wu.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", g * u, wd.astype(dt))
+
+
+def moe_fwd_reference(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Oracle: dense compute of all experts, masked combine.  x: [B,S,d]."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    gates, eidx, probs = _route(xf, params["router"], m.top_k)
+    # combine weights [T, E]
+    comb = jnp.zeros((B * S, m.n_experts), jnp.float32)
+    comb = comb.at[jnp.arange(B * S)[:, None], eidx].add(gates)
+    # [E, T, d] expert outputs (dense — O(E/k) overcompute, oracle only)
+    xe = jnp.broadcast_to(xf[None], (m.n_experts, B * S, d))
+    he = _expert_ffn(xe, params["wg"], params["wu"], params["wd"], cfg.act)
+    out = jnp.einsum("etd,te->td", he.astype(jnp.float32), comb)
+    out = out.astype(x.dtype)
+    if m.n_shared:
+        g = ACT_FNS[cfg.act](linear(xf, params["shared_wg"]))
+        u = linear(xf, params["shared_wu"])
+        out = out + linear(g * u, params["shared_wd"])
+    aux = _aux_loss(probs, eidx, m.n_experts)
+    return out.reshape(B, S, d), aux
+
+
+def _moe_local(xf, router_w, wg, wu, wd, *, cfg: ModelConfig, ep_axis: str,
+               ep_size: int, capacity: int, ff_axes: tuple = ()):
+    """Per-device body inside shard_map.  xf: [T_loc, d] local tokens;
+    wg/wu [E_loc, d, f_loc], wd [E_loc, f_loc, d] — the FFN-hidden axis is
+    manual-sharded over ``ff_axes``; wd's partial products psum there."""
+    m = cfg.moe
+    T, d = xf.shape
+    k = m.top_k
+    E = m.n_experts
+    E_loc = E // ep_size
+    C = capacity
+
+    gates, eidx, probs = _route(xf, router_w, k)
+    aux = _aux_loss(probs, eidx, E)
+
+    # ---- sort-based dispatch into [E, C, d] send buffer -------------------
+    slot_e = eidx.reshape(-1)                      # [T*k]
+    order = jnp.argsort(slot_e)                    # stable
+    sorted_e = slot_e[order]
+    counts = jnp.bincount(slot_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < C
+    rank_c = jnp.where(keep, rank, C - 1)
+    src_tok = order // k                           # token of each slot
+
+    send = jnp.zeros((E, C, d), xf.dtype)
+    vals = xf[src_tok] * keep[:, None].astype(xf.dtype)
+    send = send.at[sorted_e, rank_c].add(vals)
+
+    # ---- exchange: [ep·E_loc, C, d] → [E_loc, ep·C, d] --------------------
+    recv = lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=1,
+                          tiled=True)
+
+    dt = recv.dtype
+    g = ACT_FNS[cfg.act](jnp.einsum("ecd,edf->ecf", recv, wg.astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", recv, wu.astype(dt))
+    h = jnp.einsum("ecf,efd->ecd", g * u, wd.astype(dt))
+    for a in ff_axes:  # reduce wd's partial products over the hidden shards
+        h = lax.psum(h, a)
+
+    back = lax.all_to_all(h, ep_axis, split_axis=1, concat_axis=0,
+                          tiled=True)              # [E, C, d]
+
+    # ---- combine ----------------------------------------------------------
+    gate_sorted = gates.reshape(-1)[order]
+    picked = back[sorted_e, rank_c] * (gate_sorted * keep)[:, None].astype(xf.dtype)
+    out = jnp.zeros((T, d), xf.dtype).at[src_tok].add(picked)
+    # aux is per-shard; average across everything for a global scalar
+    aux = lax.pmean(aux, ep_axis)
+    return out, aux
+
+
+def moe_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
+            seq_shard: bool = True):
+    """Production MoE forward.  x: [B, S, d] (batch sharded over data axes).
+
+    ``seq_shard=True`` additionally shards the token axis over the EP/model
+    axis inside the block (Megatron-style sequence parallelism) so routing
+    work and dispatch buffers scale 1/ep_size; decode (S=1) sets it False.
+    """
+    ctx = current_mesh_context()
+    impl = cfg.moe_impl
+    if impl == "auto":
+        impl = "shard_map" if (ctx and ctx.model_axis) else "reference"
+    if impl == "reference" or ctx is None or ctx.model_axis is None:
+        return moe_fwd_reference(params, x, cfg)
+
+    m = cfg.moe
+    mesh = ctx.mesh
+    ep_axis = ctx.model_axis
+    ep_size = mesh.shape[ep_axis]
+    if m.n_experts % ep_size:
+        return moe_fwd_reference(params, x, cfg)
+
+    B, S, d = x.shape
+    dp = tuple(ctx.batch_axes)
+    seq_shard = seq_shard and (S % ep_size == 0) and S >= ep_size
+    x_spec = P(dp, ep_axis if seq_shard else None, None)
+
+    # FFN-hidden sharding of expert weights (matches moe_specs/"expert_ff"):
+    # engaged when fsdp shards d_expert over the data axes.
+    ff_axes: tuple = ()
+    if cfg.fsdp:
+        prod = 1
+        fit = []
+        for a in dp:
+            if m.d_expert % (prod * mesh.shape[a]) == 0:
+                fit.append(a)
+                prod *= mesh.shape[a]
+        ff_axes = tuple(fit)
+    ff = (ff_axes if len(ff_axes) > 1 else
+          (ff_axes[0] if ff_axes else None))
+
+    # local token count (static): batch/dp × seq/(ep if seq_shard)
+    T_loc = (B // max(1, ctx.dp_size)) * (S // (ep_size if seq_shard else 1))
+    cap = max(1, math.ceil(T_loc * m.top_k * m.capacity_factor / m.n_experts))
+    cap = -(-cap // 4) * 4  # ×4 alignment
+
+    def body(xb, router_w, wg, wu, wd):
+        xf = xb.reshape(-1, d)
+        out, aux = _moe_local(
+            xf, router_w, wg, wu, wd, cfg=cfg, ep_axis=ep_axis,
+            ep_size=ep_size, capacity=cap, ff_axes=ff_axes)
+        for a in dp:
+            aux = lax.pmean(aux, a)
+        return out.reshape(xb.shape), aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P(ep_axis, None, ff),
+                  P(ep_axis, None, ff), P(ep_axis, ff, None)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, params["router"], params["wg"], params["wu"], params["wd"])
+
+    if m.n_shared:
+        g = ACT_FNS[cfg.act](linear(x, params["shared_wg"]))
+        u = linear(x, params["shared_wu"])
+        out = out + linear(g * u, params["shared_wd"])
+    return out, aux

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked dual-form forward for train/prefill (matmul-dominated → MXU
+friendly) and an O(1)-state decode step.  There is **no KV cache** — decode
+carries a fixed-size ``(conv_state, ssm_state)`` pair, which is why AsymKV
+is inapplicable to pure-SSM layers (DESIGN.md §Arch-applicability).
+
+Recurrence (per head h, head dim P, state dim N):
+    h_t = exp(Δ_t·A_h)·h_{t-1} + Δ_t·(x_t ⊗ B_t)        y_t = C_t·h_t + D_h·x_t
+
+Chunk algebra (chunk length Q, cumulative a_q = Σ_{i≤q} Δ_i A):
+    intra:  Y[i] += Σ_{j≤i} (C_i·B_j)·exp(a_i − a_j)·Δ_j · x_j
+    inter:  Y[i] += exp(a_i)·(C_i · h_in)
+    carry:  h_out = exp(a_Q)·h_in + Σ_j exp(a_Q − a_j)·Δ_j·(x_j ⊗ B_j)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, linear, rms_norm
+
+__all__ = ["ssm_specs", "SSMState", "init_ssm_state", "mamba2_fwd",
+           "mamba2_decode_step"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SSMState:
+    """Decode-time carry: last conv taps + SSM state."""
+    conv: jax.Array  # [B, d_conv, conv_channels] (ring of raw inputs)
+    h: jax.Array     # [B, H, P, N] fp32
+
+    def tree_flatten(self):
+        return (self.conv, self.h), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, H, conv_ch
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    s, d_in, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H  # z,x,B,C,dt
+    return {
+        "w_in": Spec((d, proj_out), ("embed", "mlp")),
+        "conv_w": Spec((s.d_conv, conv_ch), (None, "mlp"), scale=0.2),
+        "conv_b": Spec((conv_ch,), ("mlp",), init="zeros"),
+        "A_log": Spec((H,), (None,), init="zeros"),
+        "D": Spec((H,), (None,), init="ones"),
+        "dt_bias": Spec((H,), (None,), init="zeros"),
+        "out_norm": Spec((d_in,), ("mlp",), init="ones"),
+        "w_out": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    s, d_in, H, conv_ch = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv, conv_ch), dtype),
+        h=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    s, d_in, H, conv_ch = _dims(cfg)
+    zxbcdt = linear(x, params["w_in"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: d_in + conv_ch]
+    dt = zxbcdt[..., d_in + conv_ch:]
+    return z, xbc, dt  # dt: [..., H]
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 init_taps: Optional[jax.Array] = None):
+    """Depthwise causal conv1d over the token axis.  xbc: [B, L, C];
+    w: [K, C].  ``init_taps`` [B, K-1, C] prepends decode/chunk history."""
+    K = w.shape[0]
+    pad = init_taps if init_taps is not None else jnp.zeros(
+        (xbc.shape[0], K - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, L+K-1, C]
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(K))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def mamba2_fwd(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[SSMState] = None,
+    return_state: bool = False,
+):
+    """Chunked SSD forward.  x: [B, L, d].  Returns (out, new_state|None)."""
+    s, d_in, H, conv_ch = _dims(cfg)
+    B, L, _ = x.shape
+    P, N, G = s.head_dim, s.d_state, s.n_groups
+    Q = min(s.chunk, L)
+    assert L % Q == 0, f"seq {L} % chunk {Q}"
+    nc = L // Q
+
+    z, xbc, dt = _split_proj(params, x, cfg)
+    conv_init = state.conv[:, 1:] if state is not None else None
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_init)
+    # Pin the SSM head axis to the model shards: the intra-chunk matrices
+    # (M, L ∈ [B, H, Q, Q] fp32) are derived per-head, and the group→head
+    # broadcast (n_groups=1) otherwise makes XLA replicate them — 17 TB/step
+    # of phantom traffic on zamba2 train_4k (EXPERIMENTS.md §Perf).
+    from repro.distributed.context import constrain_axis
+    xin = constrain_axis(xbc[..., :d_in].reshape(B, L, H, P), 2)
+    Bm = xbc[..., d_in: d_in + G * N].reshape(B, L, G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(B, L, G, N)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,L,H]
+    dt = constrain_axis(dt, 2)
+
+    # chunked views
+    xin_c = xin.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, G, N)
+    C_c = Cm.reshape(B, nc, Q, G, N)
+    dt_c = dt.reshape(B, nc, Q, H)
+    dA_c = dt_c * A  # [B,nc,Q,H]
+    acum = jnp.cumsum(dA_c, axis=2)  # a_q within chunk
+
+    rep = H // G  # heads per B/C group
+
+    def chunk_body(h, inputs):
+        xq, Bq, Cq, dtq, aq = inputs  # [B,Q,...]
+        a_tot = aq[:, -1]  # [B,H]
+        # intra-chunk: M[i,j] = (C_i·B_j)·exp(a_i−a_j)·Δ_j (i≥j)
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cq, Bq,
+                        preferred_element_type=jnp.float32)  # [B,G,Q,Q]
+        CB = jnp.repeat(CB, rep, axis=1)  # [B,H,Q,Q]
+        seg = aq.transpose(0, 2, 1)  # [B,H,Q]
+        ldecay = seg[:, :, :, None] - seg[:, :, None, :]  # a_i − a_j
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(causal, jnp.exp(ldecay), 0.0)
+        M = CB * Lmat * dtq.transpose(0, 2, 1)[:, :, None, :]  # ·Δ_j
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", M, xq.astype(jnp.float32))
+        # inter-chunk: exp(a_i)·C_i·h_in
+        Crep = jnp.repeat(Cq, rep, axis=2)  # [B,Q,H,N]
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Crep.astype(jnp.float32), h)
+        y_inter = y_inter * jnp.exp(seg).transpose(0, 2, 1)[..., None]
+        # carry
+        decay_out = jnp.exp(a_tot[:, None] - aq) * dtq  # [B,Q,H]
+        Brep = jnp.repeat(Bq, rep, axis=2)  # [B,Q,H,N]
+        dh = jnp.einsum("bqhp,bqhn->bhpn",
+                        xq.astype(jnp.float32) * decay_out[..., None],
+                        Brep.astype(jnp.float32))
+        h_new = jnp.exp(a_tot)[:, :, None, None] * h + dh
+        return h_new, (y_intra + y_inter)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+    h0 = constrain_axis(h0, 1)
+    xs = (xin_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3, 4),
+          C_c.transpose(1, 0, 2, 3, 4), dt_c.transpose(1, 0, 2, 3),
+          acum.transpose(1, 0, 2, 3))
+    h_fin, ys = lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, P)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+
+    # gated RMSNorm, then out-projection
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = linear(y, params["w_out"])
+
+    new_state = None
+    if return_state:
+        # conv ring: last d_conv raw (pre-conv) inputs
+        zf, xbc_raw, dtf = _split_proj(params, x, cfg)
+        taps = xbc_raw[:, -s.d_conv:]
+        if L < s.d_conv:
+            prev = (state.conv if state is not None else
+                    jnp.zeros((B, s.d_conv, conv_ch), x.dtype))
+            taps = jnp.concatenate([prev, xbc_raw], axis=1)[:, -s.d_conv:]
+        new_state = SSMState(conv=taps.astype(x.dtype), h=h_fin)
+    return out, new_state
+
+
+def mamba2_decode_step(params: dict, x: jax.Array, cfg: ModelConfig,
+                       state: SSMState):
+    """Single-token step.  x: [B, 1, d] → (out [B,1,d], new state)."""
+    s, d_in, H, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    P, N, G = s.head_dim, s.d_state, s.n_groups
+    rep = H // G
+
+    z, xbc_raw, dt = _split_proj(params, x, cfg)
+    conv = jnp.concatenate([state.conv[:, 1:], xbc_raw.astype(state.conv.dtype)],
+                           axis=1)  # [B, d_conv, CC]
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32))[:, None]  # [B,1,CC]
+    xin = xbc[..., :d_in].reshape(B, H, P)
+    Bm = xbc[..., d_in: d_in + G * N].reshape(B, G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(B, G, N)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    decay = jnp.exp(dtv * A)  # [B,H]
+    Brep = jnp.repeat(Bm, rep, axis=1)  # [B,H,N]
+    Crep = jnp.repeat(Cm, rep, axis=1)
+    h = (decay[:, :, None, None] * state.h
+         + (dtv[..., None] * xin.astype(jnp.float32))[..., None]
+         * Brep[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Crep.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = linear(y, params["w_out"])
+    return out, SSMState(conv=conv, h=h)

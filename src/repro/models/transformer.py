@@ -1,0 +1,644 @@
+"""Model composition: layer patterns → scan runs → train/prefill/decode.
+
+A model is a *pattern* string (one code per layer) compiled into **runs** of
+consecutive identical layer kinds; each run's parameters are stacked along a
+leading ``layers`` axis and executed with ``lax.scan`` (optionally
+``jax.checkpoint``-ed per layer) so HLO size stays O(#runs), not O(#layers).
+
+Layer kinds::
+
+  A  attention + MLP            (dense archs; also MoE archs' dense layers)
+  E  attention + MoE FFN
+  M  Mamba-2 mixer (no KV cache)
+  L  local (sliding-window) attention + MLP   (Gemma3)
+  G  global attention + MLP                    (Gemma3)
+  Z  *shared* attention + MLP (Zamba2 — one param set, per-application cache)
+
+For serving, each run is split into **stages** wherever the AsymKV policy
+changes ``(k_bits, v_bits)`` — caches are stacked per stage while parameters
+stay stacked per run (stages statically slice the run's param stack).
+Encoder-decoder models add a cross-attention sublayer per decoder block whose
+(quantized) cache is filled once at prefill from the encoder output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.asymkv import AsymKVPolicy
+from repro.core.attention_quant import decode_attend, flash_prefill
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Spec, embed_lookup, gelu_mlp, init_params, layer_norm, linear, rms_norm,
+    stack_specs, swiglu_mlp,
+)
+
+__all__ = ["Run", "Stage", "Model", "compute_runs"]
+
+ATTN_KINDS = ("A", "E", "L", "G", "Z")
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    kind: str
+    start: int        # pattern index of first layer
+    count: int
+    cache_start: int  # index into cache-layer numbering (-1 for M runs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """A policy-uniform slice of a run (local layer offsets [lo, hi))."""
+    lo: int
+    hi: int
+    k_bits: int
+    v_bits: int
+
+
+def compute_runs(pattern: str) -> list[Run]:
+    runs: list[Run] = []
+    cache_idx = 0
+    i = 0
+    while i < len(pattern):
+        j = i
+        while j < len(pattern) and pattern[j] == pattern[i]:
+            j += 1
+        kind = pattern[i]
+        cs = cache_idx if kind != "M" else -1
+        runs.append(Run(kind, i, j - i, cs))
+        if kind != "M":
+            cache_idx += j - i
+        i = j
+    return runs
+
+
+def _norm_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return {"w": Spec((d,), (None,), init="ones"),
+                "b": Spec((d,), (None,), init="zeros")}
+    init = "zeros" if cfg.norm_plus_one else "ones"
+    return {"w": Spec((d,), (None,), init=init)}
+
+
+def _apply_norm(cfg: ModelConfig, p: dict, x):
+    if cfg.norm_kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+def _mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": Spec((d, f), ("embed", "mlp")),
+            "w_up": Spec((d, f), ("embed", "mlp")),
+            "w_down": Spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_in": Spec((d, f), ("embed", "mlp")),
+        "b_in": Spec((f,), ("mlp",), init="zeros"),
+        "w_out": Spec((f, d), ("mlp", "embed")),
+        "b_out": Spec((d,), (None,), init="zeros"),
+    }
+
+
+def _apply_mlp(cfg: ModelConfig, p: dict, x):
+    if cfg.mlp_kind == "swiglu":
+        return swiglu_mlp(p, x, cfg.act)
+    return gelu_mlp(p, x, cfg.act)
+
+
+def cross_attention_fwd(params, x, cfg: ModelConfig, *, mode, enc_out,
+                        cache):
+    """Cross attention (no RoPE).  Keys/values come from the encoder output
+    (train/prefill) or from the prefilled quantized cross cache (decode)."""
+    q = linear(x, params["wq"], params.get("bq")).swapaxes(1, 2)  # [B,H,S,hd]
+    if mode == "decode":
+        out = decode_attend(q, cache)
+    else:
+        k = linear(enc_out, params["wk"], params.get("bk")).swapaxes(1, 2)
+        v = linear(enc_out, params["wv"], params.get("bv")).swapaxes(1, 2)
+        out = flash_prefill(q, k, v, causal=False)
+        if mode == "prefill":
+            cache = cache.prefill(k, v)
+    o = jnp.einsum("bhsd,hdf->bsf", out, params["wo"].astype(out.dtype))
+    return o, cache
+
+
+class Model:
+    """Decoder-only (or encoder-decoder) LM built from a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig,
+                 policy: Optional[AsymKVPolicy] = None,
+                 group: int = 32, residual: int = 128,
+                 enc_len_hint: int = 4096,
+                 act_pspec=None):
+        self.cfg = cfg
+        self.runs = compute_runs(cfg.pattern)
+        self.policy = policy or AsymKVPolicy.float_cache(cfg.n_cache_layers)
+        assert self.policy.n_layers == cfg.n_cache_layers, (
+            f"policy layers {self.policy.n_layers} != cache layers "
+            f"{cfg.n_cache_layers} for {cfg.name}")
+        self.group = group
+        self.residual = residual
+        self._enc_len_hint = enc_len_hint
+        self._is_encoder_build = False
+        # Megatron-style sequence sharding of the residual stream between
+        # blocks: with per-layer remat the scan carries are the dominant
+        # training memory term; constraining them to (dp, model, None)
+        # divides stored activations by the model-axis size.
+        self.act_pspec = act_pspec
+        # Sequence-parallel decode (FlashDecoding split-K) for caches of at
+        # least seqpar_min_tokens — the long_500k path.
+        self.seqpar_axes: Optional[tuple] = None
+        self.seqpar_min_tokens: int = 1 << 62
+        self.spec = self._param_specs()
+
+    def _constrain(self, x):
+        if self.act_pspec is None:
+            return x
+        try:
+            return lax.with_sharding_constraint(x, self.act_pspec)
+        except (ValueError, RuntimeError):
+            return x  # no mesh context / incompatible — leave unconstrained
+
+    # ------------------------------------------------------------ params
+
+    def _block_specs(self, kind: str) -> dict:
+        cfg = self.cfg
+        if kind == "M":
+            return {"norm": _norm_spec(cfg), "mixer": ssm_mod.ssm_specs(cfg)}
+        attn = (mla_mod.mla_specs(cfg) if cfg.mla
+                else attn_mod.attention_specs(cfg))
+        block = {"norm1": _norm_spec(cfg), "attn": attn,
+                 "norm2": _norm_spec(cfg)}
+        if cfg.sandwich_norm:
+            block |= {"post_attn_norm": _norm_spec(cfg),
+                      "post_mlp_norm": _norm_spec(cfg)}
+        if kind == "E":
+            block["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            d_ff = cfg.d_ff
+            if cfg.moe and kind == "A":  # MoE archs' dense layers
+                d_ff = cfg.moe.dense_ff or cfg.d_ff
+            block["mlp"] = _mlp_specs(cfg, d_ff)
+        if cfg.is_encdec and not self._is_encoder_build:
+            block["cross_attn"] = attn_mod.attention_specs(cfg)
+            block["norm_cross"] = _norm_spec(cfg)
+        return block
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so the vocab axis shards over
+        any model-axis size (Megatron-style; 256206 → 256256 etc.).  Padded
+        logits are masked to −inf in the loss and sliced off at serving."""
+        return -(-self.cfg.vocab // 256) * 256
+
+    def _param_specs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        Vp = self.vocab_padded
+        specs: dict[str, Any] = {
+            "embed": Spec((Vp, d), ("vocab", "embed"), scale=1.0),
+            "final_norm": _norm_spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = Spec((d, Vp), ("embed", "vocab"))
+        for i, run in enumerate(self.runs):
+            if run.kind == "Z":
+                continue  # shared params live under "shared_z"
+            specs[f"run{i}"] = stack_specs(self._block_specs(run.kind),
+                                           run.count)
+        if "Z" in cfg.pattern:
+            specs["shared_z"] = self._block_specs("Z")
+        if cfg.frontend and cfg.frontend.kind == "vision":
+            fe_d = cfg.frontend.embed_dim or d
+            specs["mm_projector"] = Spec((fe_d, d), (None, "embed"))
+        if cfg.is_encdec:
+            self._is_encoder_build = True
+            enc_block = self._block_specs("A")
+            self._is_encoder_build = False
+            specs["encoder"] = {
+                "blocks": stack_specs(enc_block, cfg.encoder_layers),
+                "final_norm": _norm_spec(cfg),
+            }
+            fe_d = (cfg.frontend.embed_dim or d) if cfg.frontend else d
+            specs["enc_projector"] = Spec((fe_d, d), (None, "embed"))
+        return specs
+
+    def init(self, key: jax.Array):
+        return init_params(self.spec, key)
+
+    # ------------------------------------------------------------ caches
+
+    def run_stages(self, run: Run) -> list[Stage]:
+        """Split a run into policy-uniform stages (local offsets)."""
+        if run.kind == "M":
+            return [Stage(0, run.count, 0, 0)]
+        stages: list[Stage] = []
+        for off in range(run.count):
+            kb, vb = self.policy.layer_bits(run.cache_start + off)
+            if stages and (stages[-1].k_bits, stages[-1].v_bits) == (kb, vb):
+                stages[-1] = dataclasses.replace(stages[-1], hi=off + 1)
+            else:
+                stages.append(Stage(off, off + 1, kb, vb))
+        return stages
+
+    def _stack(self, tree, n: int):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)) + 0
+            if hasattr(a, "shape") else a, tree)
+
+    def init_caches(self, batch: int, max_tokens: int,
+                    dtype=jnp.bfloat16) -> dict:
+        """Cache pytree: ``run{i}_stage{j}`` → stacked LayerKVCache (stacked
+        SSMState for M runs; ``…_cross`` entries for encoder-decoder)."""
+        cfg = self.cfg
+        caches: dict[str, Any] = {}
+        for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+                caches[f"run{i}_stage0"] = self._stack(st, run.count)
+                continue
+            window = cfg.window if run.kind == "L" else None
+            for j, stg in enumerate(self.run_stages(run)):
+                n = stg.hi - stg.lo
+                if cfg.mla:
+                    one = mla_mod.init_mla_cache(
+                        cfg, batch, max_tokens, stg.k_bits, stg.v_bits,
+                        group=self.group, residual=self.residual, dtype=dtype)
+                else:
+                    one = attn_mod.init_attn_cache(
+                        cfg, batch, max_tokens, stg.k_bits, stg.v_bits,
+                        group=self.group, residual=self.residual,
+                        window=window, dtype=dtype)
+                caches[f"run{i}_stage{j}"] = self._stack(one, n)
+                if cfg.is_encdec:
+                    cross = attn_mod.init_attn_cache(
+                        cfg, batch, self._enc_len_hint, stg.k_bits,
+                        stg.v_bits, group=self.group,
+                        residual=self.residual, dtype=dtype)
+                    caches[f"run{i}_stage{j}_cross"] = self._stack(cross, n)
+        return caches
+
+    # ------------------------------------------------------------ blocks
+
+    def _attn_block(self, p, x, run: Run, *, mode, positions, cache=None,
+                    cross_cache=None, enc_out=None, aux=None):
+        """One attention block.  Returns (x, cache, cross_cache, aux)."""
+        cfg = self.cfg
+        window = cfg.window if run.kind == "L" else None
+        theta = cfg.rope_theta_local if run.kind == "L" else cfg.rope_theta
+        h = _apply_norm(cfg, p["norm1"], x)
+        if cfg.mla:
+            a_out, cache = mla_mod.mla_fwd(
+                p["attn"], h, cfg, mode=mode, positions=positions,
+                cache=cache, seqpar_axes=self.seqpar_axes,
+                seqpar_min=self.seqpar_min_tokens)
+        else:
+            a_out, cache = attn_mod.attention_fwd(
+                p["attn"], h, cfg, mode=mode, positions=positions,
+                cache=cache, window=window, theta=theta,
+                seqpar_axes=self.seqpar_axes,
+                seqpar_min=self.seqpar_min_tokens)
+        if cfg.sandwich_norm:
+            a_out = _apply_norm(cfg, p["post_attn_norm"], a_out)
+        x = x + a_out
+
+        if "cross_attn" in p:
+            h = _apply_norm(cfg, p["norm_cross"], x)
+            c_out, cross_cache = cross_attention_fwd(
+                p["cross_attn"], h, cfg, mode=mode, enc_out=enc_out,
+                cache=cross_cache)
+            x = x + c_out
+
+        h = _apply_norm(cfg, p["norm2"], x)
+        if run.kind == "E":
+            m_out, a = moe_mod.moe_fwd(p["moe"], h, cfg,
+                                       seq_shard=(mode != "decode"))
+            if aux is not None:
+                aux = aux + a
+        else:
+            m_out = _apply_mlp(cfg, p["mlp"], h)
+        if cfg.sandwich_norm:
+            m_out = _apply_norm(cfg, p["post_mlp_norm"], m_out)
+        x = x + m_out
+        return x, cache, cross_cache, aux
+
+    # ------------------------------------------------------------ forward
+
+    def _embed_inputs(self, params, inputs: dict, dtype) -> jax.Array:
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], inputs["tokens"], dtype)
+        if cfg.norm_plus_one:  # Gemma scales embeddings by sqrt(d)
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+        if cfg.frontend and cfg.frontend.kind == "vision":
+            pe = inputs["patch_embeds"].astype(dtype)
+            pe = linear(pe, params["mm_projector"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _encode(self, params, inputs: dict, dtype) -> jax.Array:
+        cfg = self.cfg
+        fe = inputs["frame_embeds"].astype(dtype)
+        h = linear(fe, params["enc_projector"])
+        positions = jnp.arange(h.shape[1])
+        enc = params["encoder"]
+
+        def body(x, p):
+            hh = _apply_norm(cfg, p["norm1"], x)
+            a_out, _ = attn_mod.attention_fwd(
+                p["attn"], hh, cfg, mode="train", positions=positions)
+            x = x + a_out
+            hh = _apply_norm(cfg, p["norm2"], x)
+            x = x + _apply_mlp(cfg, p["mlp"], hh)
+            return x, None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = lax.scan(fn, h, enc["blocks"])
+        return _apply_norm(cfg, enc["final_norm"], h)
+
+    def forward_train(self, params, inputs: dict):
+        """Full training forward.  Returns (logits [B,S,V], aux dict)."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x, aux = self._backbone_train(params, inputs, dtype)
+        logits = self._lm_head(params, x)
+        return logits, aux
+
+    def _backbone_train(self, params, inputs: dict, dtype):
+        """Embeddings → blocks → final norm.  Returns (x [B,S,d], aux)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, inputs, dtype)
+        positions = jnp.arange(x.shape[1])
+        enc_out = self._encode(params, inputs, dtype) if cfg.is_encdec else None
+
+        aux = jnp.zeros((), jnp.float32)
+        x = self._constrain(x)
+        for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                def mbody(x, p):
+                    h = _apply_norm(cfg, p["norm"], x)
+                    out, _ = ssm_mod.mamba2_fwd(p["mixer"], h, cfg)
+                    return self._constrain(x + out), None
+                fn = jax.checkpoint(mbody) if cfg.remat else mbody
+                x, _ = lax.scan(fn, x, params[f"run{i}"])
+            elif run.kind == "Z":
+                p = params["shared_z"]
+                def zbody(x, aux):
+                    x, _, _, aux = self._attn_block(
+                        p, x, run, mode="train", positions=positions,
+                        enc_out=enc_out, aux=aux)
+                    return self._constrain(x), aux
+                if cfg.remat:
+                    x, aux = jax.checkpoint(zbody)(x, aux)
+                else:
+                    x, aux = zbody(x, aux)
+            else:
+                def body(carry, p, run=run):
+                    x, aux = carry
+                    x, _, _, aux = self._attn_block(
+                        p, x, run, mode="train", positions=positions,
+                        enc_out=enc_out, aux=aux)
+                    return (self._constrain(x), aux), None
+                fn = jax.checkpoint(body) if cfg.remat else body
+                (x, aux), _ = lax.scan(fn, (x, aux), params[f"run{i}"])
+
+        x = _apply_norm(cfg, params["final_norm"], x)
+        return x, {"moe_aux": aux}
+
+    def _lm_head(self, params, x):
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = linear(x, w).astype(jnp.float32)
+        if self.vocab_padded != cfg.vocab:
+            logits = logits[..., : cfg.vocab]
+        return logits
+
+    # Vocab sizes above this use the chunked CE (never materializes the
+    # full [B, S, V] logits — the dominant training-memory term for the
+    # 100k–262k-vocab archs).
+    BIG_VOCAB = 32768
+    LOSS_SEQ_CHUNK = 256
+
+    def _chunked_lse_ll(self, params, x, labels):
+        """Online (logsumexp, label-logit) over sequence chunks.
+
+        Scans S in chunks with a rematerialized body: per chunk, logits
+        [B, Sc, V] exist only transiently (V stays sharded over model —
+        the ``ll`` lookup uses a one-hot contraction, which partitions
+        cleanly, unlike a gather along a sharded axis).
+        """
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        B, S, _ = x.shape
+        Sc = min(self.LOSS_SEQ_CHUNK, S)
+        pad = (-S) % Sc
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-1)
+        n_chunks = (S + pad) // Sc
+
+        Vp = self.vocab_padded
+        V = cfg.vocab
+
+        def body(_, idx):
+            x_c = lax.dynamic_slice_in_dim(x, idx * Sc, Sc, axis=1)
+            lab_c = lax.dynamic_slice_in_dim(labels, idx * Sc, Sc, axis=1)
+            logits = linear(x_c, w).astype(jnp.float32)  # [B, Sc, Vp]
+            if Vp != V:  # mask padded vocab columns out of the softmax
+                col = lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
+                logits = jnp.where(col < V, logits, -1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(lab_c, Vp, dtype=jnp.float32)
+            ll = jnp.sum(logits * onehot, axis=-1)
+            return 0, (lse, ll)
+
+        _, (lse, ll) = lax.scan(jax.checkpoint(body), 0,
+                                jnp.arange(n_chunks))
+        # [n_chunks, B, Sc] → [B, S]
+        lse = lse.transpose(1, 0, 2).reshape(B, S + pad)[:, :S]
+        ll = ll.transpose(1, 0, 2).reshape(B, S + pad)[:, :S]
+        return lse, ll
+
+    def loss(self, params, batch: dict):
+        """Next-token CE (+ MoE aux + z-loss).  batch: tokens, labels."""
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.vocab > self.BIG_VOCAB:
+            # forward up to the final norm, then chunked head+CE
+            dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+            x, aux = self._backbone_train(params, batch, dtype)
+            if x.shape[1] != labels.shape[1]:  # VLM patch prefix
+                x = x[:, -labels.shape[1]:]
+            lse, ll = self._chunked_lse_ll(params, x, labels)
+        else:
+            logits, aux = self.forward_train(params, batch)
+            if logits.shape[1] != labels.shape[1]:
+                logits = logits[:, -labels.shape[1]:]
+            logits = self._constrain(logits)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            safe = jnp.maximum(labels, 0)
+            ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        n = jnp.maximum(mask.sum(), 1.0)
+        ce = jnp.sum((lse - ll) * mask) / n
+        z_loss = 1e-4 * jnp.sum((lse ** 2) * mask) / n
+        moe_aux = aux["moe_aux"]
+        if self.cfg.moe:
+            moe_aux = self.cfg.moe.router_aux_weight * moe_aux
+        total = ce + z_loss + moe_aux
+        return total, {"ce": ce, "z_loss": z_loss, "moe_aux": moe_aux}
+
+    # ------------------------------------------------------------ serving
+
+    @staticmethod
+    def _take_layer(stacked, idx):
+        """Dynamic layer-i view of a stacked cache pytree (leaf[idx])."""
+        return jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+            stacked)
+
+    @staticmethod
+    def _put_layer(stacked, one, idx):
+        return jax.tree.map(
+            lambda buf, new: lax.dynamic_update_index_in_dim(
+                buf, new.astype(buf.dtype), idx, 0),
+            stacked, one)
+
+    def _serve_runs(self, params, x, caches, *, mode, positions,
+                    enc_out=None):
+        """Shared prefill/decode traversal.
+
+        Caches are scanned as part of the CARRY with per-iteration
+        dynamic-index reads/writes — scan xs→ys pairs cannot alias in XLA,
+        so the naive formulation copies every cache buffer every step
+        (~18 GB/step on deepseek-v2 decode_32k, found via HLO traffic
+        attribution); carried buffers update in place."""
+        cfg = self.cfg
+        new_caches = {}
+        for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                st = caches[f"run{i}_stage0"]
+                if mode == "prefill":
+                    def mstep(p, s, x):
+                        h = _apply_norm(cfg, p["norm"], x)
+                        out, ns = ssm_mod.mamba2_fwd(
+                            p["mixer"], h, cfg, state=None,
+                            return_state=True)
+                        return x + out, ns
+                else:
+                    def mstep(p, s, x):
+                        h = _apply_norm(cfg, p["norm"], x)
+                        out, ns = ssm_mod.mamba2_decode_step(
+                            p["mixer"], h, cfg, s)
+                        return x + out, ns
+
+                def mbody(carry, pidx, mstep=mstep, st_like=st):
+                    x, stk = carry
+                    p, idx = pidx
+                    s = self._take_layer(stk, idx)
+                    x, ns = mstep(p, s, x)
+                    return (x, self._put_layer(stk, ns, idx)), None
+
+                n = run.count
+                (x, ns), _ = lax.scan(
+                    mbody, (x, st),
+                    (params[f"run{i}"], jnp.arange(n)))
+                new_caches[f"run{i}_stage0"] = ns
+                continue
+
+            for j, stg in enumerate(self.run_stages(run)):
+                key = f"run{i}_stage{j}"
+                cache = caches[key]
+                ccache = caches.get(key + "_cross")
+                if run.kind == "Z":
+                    p = params["shared_z"]
+                    c1 = jax.tree.map(lambda a: a[0], cache)
+                    cc1 = (jax.tree.map(lambda a: a[0], ccache)
+                           if ccache is not None else None)
+                    x, c1, cc1, _ = self._attn_block(
+                        p, x, run, mode=mode, positions=positions,
+                        cache=c1, cross_cache=cc1, enc_out=enc_out)
+                    new_caches[key] = jax.tree.map(lambda a: a[None], c1)
+                    if cc1 is not None:
+                        new_caches[key + "_cross"] = jax.tree.map(
+                            lambda a: a[None], cc1)
+                    continue
+
+                p_slice = jax.tree.map(lambda a: a[stg.lo:stg.hi],
+                                       params[f"run{i}"])
+                n = stg.hi - stg.lo
+                has_cross = ccache is not None
+
+                def sbody(carry, pidx, run=run, has_cross=has_cross):
+                    p, idx = pidx
+                    if has_cross:
+                        x, stk, cstk = carry
+                        c = self._take_layer(stk, idx)
+                        cc = self._take_layer(cstk, idx)
+                        x2, c2, cc2, _ = self._attn_block(
+                            p, x, run, mode=mode, positions=positions,
+                            cache=c, cross_cache=cc, enc_out=enc_out)
+                        return (x2, self._put_layer(stk, c2, idx),
+                                self._put_layer(cstk, cc2, idx)), None
+                    x, stk = carry
+                    c = self._take_layer(stk, idx)
+                    x2, c2, _, _ = self._attn_block(
+                        p, x, run, mode=mode, positions=positions, cache=c)
+                    return (x2, self._put_layer(stk, c2, idx)), None
+
+                if has_cross:
+                    (x, nc, ncc), _ = lax.scan(
+                        sbody, (x, cache, ccache),
+                        (p_slice, jnp.arange(n)))
+                    new_caches[key] = nc
+                    new_caches[key + "_cross"] = ncc
+                else:
+                    (x, nc), _ = lax.scan(
+                        sbody, (x, cache), (p_slice, jnp.arange(n)))
+                    new_caches[key] = nc
+        return x, new_caches
+
+    def prefill(self, params, inputs: dict, caches: dict):
+        """Processes the full prompt, filling (and quantizing) caches.
+        Returns (last-position logits [B,V], caches)."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = self._embed_inputs(params, inputs, dtype)
+        positions = jnp.arange(x.shape[1])
+        enc_out = (self._encode(params, inputs, dtype)
+                   if cfg.is_encdec else None)
+        x, caches = self._serve_runs(params, x, caches, mode="prefill",
+                                     positions=positions, enc_out=enc_out)
+        x = _apply_norm(cfg, params["final_norm"], x)
+        logits = self._lm_head(params, x[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, token: jax.Array, caches: dict,
+                    pos: jax.Array):
+        """One decode step.  token: [B] int32, pos: scalar int32 (stream
+        position of this token).  Returns (logits [B,V], caches)."""
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = embed_lookup(params["embed"], token[:, None], dtype)
+        if cfg.norm_plus_one:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+        positions = jnp.asarray(pos).reshape(1)
+        x, caches = self._serve_runs(params, x, caches, mode="decode",
+                                     positions=positions)
+        x = _apply_norm(cfg, params["final_norm"], x)
+        logits = self._lm_head(params, x)[:, 0]
+        return logits, caches

@@ -1,0 +1,158 @@
+"""Batched serving engine: continuous-batching slots over AsymKV caches.
+
+The engine drives the jit'd ``prefill`` / ``decode_step`` from
+``repro.launch.steps`` with a fixed slot count (static shapes).  Requests
+queue until a slot frees; the decode loop runs one fused step for all
+active slots per tick.  Slot lifecycle:
+
+  admit → prefill (pads the prompt batch to the slot shape, quantizes the
+  prompt cache) → decode ticks (append+attend on the quantized cache) →
+  finish on EOS/max_tokens → slot returns to the pool.
+
+Single-host CPU works end-to-end (the ``serve_requests`` example); on a pod
+the same engine runs with the sharded step functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.asymkv import AsymKVPolicy
+from repro.models.transformer import Model
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [P] int32
+    max_new_tokens: int = 32
+    eos: Optional[int] = None
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int,
+                 max_tokens: int, prompt_len: int,
+                 dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_tokens = max_tokens
+        self.prompt_len = prompt_len
+        self.dtype = dtype
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
+        self.pos = 0
+        self._pending_prefill: list[Request] = []
+
+    # ----------------------------------------------------------- admission
+
+    def submit(self, req: Request):
+        req.t_admit = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        free = [i for i, r in enumerate(self.active) if r is None]
+        newly = []
+        while free and self.queue:
+            i = free.pop(0)
+            req = self.queue.popleft()
+            self.active[i] = req
+            newly.append((i, req))
+        return newly
+
+    # ----------------------------------------------------------- stepping
+
+    def _run_prefill(self):
+        """(Re)prefills the whole slot batch — static-shape batched prefill;
+        newly admitted prompts overwrite their slots' cache rows."""
+        toks = np.zeros((self.slots, self.prompt_len), np.int32)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            p = r.prompt[-self.prompt_len:]
+            toks[i, -len(p):] = p  # left-pad
+        logits, self.caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.caches)
+        self.pos = self.prompt_len
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.time()
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            if not r.output:
+                r.t_first = now
+                r.output.append(int(nxt[i]))
+        return nxt
+
+    def _tick(self, token: np.ndarray):
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(token),
+            self.caches, jnp.asarray(self.pos, jnp.int32))
+        self.pos += 1
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.output.append(tok)
+            if (r.eos is not None and tok == r.eos) or \
+                    len(r.output) >= r.max_new_tokens or \
+                    self.pos >= self.max_tokens - 1:
+                r.done = True
+                r.t_done = time.time()
+                self.active[i] = None
+        return nxt
+
+    def run(self, *, max_ticks: int = 10_000) -> list[Request]:
+        """Drains the queue; returns finished requests (simple generational
+        batching: admit → one shared prefill → decode until all finish)."""
+        finished: list[Request] = []
+        while self.queue or any(self.active):
+            admitted = self._admit()
+            if admitted:
+                token = self._run_prefill()
+            for _ in range(max_ticks):
+                if not any(self.active):
+                    break
+                before = [r for r in self.active if r is not None]
+                token = self._tick(token)
+                finished.extend(r for r in before if r.done)
+                if self.queue and any(r is None for r in self.active):
+                    break  # admit waiting requests into free slots
+        return finished
+
+    # ----------------------------------------------------------- metrics
+
+    @staticmethod
+    def summarize(reqs: list[Request]) -> dict:
+        if not reqs:
+            return {}
+        ttft = [r.t_first - r.t_admit for r in reqs if r.t_first]
+        lat = [r.t_done - r.t_admit for r in reqs if r.t_done]
+        toks = sum(len(r.output) for r in reqs)
+        span = max(r.t_done for r in reqs) - min(r.t_admit for r in reqs)
+        return {
+            "requests": len(reqs),
+            "tokens": toks,
+            "throughput_tok_s": toks / max(span, 1e-9),
+            "ttft_p50_s": float(np.median(ttft)) if ttft else None,
+            "latency_p50_s": float(np.median(lat)) if lat else None,
+        }

@@ -1,0 +1,100 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and schedules —
+pure-JAX (no optax dependency), pytree-native, shard-friendly: optimizer
+state mirrors the parameter pytree so it inherits parameter shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Callable] = None  # step -> lr multiplier
+    # weight decay applies only to ≥2-D params (skip norms/biases)
+    decay_min_ndim: int = 2
+    # "bfloat16" halves optimizer-state HBM (236B-scale models are
+    # state-bound on v5e); fp32 math is preserved per step.
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    mu: any
+    nu: any
+    count: jax.Array
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> OptState:
+    z = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+    return OptState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup))
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params):
+    """One AdamW step.  grads may be bf16; math is fp32; params fp32 master.
+    Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    count = state.count + 1
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * (cfg.schedule(state.count) if cfg.schedule else 1.0)
+    metrics["lr"] = lr
+
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    mu = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(mdt), state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                      + (1 - cfg.b2) * g * g).astype(mdt), state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= cfg.decay_min_ndim:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(mu=mu, nu=nu, count=count), metrics

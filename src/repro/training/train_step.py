@@ -1,0 +1,174 @@
+"""Distributed training step: bf16 compute / fp32 master, microbatch
+gradient accumulation, per-layer remat (inside the model), and an optional
+int8+error-feedback **cross-pod** gradient exchange for the slow DCI link.
+
+Two gradient-sync paths:
+
+* ``sync="auto"`` — plain pjit: the loss averages over the global batch, so
+  XLA inserts the (bf16) gradient all-reduces implicitly.
+* ``sync="int8_pod"`` — the whole step body runs under
+  ``jax.shard_map(axis_names={"pod"})`` (pod manual, data/model still
+  auto-SPMD): per-pod gradients are exchanged with
+  :func:`repro.distributed.compression.compressed_psum_ef`, cutting
+  cross-pod bytes 2× vs bf16 (4× vs fp32) at equal asymptotic convergence
+  (error feedback).  Requires a ``pod`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compression import compressed_psum_ef, ef_init
+from repro.distributed.sharding import cast_tree
+from repro.training.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any           # fp32 master
+    opt: OptState
+    step: jax.Array
+    ef: Optional[Any] = None  # error-feedback residuals (int8_pod sync)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step, self.ef), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_train_state(params, *, ef_pods: int = 0,
+                     moment_dtype=jnp.float32) -> TrainState:
+    """``ef_pods > 0`` allocates per-pod error-feedback residuals with a
+    leading pod axis (sharded P('pod') by the int8_pod step)."""
+    ef = None
+    if ef_pods:
+        ef = jax.tree.map(
+            lambda p: jnp.zeros((ef_pods, *p.shape), jnp.float32), params)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, moment_dtype),
+        step=jnp.zeros((), jnp.int32),
+        ef=ef,
+    )
+
+
+def _accumulate_grads(loss_fn, params, batch, microbatches: int):
+    """Mean loss/grads over ``microbatches`` sequential slices of the batch.
+    Batch leaves are [B, ...] with B % microbatches == 0."""
+    if microbatches <= 1:
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, parts, grads
+
+    def resh(a):
+        return a.reshape(microbatches, a.shape[0] // microbatches,
+                         *a.shape[1:])
+
+    mbatch = jax.tree.map(resh, batch)
+
+    def body(carry, mb):
+        gsum, lsum, psum_parts = carry
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        gsum = jax.tree.map(jnp.add, gsum, grads)
+        psum_parts = jax.tree.map(jnp.add, psum_parts, parts)
+        return (gsum, lsum + loss, psum_parts), None
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    l0 = jnp.zeros((), jnp.float32)
+    # run one microbatch eagerly to get the parts structure
+    (loss0, parts0), grads0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, jax.tree.map(lambda a: a[0], mbatch))
+    rest = jax.tree.map(lambda a: a[1:], mbatch)
+    (gsum, lsum, parts_sum), _ = lax.scan(
+        body, (grads0, loss0, parts0), rest)
+    inv = 1.0 / microbatches
+    grads = jax.tree.map(lambda g: g * inv, gsum)
+    parts = jax.tree.map(lambda p: p * inv, parts_sum)
+    return lsum * inv, parts, grads
+
+
+def make_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    sync: str = "auto",          # auto | int8_pod
+    mesh=None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Builds ``train_step(state, batch) -> (state, metrics)``."""
+
+    def loss_fn(params_c, mb):
+        return model.loss(params_c, mb)
+
+    def plain_step(state: TrainState, batch: dict):
+        params_c = cast_tree(state.params, compute_dtype)
+        loss, parts, grads = _accumulate_grads(
+            loss_fn, params_c, batch, microbatches)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt, state.step + 1,
+                          state.ef), metrics
+
+    if sync == "auto":
+        return plain_step
+
+    if sync != "int8_pod":
+        raise ValueError(f"unknown sync {sync!r}")
+    if mesh is None or "pod" not in mesh.axis_names:
+        raise ValueError("int8_pod sync requires a mesh with a 'pod' axis")
+
+    def pod_body(core: TrainState, ef, batch: dict):
+        # Inside: 'pod' is manual (this body sees one pod's batch shard and
+        # its own ef residuals); 'data'/'model' remain auto-SPMD.
+        params_c = cast_tree(core.params, compute_dtype)
+        loss, parts, grads = _accumulate_grads(
+            loss_fn, params_c, batch, microbatches)
+        flat_g, tdef = jax.tree.flatten(grads)
+        # ef arrives with its pod axis SHARDED to length 1 (shard_map shards
+        # named axes, it does not strip them) — index it off and restore it
+        # on the way out so the leading broadcast can't contaminate grads.
+        flat_e = [e[0] for e in jax.tree.leaves(ef)]
+        out_g, out_e = [], []
+        for g, e in zip(flat_g, flat_e):
+            m, ne = compressed_psum_ef(g, e, "pod")
+            out_g.append(m)
+            out_e.append(ne[None])
+        grads = jax.tree.unflatten(tdef, out_g)
+        new_ef = jax.tree.unflatten(tdef, out_e)
+        loss = lax.pmean(loss, "pod")
+        parts = jax.tree.map(lambda p: lax.pmean(p, "pod"), parts)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, core.opt, core.params)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt, core.step + 1,
+                          None), new_ef, metrics
+
+    def pod_step(state: TrainState, batch: dict):
+        core = TrainState(state.params, state.opt, state.step, None)
+        new_core, new_ef, metrics = jax.shard_map(
+            pod_body,
+            mesh=mesh,
+            in_specs=(P(), P("pod"), P("pod")),
+            out_specs=(P(), P("pod"), P()),
+            axis_names={"pod"},
+            check_vma=False,
+        )(core, state.ef, batch)
+        return TrainState(new_core.params, new_core.opt, new_core.step,
+                          new_ef), metrics
+
+    return pod_step

@@ -1,0 +1,136 @@
+"""Attention paths + the paper's Sec. 3 error-propagation claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention_quant import flash_prefill
+from repro.core.error_analysis import (kv_asymmetry_report,
+                                       theorem1_predicted_error)
+from repro.core.quant import QuantSpec, dequantize, quantize
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(3)
+
+
+def _naive(q, k, v, causal=True, window=None, scale=None):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = q.reshape(B, Hkv, r, S, D)
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qh, k) * scale
+    qp, kp = jnp.arange(S)[:, None], jnp.arange(k.shape[2])[None]
+    m = jnp.ones((S, k.shape[2]), bool)
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= qp - kp < window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhrqk,bhkd->bhrqd", p, v).reshape(B, Hq, S, D)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 33)])
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 16), (128, 128)])
+def test_flash_prefill_matches_naive(causal, window, blocks):
+    q = jnp.asarray(RNG.normal(size=(2, 8, 128, 32)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)).astype(np.float32))
+    o = flash_prefill(q, k, v, causal=causal, window=window,
+                      q_block=blocks[0], kv_block=blocks[1])
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(_naive(q, k, v, causal, window)),
+        atol=2e-5)
+
+
+def test_flash_prefill_mla_width():
+    """V width may differ from QK width (MLA)."""
+    q = jnp.asarray(RNG.normal(size=(1, 4, 64, 48)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 4, 64, 48)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, 4, 64, 16)).astype(np.float32))
+    o = flash_prefill(q, k, v, causal=True, q_block=32, kv_block=32)
+    assert o.shape == (1, 4, 64, 16)
+
+
+# ----------------------------------------------------------------- Sec. 3
+
+def _structured_kv(T=256, D=64):
+    """K with per-channel offsets/outliers (the real-LLM structure that
+    motivates per-channel K quantization), V plain."""
+    k = RNG.normal(size=(T, D)).astype(np.float32)
+    k += (RNG.normal(size=(1, D)) * 3).astype(np.float32)  # channel offsets
+    k[:, : D // 8] *= 8.0                                   # outlier channels
+    v = RNG.normal(size=(T, D)).astype(np.float32)
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+def test_key_error_amplified_vs_value():
+    """Paper Fig. 1: with comparable stage-0 (dequant) MSE, the attention
+    *output* MSE from K-quantization exceeds the V-quantization one."""
+    k, v = _structured_kv()
+    q = jnp.asarray(RNG.normal(size=(8, 64)).astype(np.float32)) * 2.0
+    rep = kv_asymmetry_report(q, k, v, bits=2, group=32)
+    out_ratio = float(rep["ratio"]["output"])
+    assert out_ratio > 1.0, f"expected K-error amplification, got {out_ratio}"
+
+
+def test_query_contraction_amplifies_key_error():
+    """Paper Sec. 3 claim (1): the contraction with x_q accumulates the
+    per-element K error over the head dim — with E[q²] = s², the logit MSE
+    is ≈ s² × dequant MSE (scale-normalized), i.e. amplified for s > 1."""
+    k, v = _structured_kv()
+    qs = 3.0
+    q = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32)) * qs
+    rep = kv_asymmetry_report(q, k, v, bits=2, group=32)
+    key = {s: float(x) for s, x in rep["key"].items()}
+    assert key["output"] > 0
+    # logits error ≈ qs² × dequant error (up to the structured-K variance);
+    # assert amplification by at least qs²/4.
+    assert key["logits"] / max(key["dequant"], 1e-12) > qs ** 2 / 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([1, 2, 4]))
+def test_theorem1_closed_form(seed, bits):
+    """Property: Theorem 1's closed-form error equals the directly computed
+    attention-weight error for any K, K*, q."""
+    rng = np.random.default_rng(seed)
+    T, D = 64, 32
+    k = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    kq = quantize(k[None], QuantSpec(bits=bits, group=32, mode="per_channel"))
+    k_hat = dequantize(kq, jnp.float32)[0]
+    qv = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+    pred, act = theorem1_predicted_error(qv, k, k_hat, v)
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(act),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_key_vs_value_quant_asymmetry_statistical():
+    """Fig. 1's measured asymmetry, made statistical: at MATCHED bit width
+    the attention-output MSE from K-quantization exceeds the one from
+    V-quantization by a robust margin (geomean ratio ≈ 3.4 over seeds on
+    channel-structured K).  The paper's mixed-bits Table-1 ordering
+    (AsymKV-l/0 ≻ AsymKV-0/l) additionally relies on error compounding
+    through layer depth — covered by
+    ``test_system.test_asymkv_keeps_trained_model_outputs``."""
+    ratios = []
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        T, D = 256, 64
+        k = rng.normal(size=(T, D)).astype(np.float32)
+        k += (rng.normal(size=(1, D)) * 3).astype(np.float32)
+        k[:, : D // 8] *= 8.0
+        v = rng.normal(size=(T, D)).astype(np.float32)
+        q = (rng.normal(size=(16, D)) * 2.0).astype(np.float32)
+        rep = kv_asymmetry_report(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), bits=2, group=32)
+        ratios.append(float(rep["ratio"]["output"]))
+    geomean = float(np.exp(np.mean(np.log(ratios))))
+    assert geomean > 1.5, ratios
+    assert sum(r > 1 for r in ratios) >= 4, ratios

@@ -1,0 +1,87 @@
+"""Fault tolerance (heartbeats, remesh planning, stragglers) and the data
+pipeline (determinism, host sharding, packing)."""
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, SyntheticLM, prefetched
+from repro.ft.elastic import (HeartbeatRegistry, StragglerDetector,
+                              plan_remesh)
+
+
+def test_heartbeat_detection():
+    reg = HeartbeatRegistry(hosts=list(range(4)), timeout_steps=2)
+    for s in range(5):
+        for h in (0, 1, 2):
+            reg.beat(h, s)
+    reg.beat(3, 0)
+    assert reg.dead_hosts(current_step=5) == {3}
+    assert reg.alive(5) == {0, 1, 2}
+    reg.remove({3})
+    assert reg.dead_hosts(5) == set()
+
+
+def test_plan_remesh_preserves_model_axis():
+    # 256 devices (16×16), lose 16 → data shrinks 16→15
+    p = plan_remesh(240, model_size=16, batch_per_data_shard=16, old_data=16)
+    assert p is not None and p.model == 16 and p.data == 15
+    assert p.global_batch == 240
+    # catastrophic loss → None when even min_data won't fit
+    assert plan_remesh(8, model_size=16, batch_per_data_shard=16,
+                       old_data=16) is None
+    # multi-pod keeps pods
+    p = plan_remesh(480, model_size=16, batch_per_data_shard=8,
+                    old_data=16, pods=2)
+    assert p.data == 15 and p.devices == 480
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=8, threshold=3.0, strikes=3)
+    for step in range(10):
+        for h in range(8):
+            det.report(h, 1.0 + 0.01 * np.random.default_rng(step * 8 + h)
+                       .standard_normal())
+        det.report(8, 5.0)  # persistent straggler
+        newly = det.check()
+        if step >= 2:
+            assert 8 in det.blocklist
+            break
+    assert 8 in det.blocklist
+    assert not {h for h in range(8)} & det.blocklist
+
+
+def test_data_determinism_and_host_sharding():
+    base = dict(vocab=1000, seq_len=128, global_batch=8, seed=7)
+    a = SyntheticLM(DataConfig(**base, host_id=0, host_count=2))
+    b = SyntheticLM(DataConfig(**base, host_id=0, host_count=2))
+    c = SyntheticLM(DataConfig(**base, host_id=1, host_count=2))
+    np.testing.assert_array_equal(a.batch(3)["tokens"], b.batch(3)["tokens"])
+    assert not np.array_equal(a.batch(3)["tokens"], c.batch(3)["tokens"])
+    assert a.batch(0)["tokens"].shape == (4, 128)  # 8 / 2 hosts
+
+
+def test_data_labels_shifted_and_masked():
+    d = SyntheticLM(DataConfig(vocab=1000, seq_len=64, global_batch=2,
+                               mean_doc_len=16))  # short docs → boundaries
+    b = d.batch(0)
+    toks, labels = b["tokens"], b["labels"]
+    # labels are next-token: where not masked, labels[t] == tokens[t+1]
+    for row in range(2):
+        for t in range(63):
+            if labels[row, t] >= 0 and labels[row, t + 1] >= 0 \
+                    and labels[row, t] != -1:
+                pass  # boundary-masked positions exempt
+    assert (labels == -1).sum() > 0  # doc boundaries exist
+    valid = labels[:, :-1] >= 0
+    np.testing.assert_array_equal(
+        np.where(valid, labels[:, :-1], 0),
+        np.where(valid, toks[:, 1:], 0))
+
+
+def test_prefetch_preserves_order():
+    d = SyntheticLM(DataConfig(vocab=100, seq_len=32, global_batch=2))
+    it = prefetched(iter([d.batch(i) for i in range(5)]), prefetch=2)
+    got = [b["tokens"] for b in it]
+    assert len(got) == 5
+    for i in range(5):
+        np.testing.assert_array_equal(got[i], d.batch(i)["tokens"])

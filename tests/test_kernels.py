@@ -1,0 +1,103 @@
+"""Interpret-mode Pallas kernel sweeps vs the pure-jnp oracles (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention_quant import decode_attend_dense
+from repro.core.kvcache import LayerKVCache
+from repro.kernels import ref
+from repro.kernels.ops import (asym_decode_attention, flash_prefill_kernel,
+                               rtn_pack)
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("mode", ["per_channel", "per_token"])
+@pytest.mark.parametrize("shape", [(1, 1, 64, 32), (2, 3, 128, 64),
+                                   (1, 2, 256, 128)])
+def test_rtn_pack_sweep(bits, mode, shape):
+    x = jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+    c, s, z = rtn_pack(x, bits=bits, group=32, mode=mode, block=64)
+    cr, sr, zr = ref.rtn_pack_ref(x, bits, 32, mode)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rtn_pack_dtypes(dtype):
+    x = jnp.asarray(RNG.normal(size=(1, 2, 64, 64))).astype(dtype)
+    c, s, z = rtn_pack(x.astype(jnp.float32), bits=2, group=32,
+                       mode="per_channel", block=64)
+    cr, sr, zr = ref.rtn_pack_ref(x.astype(jnp.float32), 2, 32, "per_channel")
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 40)])
+@pytest.mark.parametrize("shape", [(1, 4, 4, 128, 64), (2, 8, 2, 64, 32)])
+def test_flash_prefill_sweep(causal, window, shape):
+    B, Hq, Hkv, S, D = shape
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)).astype(np.float32))
+    o = flash_prefill_kernel(q, k, v, causal=causal, window=window,
+                             block_q=32, block_k=32)
+    orf = ref.flash_prefill_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=3e-5)
+
+
+def test_flash_prefill_bf16():
+    B, Hq, Hkv, S, D = 1, 4, 2, 64, 64
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D))).astype(jnp.bfloat16)
+    o = flash_prefill_kernel(q, k, v, block_q=32, block_k=32)
+    orf = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("kb,vb", [(1, 1), (2, 1), (2, 2), (4, 2), (8, 4)])
+@pytest.mark.parametrize("T,D,Hkv,r", [(128, 64, 2, 4), (256, 128, 1, 8)])
+def test_asym_decode_attn_sweep(kb, vb, T, D, Hkv, r):
+    B = 2
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, T, D)).astype(np.float32))
+    c = LayerKVCache.init(B, Hkv, D, max_tokens=T, k_bits=kb, v_bits=vb,
+                          group=32, residual=32, dtype=jnp.float32,
+                          scale_dtype=jnp.float32)
+    c = c.prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(B, Hkv * r, 1, D)).astype(np.float32))
+    out = asym_decode_attention(q, c, block=64)
+    want = decode_attend_dense(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_asym_decode_partial_stats_vs_ref():
+    """Kernel partial (m, l, acc) equals the oracle's over the committed
+    prefix alone."""
+    from repro.kernels.asym_decode_attn import asym_decode_attn
+    B, H, T, D, r = 1, 2, 128, 64, 2
+    k = jnp.asarray(RNG.normal(size=(B, H, T, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, H, T, D)).astype(np.float32))
+    c = LayerKVCache.init(B, H, D, max_tokens=T, k_bits=2, v_bits=1,
+                          group=32, residual=32, dtype=jnp.float32,
+                          scale_dtype=jnp.float32)
+    c = c.prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(B, H, r, D)).astype(np.float32))
+    commit = c.commit_length().reshape(1).astype(jnp.int32)
+    m, l, acc = asym_decode_attn(
+        q, c.k_codes, c.k_scale, c.k_zero, c.v_codes, c.v_scale, c.v_zero,
+        commit, k_bits=2, v_bits=1, group=32, block=32, scale=D ** -0.5)
+    mr, lr, accr = ref.asym_decode_attn_ref(
+        q, c.k_codes, c.k_scale, c.k_zero, c.v_codes, c.v_scale, c.v_zero,
+        commit[0], k_bits=2, v_bits=1, group=32, scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(accr), rtol=1e-4,
+                               atol=1e-4)

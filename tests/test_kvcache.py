@@ -1,0 +1,162 @@
+"""KV-cache semantics: append ≡ prefill, ring windows, MLA latent caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asymkv import AsymKVPolicy, segment_layers
+from repro.core.attention_quant import decode_attend, decode_attend_dense
+from repro.core.kvcache import LayerKVCache, commit_len
+
+jax.config.update("jax_platform_name", "cpu")
+RNG = np.random.default_rng(0)
+
+
+def _mk(T=256, B=1, H=2, D=64, **kw):
+    kw.setdefault("k_bits", 2)
+    kw.setdefault("v_bits", 1)
+    kw.setdefault("group", 32)
+    kw.setdefault("residual", 64)
+    kw.setdefault("dtype", jnp.float32)
+    return LayerKVCache.init(B, H, D, max_tokens=T, **kw)
+
+
+def _rand(B=1, H=2, T=256, D=64):
+    return (jnp.asarray(RNG.normal(size=(B, H, T, D)).astype(np.float32)),
+            jnp.asarray(RNG.normal(size=(B, H, T, D)).astype(np.float32)))
+
+
+def test_commit_len():
+    assert commit_len(0, 64, 32) == 0
+    assert commit_len(64, 64, 32) == 0
+    assert commit_len(95, 64, 32) == 0
+    assert commit_len(96, 64, 32) == 32
+    assert commit_len(200, 64, 32) == 128
+
+
+@pytest.mark.parametrize("kb,vb", [(2, 1), (0, 0), (4, 2), (2, 0)])
+def test_append_equals_prefill(kb, vb):
+    k, v = _rand()
+    c1 = _mk(k_bits=kb, v_bits=vb).prefill(k, v)
+    c2 = _mk(k_bits=kb, v_bits=vb)
+    step = jax.jit(lambda c, kt, vt: c.append(kt, vt))
+    for t in range(256):
+        c2 = step(c2, k[:, :, t:t + 1], v[:, :, t:t + 1])
+    assert int(c1.length) == int(c2.length) == 256
+    assert int(c1.commit_length()) == int(c2.commit_length())
+    for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                 "v_zero", "k_fp", "v_fp"):
+        a, b = getattr(c1, name), getattr(c2, name)
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=0)
+    # residual ring: compare only valid (recent) slots
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, 64)).astype(np.float32))
+    o1 = decode_attend_dense(q, c1)
+    o2 = decode_attend_dense(q, c2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_chunked_equals_dense():
+    k, v = _rand()
+    c = _mk().prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, 64)).astype(np.float32))
+    o1 = decode_attend(q, c, block=64)
+    o2 = decode_attend_dense(q, c)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_float_cache_matches_exact_attention():
+    k, v = _rand()
+    c = _mk(k_bits=0, v_bits=0).prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, 64)).astype(np.float32))
+    out = decode_attend(q, c, block=64)
+    qh = q.reshape(1, 2, 2, 64)
+    s = jnp.einsum("bhrd,bhtd->bhrt", qh, k) / 8.0
+    ref = jnp.einsum("bhrt,bhtd->bhrd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1),
+                               np.asarray(ref).reshape(-1), atol=1e-5)
+
+
+def test_windowed_ring_wraparound():
+    """A windowed cache smaller than the stream stays correct: only the
+    last `window` tokens influence attention."""
+    T, W = 128, 96
+    k, v = _rand(T=512)
+    ring = LayerKVCache.init(1, 2, 64, max_tokens=T, k_bits=0, v_bits=0,
+                             group=32, residual=32, dtype=jnp.float32)
+    step = jax.jit(lambda c, kt, vt: c.append(kt, vt))
+    for t in range(512):
+        ring = step(ring, k[:, :, t:t + 1], v[:, :, t:t + 1])
+    q = jnp.asarray(RNG.normal(size=(1, 2, 1, 64)).astype(np.float32))
+    out = decode_attend(q, ring, block=32, window=W)
+    # reference over the true last W tokens
+    kw, vw = k[:, :, -W:], v[:, :, -W:]
+    s = jnp.einsum("bhrd,bhtd->bhrt", q.reshape(1, 2, 1, 64), kw) / 8.0
+    ref = jnp.einsum("bhrt,bhtd->bhrd", jax.nn.softmax(s, -1), vw)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1),
+                               np.asarray(ref).reshape(-1), atol=1e-4)
+
+
+def test_mla_latent_cache():
+    """v_slice_offset: V == K[..., off:]; only one store allocated."""
+    B, T, off = 2, 128, 32
+    c = LayerKVCache.init(
+        B, 1, 96, max_tokens=T, k_bits=2, v_bits=0, group=32,
+        residual=32, dtype=jnp.float32, v_slice_offset=off)
+    assert c.v_codes is None and c.v_fp is None and c.resid_v is None
+    rows = jnp.asarray(RNG.normal(size=(B, 1, T, 96)).astype(np.float32))
+    c = c.prefill(rows)
+    q = jnp.asarray(RNG.normal(size=(B, 8, 1, 96)).astype(np.float32))
+    out = decode_attend(q, c, block=32)
+    assert out.shape == (B, 8, 1, 96 - off)
+    ref = decode_attend_dense(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_quant_cache_close_to_float():
+    k, v = _rand()
+    cq = _mk(k_bits=4, v_bits=4).prefill(k, v)
+    cf = _mk(k_bits=0, v_bits=0).prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, 64)).astype(np.float32))
+    oq = decode_attend(q, cq, block=64)
+    of = decode_attend(q, cf, block=64)
+    assert float(jnp.mean((oq - of) ** 2)) < 1e-3
+
+
+def test_policy_segments():
+    p = AsymKVPolicy(n_layers=8, l_k=5, l_v=2)
+    assert p.layer_bits(0) == (2, 2)
+    assert p.layer_bits(2) == (2, 1)
+    assert p.layer_bits(5) == (1, 1)
+    segs = p.segments()
+    assert [(s.start, s.count, s.k_bits, s.v_bits) for s in segs] == \
+        [(0, 2, 2, 2), (2, 3, 2, 1), (5, 3, 1, 1)]
+    assert p.describe() == "AsymKV-5/2"
+    assert AsymKVPolicy.kivi(8).describe() == "KIVI-2bit"
+    assert AsymKVPolicy.float_cache(8).layer_bits(0) == (0, 0)
+
+
+def test_policy_memory_ordering():
+    """More high-bit layers → more bytes; AsymKV-l/0 == AsymKV-0/l bytes."""
+    n = 16
+    base = dict(n_layers=n, high_bits=2, low_bits=1)
+    b = [AsymKVPolicy(l_k=l, l_v=0, **base).cache_bytes_per_token(8, 128)
+         for l in range(n + 1)]
+    assert all(b[i] < b[i + 1] for i in range(n))
+    for l in (4, 8):
+        k_side = AsymKVPolicy(l_k=l, l_v=0, **base)
+        v_side = AsymKVPolicy(l_k=0, l_v=l, **base)
+        assert k_side.cache_bytes_per_token(8, 128) == pytest.approx(
+            v_side.cache_bytes_per_token(8, 128))
+
+
+def test_adaptive_v_group():
+    """head_dim 80 (zamba2) clamps the V channel group to 20."""
+    c = LayerKVCache.init(1, 2, 80, max_tokens=64, k_bits=2, v_bits=1,
+                          group=32, residual=32)
+    assert c.v_group == 20
+    assert c.v_scale.shape[-1] == 4  # 80 / 20

@@ -1,0 +1,102 @@
+"""Unit + property tests for the RTN quantization core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    QuantSpec, dequantize, pack_bits, quantize, quantized_bytes_per_element,
+    unpack_bits,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("axis", [-1, -2, 0])
+def test_pack_roundtrip_exact(bits, axis):
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(
+        rng.integers(0, 2 ** bits, size=(16, 8, 32)).astype(np.uint8))
+    packed = pack_bits(codes, bits, axis)
+    out = unpack_bits(packed, bits, axis)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+    assert packed.shape[axis] == codes.shape[axis] * bits // 8
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("mode", ["per_channel", "per_token"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rtn_error_bound(bits, mode, dtype):
+    """RTN error ≤ scale/2 per element (+ dtype eps)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 3, 64, 64)).astype(np.float32))
+    spec = QuantSpec(bits=bits, group=32, mode=mode)
+    q = quantize(x.astype(dtype), spec)
+    xh = dequantize(q, jnp.float32)
+    err = jnp.abs(xh - x.astype(dtype).astype(jnp.float32))
+    # per-group bound: scale/2
+    axis = -2 if mode == "per_channel" else -1
+    scale = np.asarray(q.scale, np.float32)
+    bound = scale.max() / 2 + (0.05 if dtype == jnp.bfloat16 else 1e-5)
+    assert float(err.max()) <= bound + 1e-6
+
+
+def test_one_bit_is_min_max():
+    """1-bit RTN reproduces exactly min/max per group."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 1, 32, 8)).astype(np.float32))
+    spec = QuantSpec(bits=1, group=32, mode="per_channel")
+    xh = np.asarray(dequantize(quantize(x, spec), jnp.float32))
+    xn = np.asarray(x)
+    for c in range(8):
+        col = xn[0, 0, :, c]
+        assert set(np.round(np.unique(xh[0, 0, :, c]), 4)) <= \
+            set(np.round([col.min(), col.max()], 4))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([1, 2, 4, 8]),
+    mode=st.sampled_from(["per_channel", "per_token"]),
+    t_groups=st.integers(1, 4),
+    channels=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_roundtrip_monotone(bits, mode, t_groups, channels, seed):
+    """Property: dequantized values stay within group [min, max], and
+    requantizing a dequantized array is a fixed point."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.normal(size=(1, 2, 32 * t_groups, channels)).astype(np.float32))
+    g = 32 if mode == "per_channel" else min(32, channels)
+    spec = QuantSpec(bits=bits, group=g, mode=mode)
+    q = quantize(x, spec)
+    xh = dequantize(q, jnp.float32)
+    assert float(jnp.max(xh)) <= float(jnp.max(x)) + 1e-4
+    assert float(jnp.min(xh)) >= float(jnp.min(x)) - 1e-4
+    # fixed point
+    q2 = quantize(xh, spec)
+    xh2 = dequantize(q2, jnp.float32)
+    np.testing.assert_allclose(np.asarray(xh2), np.asarray(xh),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_storage_accounting():
+    spec = QuantSpec(bits=1, group=32, mode="per_channel")
+    # 1 bit + 2 fp32 scales / 32 elems = 0.125 + 0.25
+    assert quantized_bytes_per_element(spec, 4) == pytest.approx(0.375)
+    spec2 = QuantSpec(bits=2, group=32, mode="per_token")
+    assert quantized_bytes_per_element(spec2, 2) == pytest.approx(0.375)
+
+
+def test_quantize_shapes_per_channel():
+    x = jnp.zeros((2, 4, 128, 64))
+    q = quantize(x, QuantSpec(bits=2, group=32, mode="per_channel"))
+    assert q.codes.shape == (2, 4, 32, 64)     # 128 tokens · 2/8
+    assert q.scale.shape == (2, 4, 4, 64)      # 128/32 groups
+    q = quantize(x, QuantSpec(bits=1, group=32, mode="per_token"))
+    assert q.codes.shape == (2, 4, 128, 8)     # 64 ch · 1/8
+    assert q.scale.shape == (2, 4, 128, 2)     # 64/32 groups
