@@ -78,6 +78,9 @@ def model_flops(cfg, cell) -> float:
         return 6.0 * n_active * cell.batch * cell.seq
     if cell.kind == "prefill":
         return 2.0 * n_active * cell.batch * cell.seq
+    if cell.kind == "chunk":  # chunked prefill: C tokens per slot per step
+        C = cell.chunk or 256
+        return 2.0 * n_active * cell.batch * C
     return 2.0 * n_active * cell.batch  # one decode token per sequence
 
 
@@ -110,6 +113,11 @@ def model_flops_attn(cfg, cell) -> float:
         if cell.kind == "decode":
             kv = cell.seq if kind != "L" else min(cell.seq, cfg.window or S)
             extra += 2.0 * B * H * kv * (qk + vd)
+        elif cell.kind == "chunk":
+            # C chunk queries against an (on average) half-full cache
+            C = cell.chunk or 256
+            kv = S / 2 if kind != "L" else min(cfg.window or S, S)
+            extra += 2.0 * B * H * C * kv * (qk + vd)
         else:
             kv_eff = S / 2 if kind != "L" else min(cfg.window or S, S)
             extra += 2.0 * B * H * S * kv_eff * (qk + vd)

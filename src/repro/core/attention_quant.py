@@ -32,9 +32,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.kvcache import LayerKVCache
+from repro.core.paged import PagedKVCache
 from repro.core.quant import QuantArray, dequantize
 
-__all__ = ["flash_prefill", "decode_attend", "decode_attend_dense"]
+__all__ = ["flash_prefill", "decode_attend", "decode_attend_dense",
+           "paged_decode_attend", "paged_chunk_attend"]
 
 _NEG_INF = -1e30
 
@@ -295,3 +297,157 @@ def decode_attend_dense(
     out = jnp.einsum("bhrk,bhkd->bhrd", p.astype(v_all.dtype), v_all,
                      preferred_element_type=jnp.float32)
     return _gqa_merge(out[:, :, :, None]).astype(q.dtype)
+
+
+# =========================================================================
+# Paged decode / chunked-prefill attention (variable-length batches)
+# =========================================================================
+
+def paged_decode_attend(
+    q: jax.Array,
+    cache: PagedKVCache,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token decode attention through the page table.
+
+    ``q [S, Hq, 1, D]`` → ``[S, Hq, 1, Dv]``.  Scans the page-table columns
+    (``lax.scan``, online softmax): each step gathers one pool block per
+    slot, dequantizes it, and masks positions ``≥ commit(s)`` or with an
+    unmapped page-table entry; the per-slot fp residual ring is folded in
+    as the final block.  Every slot attends over its *own* length — this is
+    the variable-length read path of the serving engine.
+    """
+    S, Hq, Sq, D = q.shape
+    assert Sq == 1, "paged_decode_attend is single-token"
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = _gqa_split(q, Hkv)[:, :, :, 0]                  # [S, Hkv, r, D]
+
+    commit = cache.commit_lengths()                      # [S]
+    lengths = cache.lengths
+    lo_valid = (jnp.maximum(0, lengths - window) if window is not None
+                else jnp.zeros_like(lengths))
+    BT = cache.block_tokens
+    Dv = (D - cache.v_slice_offset if cache.v_slice_offset >= 0 else D)
+
+    init = (
+        jnp.full((S, Hkv, r), _NEG_INF, jnp.float32),
+        jnp.zeros((S, Hkv, r), jnp.float32),
+        jnp.zeros((S, Hkv, r, Dv), jnp.float32),
+    )
+
+    def body(carry, i):
+        blk = cache.page_table[:, i]                     # [S]
+        k_blk, v_blk = cache.dequant_blocks(jnp.maximum(blk, 0))
+        s = jnp.einsum("bhrd,bhkd->bhrk", qh, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        pos = i * BT + jnp.arange(BT, dtype=jnp.int32)[None, :]  # [1, BT]
+        valid = ((blk > 0)[:, None] & (pos < commit[:, None])
+                 & (pos >= lo_valid[:, None]))
+        s = jnp.where(valid[:, None, None], s, _NEG_INF)
+        return _online_update(carry, s, v_blk), None
+
+    if cache.max_blocks > 0:
+        (m, l, acc), _ = lax.scan(body, init,
+                                  jnp.arange(cache.max_blocks))
+    else:
+        m, l, acc = init
+
+    pos = cache.ring_positions()                         # [S, cap]
+    valid = ((pos >= commit[:, None]) & (pos < lengths[:, None])
+             & (pos >= lo_valid[:, None]))
+    s = jnp.einsum("bhrd,bhkd->bhrk", qh, cache.resid_k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    m, l, acc = _online_update((m, l, acc), s, cache.residual_v())
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return _gqa_merge(out[:, :, :, None]).astype(q.dtype)
+
+
+def paged_chunk_attend(
+    q: jax.Array,
+    cache: PagedKVCache,
+    q_start: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Chunked-prefill attention: ``C`` chunk queries per slot against the
+    paged cache (history **plus** the freshly written chunk — call after
+    :meth:`PagedKVCache.write_chunk`).
+
+    ``q [S, Hq, C, D]``; ``q_start [S]`` — each slot's absolute position of
+    chunk row 0 (the slot's length *before* the chunk was written).
+    Causality is positional: chunk row ``i`` attends to cache positions
+    ``≤ q_start + i``, which includes earlier chunk tokens whether they
+    landed in the ring or were already committed.  Rows past a slot's
+    ``n_valid`` produce garbage and must be ignored by the caller.
+    """
+    S, Hq, C, D = q.shape
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qh = _gqa_split(q, Hkv)                              # [S, Hkv, r, C, D]
+
+    commit = cache.commit_lengths()
+    lengths = cache.lengths
+    q_pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [S, C]
+    lo_valid = (jnp.maximum(0, q_pos - window + 1) if window is not None
+                else jnp.zeros_like(q_pos))              # [S, C]
+    BT = cache.block_tokens
+    Dv = (D - cache.v_slice_offset if cache.v_slice_offset >= 0 else D)
+
+    init = (
+        jnp.full((S, Hkv, r, C), _NEG_INF, jnp.float32),
+        jnp.zeros((S, Hkv, r, C), jnp.float32),
+        jnp.zeros((S, Hkv, r, C, Dv), jnp.float32),
+    )
+
+    def upd(carry, s, v):
+        m, l, acc = carry
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhrqk,bhkd->bhrqd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    def body(carry, i):
+        blk = cache.page_table[:, i]
+        k_blk, v_blk = cache.dequant_blocks(jnp.maximum(blk, 0))
+        s = jnp.einsum("bhrqd,bhkd->bhrqk", qh, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        pos = i * BT + jnp.arange(BT, dtype=jnp.int32)[None, None, :]
+        valid = ((blk > 0)[:, None, None]
+                 & (pos < commit[:, None, None])
+                 & (pos <= q_pos[:, :, None])
+                 & (pos >= lo_valid[:, :, None]))        # [S, C, BT]
+        s = jnp.where(valid[:, None, None], s, _NEG_INF)
+        return upd(carry, s, v_blk), None
+
+    if cache.max_blocks > 0:
+        (m, l, acc), _ = lax.scan(body, init,
+                                  jnp.arange(cache.max_blocks))
+    else:
+        m, l, acc = init
+
+    pos = cache.ring_positions()                         # [S, cap]
+    valid = ((pos[:, None, :] >= commit[:, None, None])
+             & (pos[:, None, :] < lengths[:, None, None])
+             & (pos[:, None, :] <= q_pos[:, :, None])
+             & (pos[:, None, :] >= lo_valid[:, :, None]))  # [S, C, cap]
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qh, cache.resid_k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    m, l, acc = upd((m, l, acc), s, cache.residual_v())
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # [S, Hkv, r, C, Dv]
+    return out.reshape(S, Hq, C, Dv).astype(q.dtype)

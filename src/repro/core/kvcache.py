@@ -17,6 +17,17 @@ caches use ``kv_heads = 1`` with ``head_dim = kv_lora_rank``.
 A full-precision layer (``bits = 0`` — the ``float`` baseline or a layer the
 policy leaves unquantized) stores committed tokens in a dense fp buffer
 through the same interface, so all baselines share one code path.
+
+This class is the *contiguous* layout: one dense ``[batch, …, max_tokens]``
+store per layer with a single batch-wide ``length`` — right for lock-step
+workloads (training eval, benchmarks, the differential-test oracle).  The
+serving engine instead uses :mod:`repro.core.paged`'s ``PagedKVCache``,
+which keeps the identical group-commit scheme and quantization math
+(committed codes are bit-identical between layouts) but stores committed
+groups in pooled fixed-size blocks behind a per-slot page table with
+per-slot lengths — variable-length continuous batching with immediate
+block reclaim.  ``tests/test_paged_cache.py`` pins the two layouts
+against each other.
 """
 
 from __future__ import annotations

@@ -1,0 +1,549 @@
+"""Paged, block-granular quantized KV cache with a free-list allocator.
+
+The contiguous :class:`~repro.core.kvcache.LayerKVCache` pre-allocates a
+dense ``[slots, max_tokens]`` store per layer — the memory waste a serving
+engine cannot afford once requests have different lengths and lifetimes.
+This module replaces that store with a **block pool + page table**:
+
+* **Block pool** — committed quantized groups live in fixed-size blocks of
+  ``block_tokens`` tokens (a multiple of the quant group ``G``; a group is
+  the atomic commit unit, so block granularity composes exactly with the
+  AsymKV commit scheme).  Per pool entry (block ``n``, all KV heads):
+
+  - ``k_codes [N, H, BT·k_bits/8, D]`` token-packed uint8 codes,
+  - ``k_scale/k_zero [N, H, BT/G, D]`` per-channel group params,
+  - ``v_codes [N, H, BT, D·v_bits/8]`` channel-packed uint8 codes,
+  - ``v_scale/v_zero [N, H, BT, D/vg]`` per-token group params,
+  - ``k_fp/v_fp [N, H, BT, D]`` dense fp stores when ``bits == 0``.
+
+  Block **0 is reserved** as a scratch/null block: masked-out lanes of the
+  vectorized commit scatter write there, and readers treat page-table
+  entry 0 as "unmapped".
+
+* **Page table** — ``page_table [slots, max_blocks] int32``; entry ``(s,
+  i)`` names the pool block holding slot ``s``'s committed tokens
+  ``[i·BT, (i+1)·BT)``, or 0 when unmapped.  ``lengths [slots] int32``
+  tracks per-slot stream lengths — *variable-length*: every slot advances
+  independently (contrast ``LayerKVCache.length``, one scalar for the whole
+  batch).
+
+* **Residual ring** — per-slot full-precision ring ``[slots, H,
+  residual+G, D]`` identical in layout and commit cadence to the contiguous
+  cache: tokens ``[commit_len(s), lengths[s])`` stay fp; whenever the fp
+  window would exceed ``residual + G - 1`` one group of ``G`` is quantized
+  with the same :func:`repro.core.quant.quantize` call the contiguous cache
+  uses — so committed codes/scales are **bit-identical** between layouts
+  (the differential suite in ``tests/test_paged_cache.py`` pins this).
+
+* **Allocator** — :class:`BlockAllocator` is a host-side free list; the
+  serving engine maps blocks ahead of the commit frontier
+  (``ensure``) and releases a slot's blocks the moment its request
+  finishes (``release``), so memory turns over at request granularity.
+
+Allocator invariants:
+
+1. block 0 is never handed out;
+2. a block is mapped before any commit that writes into it (the engine
+   calls ``ensure(slot, new_len)`` before each append/chunk step);
+3. every mapped block belongs to exactly one slot; ``release`` returns all
+   of a slot's blocks to the free list and zeroes its page-table row.
+
+Mutation entry points (all jit-safe, fixed shapes):
+
+* :meth:`PagedKVCache.append` — one decode token per *active* slot, with
+  per-slot group commits (masked lanes scatter to the scratch block);
+* :meth:`PagedKVCache.write_chunk` — chunked prefill: ``C`` tokens per
+  slot at per-slot offsets (``C`` a multiple of ``G``), committing up to
+  ``C/G`` groups per slot per call.  Chunk writes must start at per-slot
+  lengths that are multiples of ``G`` (the engine's chunk cadence
+  guarantees this); the final partial chunk may have any ``n_valid``.
+
+Read paths live in :mod:`repro.core.attention_quant`
+(``paged_decode_attend`` / ``paged_chunk_attend``) and the Pallas kernel
+``repro.kernels.asym_decode_attn.paged_asym_decode_attn`` whose BlockSpecs
+index the pools *through the page table* via scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantSpec, QuantArray, quantize, dequantize
+
+__all__ = ["PagedKVCache", "BlockAllocator"]
+
+
+def _cl(lengths: jax.Array, residual: int, group: int) -> jax.Array:
+    """Per-slot committed length (vector form of ``kvcache.commit_len``)."""
+    return jnp.maximum(0, (lengths - residual) // group * group)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """One attention layer's paged cache.  See module docstring for layout."""
+
+    # -- dynamic leaves ------------------------------------------------------
+    k_codes: Optional[jax.Array]   # [N, H, BT*kb//8, D] uint8
+    k_scale: Optional[jax.Array]   # [N, H, BT//G, D]
+    k_zero: Optional[jax.Array]
+    v_codes: Optional[jax.Array]   # [N, H, BT, D*vb//8] uint8
+    v_scale: Optional[jax.Array]   # [N, H, BT, D//vg]
+    v_zero: Optional[jax.Array]
+    k_fp: Optional[jax.Array]      # [N, H, BT, D] (k_bits == 0)
+    v_fp: Optional[jax.Array]
+    resid_k: jax.Array             # [S, H, cap, D]
+    resid_v: Optional[jax.Array]
+    page_table: jax.Array          # [S, NB] int32, 0 = unmapped
+    lengths: jax.Array             # [S] int32
+
+    # -- static aux ----------------------------------------------------------
+    k_bits: int = 2
+    v_bits: int = 2
+    group: int = 32
+    residual: int = 128
+    block_tokens: int = 64
+    num_blocks: int = 0            # pool size N (incl. reserved block 0)
+    max_blocks: int = 0            # page-table width NB (per slot)
+    dtype: jnp.dtype = jnp.bfloat16
+    v_slice_offset: int = -1       # MLA latent caches: V = K[..., off:]
+    v_group: int = 32
+
+    _STATIC = ("k_bits", "v_bits", "group", "residual", "block_tokens",
+               "num_blocks", "max_blocks", "dtype", "v_slice_offset",
+               "v_group")
+    _LEAVES = ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+               "v_zero", "k_fp", "v_fp", "resid_k", "resid_v",
+               "page_table", "lengths")
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, n) for n in self._LEAVES),
+                tuple(getattr(self, n) for n in self._STATIC))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        kw = dict(zip(cls._LEAVES, leaves))
+        kw.update(dict(zip(cls._STATIC, aux)))
+        return cls(**kw)
+
+    # ------------------------------------------------------------------ init
+
+    @staticmethod
+    def default_block_tokens(group: int) -> int:
+        """Default pool block size: ~64 tokens, rounded to the quant group
+        (the engine and the compiled serve-cell shapes must agree on this —
+        both call here)."""
+        return group * max(1, 64 // group)
+
+    @classmethod
+    def init(
+        cls,
+        slots: int,
+        kv_heads: int,
+        head_dim: int,
+        *,
+        num_blocks: int,
+        block_tokens: int = 64,
+        max_tokens: int = 0,
+        k_bits: int = 2,
+        v_bits: int = 2,
+        group: int = 32,
+        residual: int = 128,
+        dtype=jnp.bfloat16,
+        scale_dtype=jnp.bfloat16,
+        v_slice_offset: int = -1,
+    ) -> "PagedKVCache":
+        if block_tokens % group:
+            raise ValueError(
+                f"block_tokens {block_tokens} % group {group} != 0")
+        if residual % group:
+            raise ValueError(f"residual {residual} % group {group} != 0")
+        if max_tokens <= 0:
+            raise ValueError("max_tokens (per-slot capacity) required")
+        max_blocks = -(-max_tokens // block_tokens)
+        cap = residual + group
+        S, H, BT, D = slots, kv_heads, block_tokens, head_dim
+        N = num_blocks + 1  # + reserved scratch block 0
+        v_grp = next(g for g in range(min(group, D), 0, -1) if D % g == 0)
+
+        def z(shape, dt):
+            return jnp.zeros(shape, dt)
+
+        k_codes = k_scale = k_zero = v_codes = v_scale = v_zero = None
+        k_fp = v_fp = resid_v = None
+        if k_bits > 0:
+            k_codes = z((N, H, BT * k_bits // 8, D), jnp.uint8)
+            k_scale = z((N, H, BT // group, D), scale_dtype)
+            k_zero = z((N, H, BT // group, D), scale_dtype)
+        else:
+            k_fp = z((N, H, BT, D), dtype)
+        if v_slice_offset < 0:
+            if v_bits > 0:
+                v_codes = z((N, H, BT, D * v_bits // 8), jnp.uint8)
+                v_scale = z((N, H, BT, D // v_grp), scale_dtype)
+                v_zero = z((N, H, BT, D // v_grp), scale_dtype)
+            else:
+                v_fp = z((N, H, BT, D), dtype)
+            resid_v = z((S, H, cap, D), dtype)
+        return cls(
+            k_codes=k_codes, k_scale=k_scale, k_zero=k_zero,
+            v_codes=v_codes, v_scale=v_scale, v_zero=v_zero,
+            k_fp=k_fp, v_fp=v_fp,
+            resid_k=z((S, H, cap, D), dtype), resid_v=resid_v,
+            page_table=jnp.zeros((S, max_blocks), jnp.int32),
+            lengths=jnp.zeros((S,), jnp.int32),
+            k_bits=k_bits, v_bits=v_bits, group=group, residual=residual,
+            block_tokens=block_tokens, num_blocks=N, max_blocks=max_blocks,
+            dtype=dtype, v_slice_offset=v_slice_offset, v_group=v_grp,
+        )
+
+    # --------------------------------------------------------------- helpers
+
+    @property
+    def slots(self) -> int:
+        return self.resid_k.shape[0]
+
+    @property
+    def resid_cap(self) -> int:
+        return self.residual + self.group
+
+    @property
+    def key_spec(self) -> Optional[QuantSpec]:
+        if self.k_bits == 0:
+            return None
+        return QuantSpec(bits=self.k_bits, group=self.group,
+                         mode="per_channel",
+                         scale_dtype=self.k_scale.dtype)
+
+    @property
+    def value_spec(self) -> Optional[QuantSpec]:
+        if self.v_bits == 0:
+            return None
+        return QuantSpec(bits=self.v_bits, group=self.v_group,
+                         mode="per_token",
+                         scale_dtype=self.v_scale.dtype)
+
+    def commit_lengths(self) -> jax.Array:
+        """Per-slot committed (quantized) token count ``[S] int32``."""
+        return _cl(self.lengths, self.residual, self.group)
+
+    def ring_positions(self) -> jax.Array:
+        """Absolute token index held by each ring slot, per slot ``[S, cap]``
+        (mask with ``>= commit`` and ``< length``)."""
+        cap = self.resid_cap
+        commit = self.commit_lengths()[:, None]
+        s = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        return commit + jnp.mod(s - commit, cap)
+
+    def residual_v(self) -> jax.Array:
+        if self.v_slice_offset >= 0:
+            return self.resid_k[..., self.v_slice_offset:]
+        return self.resid_v
+
+    # ---------------------------------------------------------------- reads
+
+    def dequant_blocks(self, blk: jax.Array):
+        """Dequantized (K, V) for one pool block per slot.
+
+        ``blk [S] int32`` — pool indices (callers pass masked/scratch ids for
+        unmapped entries and mask the result).  Returns ``k [S, H, BT, D]``
+        and ``v [S, H, BT, Dv]`` in ``self.dtype``.
+        """
+        if self.k_bits > 0:
+            q = QuantArray(codes=jnp.take(self.k_codes, blk, axis=0),
+                           scale=jnp.take(self.k_scale, blk, axis=0),
+                           zero=jnp.take(self.k_zero, blk, axis=0),
+                           spec=self.key_spec)
+            k = dequantize(q, self.dtype)
+        else:
+            k = jnp.take(self.k_fp, blk, axis=0)
+        if self.v_slice_offset >= 0:
+            v = k[..., self.v_slice_offset:]
+        elif self.v_bits > 0:
+            q = QuantArray(codes=jnp.take(self.v_codes, blk, axis=0),
+                           scale=jnp.take(self.v_scale, blk, axis=0),
+                           zero=jnp.take(self.v_zero, blk, axis=0),
+                           spec=self.value_spec)
+            v = dequantize(q, self.dtype)
+        else:
+            v = jnp.take(self.v_fp, blk, axis=0)
+        return k, v
+
+    # ------------------------------------------------------------- mutation
+
+    def _ring_gather(self, buf: jax.Array, cols: jax.Array) -> jax.Array:
+        """buf [S, H, cap, D], cols [S, L] → [S, H, L, D]."""
+        S, H, _, D = buf.shape
+        L = cols.shape[1]
+        idx = jnp.broadcast_to(cols[:, None, :, None], (S, H, L, D))
+        return jnp.take_along_axis(buf, idx, axis=2)
+
+    def _ring_scatter(self, buf: jax.Array, cols: jax.Array,
+                      vals: jax.Array, keep_old: jax.Array) -> jax.Array:
+        """Masked scatter into the ring: where ``keep_old [S, L]`` the slot
+        retains its previous value (gather-then-set; ``cols`` are distinct
+        within a call, so the read-modify-write is consistent)."""
+        S, H, _, D = buf.shape
+        L = cols.shape[1]
+        idx = jnp.broadcast_to(cols[:, None, :, None], (S, H, L, D))
+        old = jnp.take_along_axis(buf, idx, axis=2)
+        mix = jnp.where(keep_old[:, None, :, None], old,
+                        vals.astype(buf.dtype))
+        return jax.vmap(  # scatter per slot: [H, cap, D].at[:, cols_s, :]
+            lambda b, c, v: b.at[:, c, :].set(v))(buf, cols, mix)
+
+    def _commit_groups(self, cache: "PagedKVCache", g0: jax.Array,
+                       mask: jax.Array,
+                       k_grp: Optional[jax.Array] = None,
+                       v_grp: Optional[jax.Array] = None) -> "PagedKVCache":
+        """Quantizes + scatters one group of ``G`` tokens per slot.
+
+        ``g0 [S]`` — group start (multiple of G); ``mask [S]`` — which slots
+        actually commit.  Masked lanes scatter into scratch block 0.
+        Sources default to the residual ring (the decode-append path, where
+        the ring is guaranteed to still hold ``[commit, length)``); chunk
+        writes pass explicit ``k_grp/v_grp [S, H, G, D]`` gathered *before*
+        the ring scatter, since a full chunk can overwrite ring entries it
+        is about to commit.
+        """
+        G, BT = self.group, self.block_tokens
+        cap = self.resid_cap
+        S = cache.resid_k.shape[0]
+        aS = jnp.arange(S)
+        cols = jnp.mod(g0[:, None] + jnp.arange(G, dtype=jnp.int32)[None, :],
+                       cap)                                     # [S, G]
+        if k_grp is None:
+            k_grp = self._ring_gather(cache.resid_k, cols)      # [S, H, G, D]
+        if v_grp is None and self.v_slice_offset < 0:
+            v_grp = self._ring_gather(cache.resid_v, cols)
+        blk_idx = jnp.clip(g0 // BT, 0, self.max_blocks - 1)
+        pt = cache.page_table[aS, blk_idx]                      # [S]
+        blk = jnp.where(mask & (pt > 0), pt, 0)
+        off = jnp.mod(g0, BT)                                   # [S]
+
+        upd = {}
+        if self.k_bits > 0:
+            qk = quantize(k_grp, self.key_spec)
+            # codes [S, H, G*kb//8, D] → pool [N, H, BT*kb//8, D]
+            Lc = G * self.k_bits // 8
+            ccols = (off * self.k_bits // 8)[:, None] + jnp.arange(Lc)[None]
+            upd["k_codes"] = cache.k_codes.at[
+                blk[:, None], :, ccols, :].set(
+                jnp.swapaxes(qk.codes, 1, 2))
+            goff = off // G
+            upd["k_scale"] = cache.k_scale.at[blk, :, goff, :].set(
+                qk.scale[:, :, 0, :])
+            upd["k_zero"] = cache.k_zero.at[blk, :, goff, :].set(
+                qk.zero[:, :, 0, :])
+        else:
+            fcols = off[:, None] + jnp.arange(G)[None]
+            upd["k_fp"] = cache.k_fp.at[blk[:, None], :, fcols, :].set(
+                jnp.swapaxes(k_grp.astype(self.dtype), 1, 2))
+        if self.v_slice_offset >= 0:
+            pass  # V lives inside the K store
+        else:
+            vcols = off[:, None] + jnp.arange(G)[None]
+            if self.v_bits > 0:
+                qv = quantize(v_grp, self.value_spec)
+                upd["v_codes"] = cache.v_codes.at[
+                    blk[:, None], :, vcols, :].set(
+                    jnp.swapaxes(qv.codes, 1, 2))
+                upd["v_scale"] = cache.v_scale.at[
+                    blk[:, None], :, vcols, :].set(
+                    jnp.swapaxes(qv.scale, 1, 2))
+                upd["v_zero"] = cache.v_zero.at[
+                    blk[:, None], :, vcols, :].set(
+                    jnp.swapaxes(qv.zero, 1, 2))
+            else:
+                upd["v_fp"] = cache.v_fp.at[blk[:, None], :, vcols, :].set(
+                    jnp.swapaxes(v_grp.astype(self.dtype), 1, 2))
+        return dataclasses.replace(cache, **upd)
+
+    def append(self, k_t: jax.Array, v_t: Optional[jax.Array] = None,
+               active: Optional[jax.Array] = None) -> "PagedKVCache":
+        """Appends one decode token per active slot.
+
+        ``k_t/v_t [S, H, 1, D]``; ``active [S] bool`` (None → all).  Slots
+        with ``active`` False are untouched (length, ring, pools).  Commits
+        one group per slot whenever that slot's fp window overflows
+        ``residual`` — the same cadence as ``LayerKVCache.append``, but
+        per-slot.
+        """
+        G = self.group
+        cap = self.resid_cap
+        S = self.resid_k.shape[0]
+        if active is None:
+            active = jnp.ones((S,), bool)
+        slot = jnp.mod(self.lengths, cap)[:, None]              # [S, 1]
+        keep = ~active[:, None]
+        resid_k = self._ring_scatter(self.resid_k, slot, k_t, keep)
+        resid_v = self.resid_v
+        if self.v_slice_offset < 0:
+            resid_v = self._ring_scatter(self.resid_v, slot, v_t, keep)
+        new_len = self.lengths + active.astype(jnp.int32)
+        cache = dataclasses.replace(
+            self, resid_k=resid_k, resid_v=resid_v, lengths=new_len)
+
+        old_c = _cl(self.lengths, self.residual, G)
+        new_c = _cl(new_len, self.residual, G)
+        return self._commit_groups(cache, old_c, active & (new_c > old_c))
+
+    def write_chunk(self, k: jax.Array, v: Optional[jax.Array] = None,
+                    n_valid: Optional[jax.Array] = None) -> "PagedKVCache":
+        """Chunked-prefill bulk write: ``C`` tokens per slot at each slot's
+        current length.
+
+        ``k/v [S, H, C, D]`` with ``C % G == 0`` and ``C ≤ residual + G``;
+        ``n_valid [S] int32`` — how many of the chunk's tokens are real for
+        each slot (0 skips the slot entirely; a partial final chunk passes
+        ``0 < n_valid < C``).  Per-slot starting lengths must be multiples
+        of ``G`` (the chunk cadence: 0, C, 2C, …).  Commits every completed
+        group in ``[commit(len), commit(len + n_valid))`` — at most ``C/G``
+        per call, handled as a static loop of masked vector commits.
+        """
+        S, H, C, D = k.shape
+        G = self.group
+        cap = self.resid_cap
+        if C % G or C > cap:
+            raise ValueError(f"chunk {C} must be a multiple of group {G} "
+                             f"and ≤ residual+group {cap}")
+        if n_valid is None:
+            n_valid = jnp.full((S,), C, jnp.int32)
+        start = self.lengths
+        old_c = _cl(start, self.residual, G)
+        new_c = _cl(start + n_valid, self.residual, G)
+
+        # Pre-gather commit-group sources from (old ring ∪ chunk) BEFORE the
+        # ring scatter: a full chunk may overwrite ring entries whose tokens
+        # this very call commits (the un-committed span can exceed the ring
+        # capacity mid-call).
+        def group_src(buf_old, chunk, g0):
+            pos = g0[:, None] + jnp.arange(G, dtype=jnp.int32)[None]  # [S,G]
+            ring_vals = self._ring_gather(buf_old, jnp.mod(pos, cap))
+            cidx = jnp.clip(pos - start[:, None], 0, C - 1)
+            idx = jnp.broadcast_to(cidx[:, None, :, None], ring_vals.shape)
+            chunk_vals = jnp.take_along_axis(chunk.astype(buf_old.dtype),
+                                             idx, axis=2)
+            from_chunk = (pos >= start[:, None])[:, None, :, None]
+            return jnp.where(from_chunk, chunk_vals, ring_vals)
+
+        srcs = []
+        for i in range(C // G):
+            g0 = old_c + i * G
+            k_grp = group_src(self.resid_k, k, g0)
+            v_grp = (group_src(self.resid_v, v, g0)
+                     if self.v_slice_offset < 0 else None)
+            srcs.append((g0, k_grp, v_grp))
+
+        cols = jnp.mod(start[:, None] + jnp.arange(C, dtype=jnp.int32)[None],
+                       cap)                                     # [S, C]
+        keep = jnp.arange(C)[None, :] >= n_valid[:, None]
+        resid_k = self._ring_scatter(self.resid_k, cols, k, keep)
+        resid_v = self.resid_v
+        if self.v_slice_offset < 0:
+            resid_v = self._ring_scatter(self.resid_v, cols, v, keep)
+        cache = dataclasses.replace(
+            self, resid_k=resid_k, resid_v=resid_v, lengths=start + n_valid)
+
+        for g0, k_grp, v_grp in srcs:
+            cache = self._commit_groups(cache, g0, g0 < new_c,
+                                        k_grp, v_grp)
+        return cache
+
+    # --------------------------------------------------- host-side plumbing
+
+    def with_pages(self, page_table: np.ndarray,
+                   lengths: np.ndarray) -> "PagedKVCache":
+        """Returns a copy with host-updated page table / lengths (the
+        engine's admission & reclaim path)."""
+        return dataclasses.replace(
+            self,
+            page_table=jnp.asarray(page_table, jnp.int32),
+            lengths=jnp.asarray(lengths, jnp.int32))
+
+    def nbytes(self) -> int:
+        """Total storage in bytes (static accounting)."""
+        total = 0
+        for name in self._LEAVES:
+            a = getattr(self, name)
+            if a is not None:
+                total += int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+        return total
+
+
+class BlockAllocator:
+    """Host-side free-list allocator + page-table mirror for one pool.
+
+    One allocator serves every layer/stage of a model: all layers see the
+    same token stream, so one *logical* block mapping is shared and written
+    into each stage's ``page_table`` leaf (each stage has its own pool
+    arrays; block id ``n`` addresses row ``n`` in every pool).
+
+    ``num_blocks`` counts usable blocks — the scratch block 0 is extra and
+    never handed out.
+    """
+
+    def __init__(self, slots: int, num_blocks: int, max_blocks: int,
+                 *, block_tokens: int, residual: int, group: int):
+        self.slots = slots
+        self.num_blocks = num_blocks
+        self.max_blocks = max_blocks
+        self.block_tokens = block_tokens
+        self.residual = residual
+        self.group = group
+        self._free: deque[int] = deque(range(1, num_blocks + 1))
+        self.page_table = np.zeros((slots, max_blocks), np.int32)
+        self.lengths = np.zeros((slots,), np.int32)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_of(self, slot: int) -> list[int]:
+        return [int(b) for b in self.page_table[slot] if b > 0]
+
+    def _commit_needed(self, length: int) -> int:
+        return max(0, (length - self.residual) // self.group * self.group)
+
+    def blocks_for_len(self, length: int) -> int:
+        """Blocks a slot needs mapped to reach ``length`` tokens."""
+        return -(-self._commit_needed(length) // self.block_tokens)
+
+    def can_admit(self, length: int) -> bool:
+        return self.blocks_for_len(length) <= self.free_blocks
+
+    def ensure(self, slot: int, new_len: int) -> list[int]:
+        """Maps blocks so every commit up to ``new_len`` has a home.
+        Returns newly mapped block ids; raises if the pool is exhausted."""
+        need = self.blocks_for_len(new_len)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"slot {slot}: {new_len} tokens exceed page-table capacity "
+                f"({self.max_blocks} blocks × {self.block_tokens} tokens)")
+        newly = []
+        row = self.page_table[slot]
+        for i in range(need):
+            if row[i] == 0:
+                if not self._free:
+                    raise RuntimeError("block pool exhausted")
+                row[i] = self._free.popleft()
+                newly.append(int(row[i]))
+        return newly
+
+    def advance(self, slot: int, n_tokens: int):
+        self.lengths[slot] += n_tokens
+
+    def release(self, slot: int) -> int:
+        """Frees all of a slot's blocks; returns how many were freed."""
+        row = self.page_table[slot]
+        freed = [int(b) for b in row if b > 0]
+        self._free.extend(freed)
+        row[:] = 0
+        self.lengths[slot] = 0
+        return len(freed)

@@ -16,6 +16,16 @@ Grid ``(B·Hkv, T/BLK)`` — the token dimension iterates minor-most, so the
 online-softmax scratch (m, l, acc in VMEM) accumulates sequentially; outputs
 are partial stats ``(m, l, acc)`` that the wrapper merges with the fp
 residual ring (see ``ops.asym_decode_attention``).
+
+``paged_asym_decode_attn`` is the paged-layout variant: the committed store
+lives in a block *pool* (``repro.core.paged.PagedKVCache``) and the grid's
+token dimension walks the **page table** instead of a contiguous token
+axis.  The page table and per-slot commit lengths are scalar-prefetch
+operands (``pltpu.PrefetchScalarGridSpec``), so every BlockSpec index map
+resolves its HBM block through ``page_table[slot, t]`` before the DMA is
+issued — the vLLM-style paged-attention pattern, here over *sub-byte packed*
+pools.  Unmapped entries (page-table value 0) point at the reserved scratch
+block and are masked via ``commit``/``pt > 0`` inside the kernel.
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["asym_decode_attn"]
+__all__ = ["asym_decode_attn", "paged_asym_decode_attn"]
 
 NEG_INF = -1e30
 
@@ -182,3 +192,147 @@ def asym_decode_attn(
         scratch_shapes=scratch,
         interpret=interpret,
     )(commit, q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero)
+
+
+# =========================================================================
+# Paged variant — BlockSpecs index the pool through the page table
+# =========================================================================
+
+def _paged_kernel(pt_ref, commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref,
+                  vs_ref, vz_ref, m_out, l_out, acc_out, m_scr, l_scr,
+                  acc_scr, *, k_bits: int, v_bits: int, group: int,
+                  v_group: int, block_tokens: int, n_heads: int,
+                  scale: float):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    b = i // n_heads
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- dequantize K block: [BT, D] ----------------------------------
+    k_codes = _unpack_tokens(kc_ref[0, 0], k_bits).astype(jnp.float32)
+    ks = jnp.repeat(ks_ref[0, 0], group, axis=0)
+    kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
+    k = k_codes * ks + kz
+
+    # ---- scores + page-table mask -------------------------------------
+    q = q_ref[0, 0].astype(jnp.float32)                # [r, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = (t * block_tokens
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block_tokens), 1))
+    valid = (pos < commit_ref[b]) & (pt_ref[b, t] > 0)
+    s = jnp.where(valid, s, NEG_INF)                   # [r, BT]
+
+    # ---- dequantize V block: [BT, Dv] ---------------------------------
+    v_codes = _unpack_channels(vc_ref[0, 0], v_bits).astype(jnp.float32)
+    vs = jnp.repeat(vs_ref[0, 0], v_group, axis=1)
+    vz = jnp.repeat(vz_ref[0, 0], v_group, axis=1)
+    v = v_codes * vs + vz
+
+    # ---- online softmax -----------------------------------------------
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _finalize():
+        m_out[0, 0] = m_scr[...]
+        l_out[0, 0] = l_scr[...]
+        acc_out[0, 0] = acc_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "v_bits", "group", "v_group", "block_tokens",
+                     "scale", "interpret"))
+def paged_asym_decode_attn(
+    q: jax.Array,           # [S, Hkv, r, D]
+    k_codes: jax.Array,     # [N, Hkv, BT·k_bits/8, D] uint8 pool
+    k_scale: jax.Array,     # [N, Hkv, BT/G, D]
+    k_zero: jax.Array,
+    v_codes: jax.Array,     # [N, Hkv, BT, Dv·v_bits/8] uint8 pool
+    v_scale: jax.Array,     # [N, Hkv, BT, Dv/vg]
+    v_zero: jax.Array,
+    page_table: jax.Array,  # [S, NB] int32 (0 = unmapped/scratch)
+    commit: jax.Array,      # [S] int32 per-slot committed length
+    *,
+    k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
+    block_tokens: int = 64, scale: float, interpret: bool = True,
+):
+    """Partial flash-decode stats over a *paged* committed store.
+
+    The grid is ``(S·H, NB)``; the token dimension walks page-table columns
+    and each in-spec index map dereferences ``page_table[slot, t]`` (scalar
+    prefetch) to pick the pool block to DMA.  Per-slot variable lengths are
+    handled by the ``commit`` mask — slots only pay HBM traffic for blocks
+    the grid touches, which is bounded by the page-table width.
+    Returns ``(m [S,H,r], l [S,H,r], acc [S,H,r,Dv])`` in fp32.
+    """
+    S, H, r, D = q.shape
+    BT = block_tokens
+    v_group = v_group or group
+    Dv = v_scale.shape[3] * v_group
+    NB = page_table.shape[1]
+    grid = (S * H, NB)
+    kb, vb = k_bits, v_bits
+
+    def bh(i):
+        return (i // H, i % H)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, commit
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, r, D), lambda i, t, pt, cm: (*bh(i), 0, 0)),
+            pl.BlockSpec((1, 1, BT * kb // 8, D),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+            pl.BlockSpec((1, 1, BT // group, D),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+            pl.BlockSpec((1, 1, BT // group, D),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv * vb // 8),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv // v_group),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv // v_group),
+                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, r), lambda i, t, pt, cm: (*bh(i), 0)),
+            pl.BlockSpec((1, 1, r), lambda i, t, pt, cm: (*bh(i), 0)),
+            pl.BlockSpec((1, 1, r, Dv), lambda i, t, pt, cm: (*bh(i), 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r, Dv), jnp.float32),
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((S, H, r), jnp.float32),
+        jax.ShapeDtypeStruct((S, H, r), jnp.float32),
+        jax.ShapeDtypeStruct((S, H, r, Dv), jnp.float32),
+    ]
+    kernel = functools.partial(
+        _paged_kernel, k_bits=k_bits, v_bits=v_bits, group=group,
+        v_group=v_group, block_tokens=BT, n_heads=H, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(page_table, commit, q, k_codes, k_scale, k_zero,
+      v_codes, v_scale, v_zero)

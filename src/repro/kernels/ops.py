@@ -18,11 +18,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kvcache import LayerKVCache
-from repro.kernels.asym_decode_attn import asym_decode_attn
+from repro.core.paged import PagedKVCache
+from repro.kernels.asym_decode_attn import (asym_decode_attn,
+                                            paged_asym_decode_attn)
 from repro.kernels.flash_prefill import flash_prefill_kernel
 from repro.kernels.rtn_pack import rtn_pack
 
-__all__ = ["asym_decode_attention", "rtn_pack", "flash_prefill_kernel"]
+__all__ = ["asym_decode_attention", "paged_asym_decode_attention",
+           "rtn_pack", "flash_prefill_kernel"]
+
+
+def _fold_residual_ring(m, l, acc, qh, resid_k, resid_v, valid, scale):
+    """Merges the fp residual ring into partial flash stats and normalizes.
+
+    ``m/l [B,H,r]``, ``acc [B,H,r,Dv]`` — kernel outputs; ``valid [B, cap]``
+    masks live ring slots per batch row.  Shared by the contiguous and
+    paged kernel wrappers so the merge numerics can never diverge.
+    """
+    s = jnp.einsum("bhrd,bhkd->bhrk", qh.astype(jnp.float32),
+                   resid_k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.where(valid[:, None, None],
+                  jnp.exp(s - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhrk,bhkd->bhrd", p, resid_v.astype(jnp.float32))
+    return acc_new / jnp.maximum(l_new, 1e-30)[..., None]
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))
@@ -57,15 +80,59 @@ def asym_decode_attention(
     # fold in the fp residual ring (tiny — pure jnp)
     pos = cache.ring_positions()
     valid = (pos >= cache.commit_length()) & (pos < cache.length)
-    s = jnp.einsum("bhrd,bhkd->bhrk", qh.astype(jnp.float32),
-                   cache.resid_k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None], s, -1e30)
-    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-    p = jnp.where(valid[None, None, None],
-                  jnp.exp(s - m_new[..., None]), 0.0)
-    alpha = jnp.exp(m - m_new)
-    l_new = l * alpha + jnp.sum(p, axis=-1)
-    acc_new = acc * alpha[..., None] + jnp.einsum(
-        "bhrk,bhkd->bhrd", p, cache.residual_v().astype(jnp.float32))
-    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+    valid = jnp.broadcast_to(valid[None], (B, valid.shape[0]))
+    out = _fold_residual_ring(m, l, acc, qh, cache.resid_k,
+                              cache.residual_v(), valid, scale)
     return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_asym_decode_attention(
+    q: jax.Array,            # [S, Hq, 1, D]
+    cache: PagedKVCache,
+    *,
+    window: Optional[int] = None,
+    interpret: bool = True,
+):
+    """Kernel-backed decode attention over a *paged* quantized cache.
+
+    The Pallas kernel walks each slot's page table (scalar prefetch drives
+    the BlockSpec index maps) and returns partial flash stats over the
+    committed pool blocks; this wrapper folds in the per-slot fp residual
+    ring.  Numerically matches ``attention_quant.paged_decode_attend`` for
+    **global (non-windowed) layers**.  Windowed layers need a per-slot
+    lower-bound mask the kernel doesn't take yet — unlike the contiguous
+    layout, a paged window cache keeps full-capacity page tables, so the
+    kernel would silently attend beyond the window; refuse instead.
+    """
+    if window is not None:
+        raise NotImplementedError(
+            "paged kernel path has no sliding-window mask yet — use "
+            "attention_quant.paged_decode_attend for L layers")
+    S, Hq, Sq, D = q.shape
+    assert Sq == 1
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    scale = D ** -0.5
+    qh = q.reshape(S, Hkv, r, D)
+    commit = cache.commit_lengths().astype(jnp.int32)
+
+    assert cache.k_bits > 0 and cache.v_bits > 0 and \
+        cache.v_slice_offset < 0, \
+        "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
+    m, l, acc = paged_asym_decode_attn(
+        qh, cache.k_codes, cache.k_scale.astype(jnp.float32),
+        cache.k_zero.astype(jnp.float32), cache.v_codes,
+        cache.v_scale.astype(jnp.float32),
+        cache.v_zero.astype(jnp.float32),
+        cache.page_table, commit,
+        k_bits=cache.k_bits, v_bits=cache.v_bits, group=cache.group,
+        v_group=cache.v_group, block_tokens=cache.block_tokens,
+        scale=scale, interpret=interpret)
+
+    # fold in the per-slot fp residual ring (tiny — pure jnp)
+    pos = cache.ring_positions()                       # [S, cap]
+    valid = (pos >= commit[:, None]) & (pos < cache.lengths[:, None])
+    out = _fold_residual_ring(m, l, acc, qh, cache.resid_k,
+                              cache.residual_v(), valid, scale)
+    return out.reshape(S, Hq, 1, D).astype(q.dtype)

@@ -8,23 +8,31 @@ host platform.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5 exposes explicit axis types; 0.4.x meshes are untyped
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 v5e pod (data × model), or 2×16×16 (pod × data × model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh for tests on however many devices exist."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -17,9 +17,16 @@ __all__ = ["ShapeCell", "SHAPES", "LONG_OK", "cells_for", "all_cells"]
 @dataclasses.dataclass(frozen=True)
 class ShapeCell:
     name: str
-    kind: str  # train | prefill | decode
+    kind: str  # train | prefill | decode | chunk
     seq: int
     batch: int
+    # Paged serving cells (variable-length continuous batching): ``layout``
+    # selects the PagedKVCache store; ``chunk`` is the chunked-prefill step
+    # width (kind="chunk"; 0 → residual+group); ``block_tokens`` the paged
+    # block size (0 → engine default).
+    layout: str = "contiguous"  # contiguous | paged
+    chunk: int = 0
+    block_tokens: int = 0
 
 
 SHAPES = {
@@ -27,6 +34,15 @@ SHAPES = {
     "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
     "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
     "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+    # Paged serving cells — the continuous-batching engine's two compiled
+    # shapes (chunked prefill + per-slot decode) at production scale.
+    # Opt-in by name (not part of the assigned per-arch grid returned by
+    # cells_for — paged serving doesn't cover SSM/enc-dec/MLA archs yet).
+    "serve_chunk_8k": ShapeCell("serve_chunk_8k", "chunk", 8192, 64,
+                                layout="paged", chunk=256,
+                                block_tokens=256),
+    "serve_decode_8k": ShapeCell("serve_decode_8k", "decode", 8192, 64,
+                                 layout="paged", block_tokens=256),
 }
 
 # Sub-quadratic archs that run the 500k-context decode cell.

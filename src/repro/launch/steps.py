@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.asymkv import AsymKVPolicy
 from repro.core.kvcache import LayerKVCache
+from repro.core.paged import PagedKVCache
 from repro.distributed.sharding import (
     batch_pspec, cast_tree, default_rules, param_pspecs, param_shardings,
 )
@@ -79,7 +80,14 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
     def sd(shape, dt):
         return jax.ShapeDtypeStruct(shape, dt)
 
+    if cell.kind == "chunk":
+        C = cell.chunk or 256
+        return {"tokens": sd((B, C), i32), "n_valid": sd((B,), i32)}
     if cell.kind == "decode":
+        if cell.layout == "paged":
+            # per-slot positions + active mask (variable-length batching)
+            return {"token": sd((B,), i32), "pos": sd((B,), i32),
+                    "active": sd((B,), jnp.bool_)}
         return {"token": sd((B,), i32), "pos": sd((), i32)}
 
     specs: dict[str, Any] = {}
@@ -102,6 +110,17 @@ def cache_structs(model: Model, cell: ShapeCell, dtype=jnp.bfloat16):
     """ShapeDtypeStructs of the serving caches (no allocation)."""
     return jax.eval_shape(
         lambda: model.init_caches(cell.batch, cell.seq, dtype=dtype))
+
+
+def paged_cache_structs(model: Model, cell: ShapeCell, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the *paged* serving caches (no allocation).
+    The pool is fully backed by default: ``slots × ceil(seq / BT)``."""
+    BT = cell.block_tokens or PagedKVCache.default_block_tokens(model.group)
+    num_blocks = cell.batch * (-(-cell.seq // BT))
+    return jax.eval_shape(
+        lambda: model.init_paged_caches(
+            cell.batch, cell.seq, num_blocks=num_blocks,
+            block_tokens=BT, dtype=dtype))
 
 
 # ---------------------------------------------------------------- shardings
@@ -163,6 +182,37 @@ def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
             **leaves,
             **{n: getattr(c, n) for n in LayerKVCache._STATIC})
 
+    def one_paged(c: PagedKVCache):
+        """Paged caches: the block *pool* has no batch axis (blocks are
+        slot-agnostic), so pools shard over KV heads on the model axis;
+        the per-slot leaves (ring, page table, lengths) shard over the
+        data axes like an ordinary batch dim."""
+        S = c.resid_k.shape[1]
+        H = c.resid_k.shape[2]
+        b_ax = _axes_fit(S, ("pod", "data"), mesh)
+        b_used = b_ax if isinstance(b_ax, tuple) else \
+            ((b_ax,) if b_ax else ())
+        h_ax = mdl if (mdl and H % mesh.shape[mdl] == 0 and H > 1
+                       and mdl not in b_used) else None
+        pool_names = ("k_codes", "k_scale", "k_zero", "v_codes",
+                      "v_scale", "v_zero", "k_fp", "v_fp")
+
+        def leaf(name, a):
+            if a is None:
+                return None
+            if name == "lengths":
+                return P(None, b_ax)
+            if name == "page_table":
+                return P(None, b_ax, None)
+            if name in pool_names:  # [L, N, H, T…, D…]
+                return P(None, None, h_ax, *([None] * (a.ndim - 3)))
+            return P(None, b_ax, h_ax, *([None] * (a.ndim - 3)))
+
+        leaves = {n: leaf(n, getattr(c, n)) for n in PagedKVCache._LEAVES}
+        return PagedKVCache(
+            **leaves,
+            **{n: getattr(c, n) for n in PagedKVCache._STATIC})
+
     def one_ssm(s: SSMState):
         B = s.conv.shape[1]
         b_ax = _axes_fit(B, ("pod", "data"), mesh)
@@ -176,13 +226,16 @@ def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
     def dispatch(x):
         if isinstance(x, LayerKVCache):
             return one_cache(x)
+        if isinstance(x, PagedKVCache):
+            return one_paged(x)
         if isinstance(x, SSMState):
             return one_ssm(x)
         return x
 
     return jax.tree.map(
         dispatch, caches_struct,
-        is_leaf=lambda x: isinstance(x, (LayerKVCache, SSMState)))
+        is_leaf=lambda x: isinstance(
+            x, (LayerKVCache, PagedKVCache, SSMState)))
 
 
 def _to_shardings(pspec_tree, mesh):
@@ -248,6 +301,41 @@ def make_step_bundle(
 
     # serving: params in bf16
     params_struct = spec_shapes(model.spec, dtype=jnp.bfloat16)
+
+    if cell.layout == "paged" or cell.kind == "chunk":
+        # Paged serving cells: chunked prefill + per-slot decode over the
+        # block-pool cache (variable-length continuous batching).
+        caches_struct = paged_cache_structs(model, cell)
+        c_pspecs = cache_pspecs(caches_struct, mesh)
+        c_shard = _to_shardings(c_pspecs, mesh)
+        rep = NamedSharding(mesh, P())
+        if cell.kind == "chunk":
+            def cfn(params, tokens, caches, n_valid):
+                return model.prefill_chunk(params, tokens, caches, n_valid)
+            return StepBundle(
+                fn=cfn,
+                args=(params_struct, inputs["tokens"], caches_struct,
+                      inputs["n_valid"]),
+                in_shardings=(p_shard, in_batch_shard["tokens"], c_shard,
+                              in_batch_shard["n_valid"]),
+                out_shardings=(rep, c_shard),
+                model=model,
+                donate_argnums=(2,),
+            )
+
+        def dfn(params, token, caches, pos, active):
+            return model.decode_step(params, token, caches, pos, active)
+        return StepBundle(
+            fn=dfn,
+            args=(params_struct, inputs["token"], caches_struct,
+                  inputs["pos"], inputs["active"]),
+            in_shardings=(p_shard, in_batch_shard["token"], c_shard,
+                          in_batch_shard["pos"], in_batch_shard["active"]),
+            out_shardings=(rep, c_shard),
+            model=model,
+            donate_argnums=(2,),
+        )
+
     caches_struct = cache_structs(model, cell)
 
     # Sequence-parallel decode policy: engage when KV heads can't shard over

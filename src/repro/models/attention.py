@@ -8,6 +8,12 @@ Modes:
   * ``train``   — no cache; blocked flash attention (causal or windowed).
   * ``prefill`` — same forward, then bulk-quantizes K/V into the cache.
   * ``decode``  — appends one token and attends over the quantized cache.
+    With a :class:`~repro.core.paged.PagedKVCache`, every slot advances at
+    its *own* length (``valid`` masks idle slots) and attention reads
+    through the page table.
+  * ``chunk``   — chunked prefill over a paged cache: writes ``C`` tokens
+    per slot at per-slot offsets, then attends the chunk queries over
+    history + chunk with positional causal masking.
 """
 
 from __future__ import annotations
@@ -18,11 +24,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention_quant import decode_attend, flash_prefill
+from repro.core.attention_quant import (decode_attend, flash_prefill,
+                                        paged_chunk_attend,
+                                        paged_decode_attend)
 from repro.core.kvcache import LayerKVCache
+from repro.core.paged import PagedKVCache
 from repro.models.layers import Spec, apply_rope, linear, rms_norm
 
-__all__ = ["attention_specs", "attention_fwd", "init_attn_cache"]
+__all__ = ["attention_specs", "attention_fwd", "init_attn_cache",
+           "init_paged_attn_cache"]
 
 
 def attention_specs(cfg: ModelConfig) -> dict:
@@ -69,6 +79,29 @@ def init_attn_cache(
         batch, cfg.n_kv_heads, cfg.resolved_head_dim, cap,
         k_bits=k_bits, v_bits=v_bits, group=group, residual=residual,
         dtype=dtype)
+
+
+def init_paged_attn_cache(
+    cfg: ModelConfig,
+    slots: int,
+    k_bits: int,
+    v_bits: int,
+    *,
+    num_blocks: int,
+    block_tokens: int,
+    max_tokens: int,
+    group: int = 32,
+    residual: int = 128,
+    dtype=jnp.bfloat16,
+) -> PagedKVCache:
+    """Paged cache for one attention layer.  Windowed layers use the same
+    full-capacity page table (the window is enforced by position masks in
+    the paged attends); freeing out-of-window blocks is a follow-on."""
+    return PagedKVCache.init(
+        slots, cfg.n_kv_heads, cfg.resolved_head_dim,
+        num_blocks=num_blocks, block_tokens=block_tokens,
+        max_tokens=max_tokens, k_bits=k_bits, v_bits=v_bits,
+        group=group, residual=residual, dtype=dtype)
 
 
 def _train_attention(q, k, v, cfg: ModelConfig, *, window, q_block,
@@ -147,7 +180,7 @@ def attention_fwd(
     x: jax.Array,
     cfg: ModelConfig,
     *,
-    mode: str,  # train | prefill | decode
+    mode: str,  # train | prefill | decode | chunk
     positions: jax.Array,
     cache: Optional[LayerKVCache] = None,
     window: Optional[int] = None,
@@ -157,12 +190,22 @@ def attention_fwd(
     decode_block: int = 1024,
     seqpar_axes: Optional[tuple] = None,
     seqpar_min: int = 1 << 62,
+    valid: Optional[jax.Array] = None,  # [S] — paged decode/chunk validity
 ):
     """Returns (out [B,S,d], updated cache or None)."""
     theta = cfg.rope_theta if theta is None else theta
     q, k, v = _qkv(params, x, cfg, positions, theta)
 
-    if mode == "decode":
+    if mode == "chunk":
+        assert isinstance(cache, PagedKVCache)
+        q_start = cache.lengths
+        cache = cache.write_chunk(k, v, valid)
+        out = paged_chunk_attend(q, cache, q_start, window=window)
+    elif mode == "decode" and isinstance(cache, PagedKVCache):
+        active = None if valid is None else valid > 0
+        cache = cache.append(k, v, active)
+        out = paged_decode_attend(q, cache, window=window)
+    elif mode == "decode":
         assert cache is not None and q.shape[2] == 1
         cache = cache.append(k, v)
         # Windowed layers use ring caches sized ≤ window+residual; the ring

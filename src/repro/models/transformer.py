@@ -292,10 +292,45 @@ class Model:
                     caches[f"run{i}_stage{j}_cross"] = self._stack(cross, n)
         return caches
 
+    def supports_paged(self) -> bool:
+        """Paged serving covers decoder-only attention archs (A/E/L/G/Z).
+        SSM chunk-state masking, encoder-decoder cross caches, MLA latent
+        paging and vision prefixes are ROADMAP follow-ons."""
+        cfg = self.cfg
+        return not (cfg.is_encdec or cfg.mla or cfg.frontend
+                    or "M" in cfg.pattern)
+
+    def init_paged_caches(self, slots: int, max_tokens: int, *,
+                          num_blocks: int, block_tokens: int,
+                          dtype=jnp.bfloat16) -> dict:
+        """Paged cache pytree: ``run{i}_stage{j}`` → stacked PagedKVCache.
+
+        Every stage gets its own block *pool* (its bit-widths differ), but
+        all stages share one logical block mapping: the engine's
+        ``BlockAllocator`` hands out block ids valid in every pool, and the
+        per-stage ``page_table`` leaves are kept identical.
+        """
+        cfg = self.cfg
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"paged serving unsupported for {cfg.name} "
+                "(SSM/enc-dec/MLA/vision-frontend)")
+        caches: dict[str, Any] = {}
+        for i, run in enumerate(self.runs):
+            for j, stg in enumerate(self.run_stages(run)):
+                n = stg.hi - stg.lo
+                one = attn_mod.init_paged_attn_cache(
+                    cfg, slots, stg.k_bits, stg.v_bits,
+                    num_blocks=num_blocks, block_tokens=block_tokens,
+                    max_tokens=max_tokens, group=self.group,
+                    residual=self.residual, dtype=dtype)
+                caches[f"run{i}_stage{j}"] = self._stack(one, n)
+        return caches
+
     # ------------------------------------------------------------ blocks
 
     def _attn_block(self, p, x, run: Run, *, mode, positions, cache=None,
-                    cross_cache=None, enc_out=None, aux=None):
+                    cross_cache=None, enc_out=None, aux=None, valid=None):
         """One attention block.  Returns (x, cache, cross_cache, aux)."""
         cfg = self.cfg
         window = cfg.window if run.kind == "L" else None
@@ -311,7 +346,7 @@ class Model:
                 p["attn"], h, cfg, mode=mode, positions=positions,
                 cache=cache, window=window, theta=theta,
                 seqpar_axes=self.seqpar_axes,
-                seqpar_min=self.seqpar_min_tokens)
+                seqpar_min=self.seqpar_min_tokens, valid=valid)
         if cfg.sandwich_norm:
             a_out = _apply_norm(cfg, p["post_attn_norm"], a_out)
         x = x + a_out
@@ -519,7 +554,7 @@ class Model:
             stacked, one)
 
     def _serve_runs(self, params, x, caches, *, mode, positions,
-                    enc_out=None):
+                    enc_out=None, valid=None):
         """Shared prefill/decode traversal.
 
         Caches are scanned as part of the CARRY with per-iteration
@@ -531,6 +566,10 @@ class Model:
         new_caches = {}
         for i, run in enumerate(self.runs):
             if run.kind == "M":
+                if mode == "chunk":
+                    raise NotImplementedError(
+                        "chunked prefill over SSM runs needs masked state "
+                        "updates (see init_paged_caches gating)")
                 st = caches[f"run{i}_stage0"]
                 if mode == "prefill":
                     def mstep(p, s, x):
@@ -571,7 +610,8 @@ class Model:
                            if ccache is not None else None)
                     x, c1, cc1, _ = self._attn_block(
                         p, x, run, mode=mode, positions=positions,
-                        cache=c1, cross_cache=cc1, enc_out=enc_out)
+                        cache=c1, cross_cache=cc1, enc_out=enc_out,
+                        valid=valid)
                     new_caches[key] = jax.tree.map(lambda a: a[None], c1)
                     if cc1 is not None:
                         new_caches[key + "_cross"] = jax.tree.map(
@@ -591,13 +631,15 @@ class Model:
                         cc = self._take_layer(cstk, idx)
                         x2, c2, cc2, _ = self._attn_block(
                             p, x, run, mode=mode, positions=positions,
-                            cache=c, cross_cache=cc, enc_out=enc_out)
+                            cache=c, cross_cache=cc, enc_out=enc_out,
+                            valid=valid)
                         return (x2, self._put_layer(stk, c2, idx),
                                 self._put_layer(cstk, cc2, idx)), None
                     x, stk = carry
                     c = self._take_layer(stk, idx)
                     x2, c2, _, _ = self._attn_block(
-                        p, x, run, mode=mode, positions=positions, cache=c)
+                        p, x, run, mode=mode, positions=positions, cache=c,
+                        valid=valid)
                     return (x2, self._put_layer(stk, c2, idx)), None
 
                 if has_cross:
@@ -627,18 +669,53 @@ class Model:
         logits = self._lm_head(params, x[:, -1:])[:, 0]
         return logits, caches
 
+    def prefill_chunk(self, params, tokens: jax.Array, caches: dict,
+                      n_valid: jax.Array):
+        """One chunked-prefill step over paged caches.
+
+        ``tokens [S, C]`` — each slot's next ``C`` prompt tokens, written at
+        that slot's current cache length (per-slot variable offsets);
+        ``n_valid [S]`` — real tokens per slot this step (0 = slot idle, a
+        partial final chunk passes ``< C``).  One compiled shape serves
+        every prompt length — the engine pads the final chunk instead of
+        recompiling.  Returns (per-slot logits at each slot's last valid
+        chunk row ``[S, V]``, caches).
+        """
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        S, C = tokens.shape
+        x = embed_lookup(params["embed"], tokens, dtype)
+        if cfg.norm_plus_one:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+        starts = None
+        for c in caches.values():  # all stages share one length vector
+            starts = c.lengths[0]
+            break
+        positions = starts[:, None, None] + jnp.arange(C, dtype=jnp.int32)
+        x, caches = self._serve_runs(params, x, caches, mode="chunk",
+                                     positions=positions, valid=n_valid)
+        x = _apply_norm(cfg, params["final_norm"], x)
+        last = jnp.clip(n_valid - 1, 0, C - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = self._lm_head(params, x_last)[:, 0]
+        return logits, caches
+
     def decode_step(self, params, token: jax.Array, caches: dict,
-                    pos: jax.Array):
-        """One decode step.  token: [B] int32, pos: scalar int32 (stream
-        position of this token).  Returns (logits [B,V], caches)."""
+                    pos: jax.Array, active: Optional[jax.Array] = None):
+        """One decode step.  token: [B] int32; pos: scalar int32 (stream
+        position of this token — the static-batch path) or [B] int32
+        per-slot positions (paged variable-length serving).  ``active [B]``
+        masks idle slots when paged.  Returns (logits [B,V], caches)."""
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         x = embed_lookup(params["embed"], token[:, None], dtype)
         if cfg.norm_plus_one:
             x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
-        positions = jnp.asarray(pos).reshape(1)
+        pos = jnp.asarray(pos)
+        positions = (pos.reshape(1) if pos.ndim == 0
+                     else pos.reshape(-1, 1, 1))
         x, caches = self._serve_runs(params, x, caches, mode="decode",
-                                     positions=positions)
+                                     positions=positions, valid=active)
         x = _apply_norm(cfg, params["final_norm"], x)
         logits = self._lm_head(params, x)[:, 0]
         return logits, caches

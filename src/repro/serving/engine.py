@@ -1,16 +1,35 @@
-"""Batched serving engine: continuous-batching slots over AsymKV caches.
+"""Continuous-batching serving engine over paged AsymKV caches.
 
-The engine drives the jit'd ``prefill`` / ``decode_step`` from
-``repro.launch.steps`` with a fixed slot count (static shapes).  Requests
-queue until a slot frees; the decode loop runs one fused step for all
-active slots per tick.  Slot lifecycle:
+Two modes, one API:
 
-  admit → prefill (pads the prompt batch to the slot shape, quantizes the
-  prompt cache) → decode ticks (append+attend on the quantized cache) →
-  finish on EOS/max_tokens → slot returns to the pool.
+* **Paged (default for decoder-only attention archs)** — variable-length
+  continuous batching on :class:`~repro.core.paged.PagedKVCache`:
 
-Single-host CPU works end-to-end (the ``serve_requests`` example); on a pod
-the same engine runs with the sharded step functions.
+  - *admission*: a request takes any free slot; its prompt is **not**
+    padded to a batch-wide length;
+  - *chunked prefill*: every mid-prompt slot consumes its next
+    ``prefill_chunk`` tokens per step through one jit'd
+    ``model.prefill_chunk`` call of fixed shape ``[slots, C]`` — prompts
+    of any mix of lengths share one compilation (the final partial chunk
+    is padded and masked via ``n_valid``), so admitting a new length never
+    recompiles;
+  - *decode*: one jit'd ``model.decode_step`` with per-slot positions and
+    an active mask — slots at different stream lengths decode in the same
+    tick;
+  - *reclaim*: on EOS/max-tokens the slot frees immediately and its cache
+    blocks return to the :class:`~repro.core.paged.BlockAllocator` free
+    list, ready for the next admission.
+
+  The engine owns the host-side block mapping (one logical mapping shared
+  by every layer/stage) and pushes it into the cache pytree's
+  ``page_table``/``lengths`` leaves before each step (`_sync_caches`).
+
+* **Legacy static batching** — the original pad-to-``prompt_len``
+  generational engine, kept for archs the paged path doesn't cover yet
+  (SSM hybrids, encoder-decoder, MLA; see ``Model.supports_paged``).
+
+Single-host CPU works end-to-end (the ``serve_requests`` example); on a
+pod the same engine runs with the sharded step functions.
 """
 
 from __future__ import annotations
@@ -18,13 +37,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.asymkv import AsymKVPolicy
+from repro.core.paged import BlockAllocator, PagedKVCache
 from repro.models.transformer import Model
 
 __all__ = ["Request", "ServingEngine"]
@@ -46,21 +65,58 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, slots: int,
-                 max_tokens: int, prompt_len: int,
-                 dtype=jnp.float32):
+                 max_tokens: int, prompt_len: Optional[int] = None,
+                 dtype=jnp.float32, paged: Optional[bool] = None,
+                 block_tokens: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 num_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_tokens = max_tokens
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len or 64
         self.dtype = dtype
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-        self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
-        self.pos = 0
-        self._pending_prefill: list[Request] = []
+        self.paged = model.supports_paged() if paged is None else paged
+
+        if not self.paged and prompt_len is None:
+            raise ValueError(
+                "legacy static batching requires prompt_len (prompts are "
+                "padded/truncated to it); the paged path needs none")
+
+        if self.paged:
+            G, R = model.group, model.residual
+            BT = block_tokens or PagedKVCache.default_block_tokens(G)
+            self.block_tokens = BT
+            self.chunk = prefill_chunk or (R + G)
+            if self.chunk % G or self.chunk > R + G:
+                raise ValueError(
+                    f"prefill_chunk {self.chunk} must be a multiple of "
+                    f"group {G} and ≤ residual+group {R + G}")
+            max_blocks = -(-max_tokens // BT)
+            self.num_blocks = num_blocks or slots * max_blocks
+            self.caches = model.init_paged_caches(
+                slots, max_tokens, num_blocks=self.num_blocks,
+                block_tokens=BT, dtype=dtype)
+            self.alloc = BlockAllocator(
+                slots, self.num_blocks, max_blocks,
+                block_tokens=BT, residual=R, group=G)
+            # caches are donated: the block pool is the dominant buffer and
+            # must update in place, not copy per tick (mirrors steps.py's
+            # bundles; a no-op on CPU, load-bearing on TPU)
+            self._chunk_fn = jax.jit(model.prefill_chunk,
+                                     donate_argnums=(2,))
+            self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+            # per-slot host state
+            self._off = np.zeros(slots, np.int64)     # prompt tokens consumed
+            self._next_tok = np.zeros(slots, np.int32)
+            self.rejected: list[Request] = []
+        else:
+            self._prefill = jax.jit(model.prefill)
+            self._decode = jax.jit(model.decode_step)
+            self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
+            self.pos = 0
 
     # ----------------------------------------------------------- admission
 
@@ -69,16 +125,180 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
-        free = [i for i, r in enumerate(self.active) if r is None]
         newly = []
+        free = [i for i, r in enumerate(self.active) if r is None]
         while free and self.queue:
+            req = self.queue[0]
+            if self.paged:
+                # Reject requests whose PROMPT can never fit the per-slot
+                # page table (crashing mid-run would abandon every other
+                # in-flight request); max_new_tokens overruns are fine —
+                # they finish at capacity instead.
+                need = self.alloc.blocks_for_len(len(req.prompt) + 2)
+                if need > self.alloc.max_blocks:
+                    self.queue.popleft()
+                    req.done = True
+                    req.t_done = time.time()
+                    self.rejected.append(req)
+                    continue
+                if need > self.alloc.free_blocks:
+                    if self.alloc.free_blocks == self.alloc.num_blocks:
+                        # pool is idle yet too small — waiting won't help
+                        self.queue.popleft()
+                        req.done = True
+                        req.t_done = time.time()
+                        self.rejected.append(req)
+                        continue
+                    break  # head-of-line waits for blocks to free up
             i = free.pop(0)
-            req = self.queue.popleft()
+            self.queue.popleft()
             self.active[i] = req
+            if self.paged:
+                self._off[i] = 0
+                self._next_tok[i] = 0  # don't inherit the previous
+                # occupant's last token (empty prompts decode from 0)
+                # Reserve the prompt's blocks NOW: admission decisions must
+                # see each other's commitments, or concurrent admissions
+                # oversubscribe an undersized pool and ensure() blows up
+                # mid-prefill.
+                self.alloc.ensure(i, len(req.prompt) + 2)
             newly.append((i, req))
         return newly
 
-    # ----------------------------------------------------------- stepping
+    # ------------------------------------------------------ paged plumbing
+
+    def _sync_caches(self):
+        """Pushes the host block mapping + lengths into every stage cache."""
+        pt = jnp.asarray(self.alloc.page_table)
+        ln = jnp.asarray(self.alloc.lengths, jnp.int32)
+
+        def upd(c):
+            if not isinstance(c, PagedKVCache):
+                return c
+            return dataclasses.replace(
+                c,
+                page_table=jnp.broadcast_to(pt[None], c.page_table.shape),
+                lengths=jnp.broadcast_to(ln[None], c.lengths.shape))
+
+        self.caches = {k: upd(c) for k, c in self.caches.items()}
+
+    def _finish(self, i: int, now: float):
+        r = self.active[i]
+        r.done = True
+        r.t_done = now
+        self.active[i] = None
+        self.alloc.release(i)
+        self._off[i] = 0
+
+    def jit_stats(self) -> dict:
+        """Compilation counts of the step functions — the serving test
+        asserts these stay at 1 across mixed prompt lengths."""
+        stats = {"decode": int(self._decode._cache_size())}
+        if self.paged:
+            stats["prefill_chunk"] = int(self._chunk_fn._cache_size())
+        else:
+            stats["prefill"] = int(self._prefill._cache_size())
+        return stats
+
+    # ------------------------------------------------------- paged stepping
+
+    def _prefilling(self) -> list[int]:
+        return [i for i, r in enumerate(self.active)
+                if r is not None and self._off[i] < len(r.prompt)]
+
+    def _step_prefill_chunk(self):
+        """All mid-prompt slots consume their next chunk in one fused call."""
+        C = self.chunk
+        toks = np.zeros((self.slots, C), np.int32)
+        nv = np.zeros(self.slots, np.int32)
+        for i in self._prefilling():
+            r = self.active[i]
+            part = r.prompt[self._off[i]:self._off[i] + C]
+            toks[i, :len(part)] = part
+            nv[i] = len(part)
+            self.alloc.ensure(i, int(self.alloc.lengths[i]) + len(part))
+        self._sync_caches()
+        logits, self.caches = self._chunk_fn(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.time()
+        for i in range(self.slots):
+            if nv[i] == 0:
+                continue
+            self._off[i] += int(nv[i])
+            self.alloc.advance(i, int(nv[i]))
+            r = self.active[i]
+            if self._off[i] >= len(r.prompt):  # prefill complete
+                r.t_first = now
+                r.output.append(int(nxt[i]))
+                self._next_tok[i] = nxt[i]
+
+    def _step_decode(self) -> list[Request]:
+        """One decode tick for every slot with a completed prefill."""
+        active = np.array(
+            [r is not None and self._off[i] >= len(r.prompt)
+             for i, r in enumerate(self.active)])
+        if not active.any():
+            return []
+        done: list[Request] = []
+        for i in np.nonzero(active)[0]:
+            try:
+                self.alloc.ensure(i, int(self.alloc.lengths[i]) + 2)
+            except RuntimeError:
+                # pool exhausted by decode growth (no preemption yet —
+                # ROADMAP): finish this request at capacity instead of
+                # crashing the drain; its blocks free up for the others.
+                r = self.active[i]
+                active[i] = False
+                self._finish(i, time.time())
+                done.append(r)
+        if not active.any():
+            return done
+        self._sync_caches()
+        pos = jnp.asarray(self.alloc.lengths, jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self._next_tok), self.caches, pos,
+            jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.time()
+        for i in np.nonzero(active)[0]:
+            self.alloc.advance(i, 1)
+            r = self.active[i]
+            tok = int(nxt[i])
+            if not r.output:  # empty-prompt requests: first token is here
+                r.t_first = now
+            r.output.append(tok)
+            self._next_tok[i] = tok
+            if (r.eos is not None and tok == r.eos) or \
+                    len(r.output) >= r.max_new_tokens or \
+                    int(self.alloc.lengths[i]) >= self.max_tokens - 1:
+                self._finish(i, now)
+                done.append(r)
+        return done
+
+    def _run_paged(self, max_ticks: int) -> list[Request]:
+        finished: list[Request] = []
+        ticks = 0
+        while self.queue or any(r is not None for r in self.active):
+            self._admit()
+            while self._prefilling():
+                self._step_prefill_chunk()
+                # finished-on-prefill edge: max_new_tokens == 1
+                now = time.time()
+                for i, r in enumerate(self.active):
+                    if (r is not None and self._off[i] >= len(r.prompt)
+                            and len(r.output) >= r.max_new_tokens):
+                        self._finish(i, now)
+                        finished.append(r)
+            finished.extend(self._step_decode())
+            ticks += 1
+            if ticks >= max_ticks:
+                break
+        finished.extend(self.rejected)
+        self.rejected = []
+        return finished
+
+    # ----------------------------------------------- legacy static stepping
 
     def _run_prefill(self):
         """(Re)prefills the whole slot batch — static-shape batched prefill;
@@ -121,9 +341,7 @@ class ServingEngine:
                 self.active[i] = None
         return nxt
 
-    def run(self, *, max_ticks: int = 10_000) -> list[Request]:
-        """Drains the queue; returns finished requests (simple generational
-        batching: admit → one shared prefill → decode until all finish)."""
+    def _run_legacy(self, max_ticks: int) -> list[Request]:
         finished: list[Request] = []
         while self.queue or any(self.active):
             admitted = self._admit()
@@ -138,6 +356,14 @@ class ServingEngine:
                 if self.queue and any(r is None for r in self.active):
                     break  # admit waiting requests into free slots
         return finished
+
+    # ------------------------------------------------------------ interface
+
+    def run(self, *, max_ticks: int = 10_000) -> list[Request]:
+        """Drains the queue; returns finished requests."""
+        if self.paged:
+            return self._run_paged(max_ticks)
+        return self._run_legacy(max_ticks)
 
     # ----------------------------------------------------------- metrics
 

@@ -1,0 +1,89 @@
+"""Hypothesis shim: degrade ``@given`` sweeps to fixed-example grids.
+
+The property tests prefer real hypothesis (shrinking, example databases,
+wide sweeps).  CI images and the pinned CPU environment don't always ship
+it, and a missing optional dep must never break tier-1 *collection* — so
+tests import ``given/settings/st`` from here.  With hypothesis installed
+this module is a pure re-export; without it, ``@given`` enumerates a small
+deterministic grid drawn from each strategy shim (endpoints + midpoints,
+capped product), which keeps the property meaningfully exercised.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _MAX_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, examples):
+            self._examples = list(examples)
+
+        def examples(self):
+            return self._examples
+
+    class _St:
+        """Tiny subset of ``hypothesis.strategies`` used by this repo."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=10):
+            span = max_value - min_value
+            pts = sorted({min_value, min_value + span // 3,
+                          min_value + (2 * span) // 3, max_value})
+            return _Strategy(pts)
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy([min_value, (min_value + max_value) / 2,
+                              max_value])
+
+    st = _St()
+
+    def settings(*_a, **_kw):  # noqa: D401 - decorator factory shim
+        """No-op stand-in for ``hypothesis.settings``."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        """Run the test once per example combination (capped grid).
+
+        The cap samples *evenly spaced* combinations of the full product —
+        taking the first N would pin every leading strategy to its first
+        example and silently never exercise the rest.
+        """
+        names = list(strategies)
+        grids = [strategies[n].examples() for n in names]
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                combos = list(itertools.islice(
+                    itertools.product(*grids), 4096))
+                stride = max(1, len(combos) // _MAX_EXAMPLES)
+                picked = combos[::stride][:_MAX_EXAMPLES]
+                if combos and combos[-1] not in picked:
+                    picked[-1] = combos[-1]
+                for combo in picked:
+                    fn(*args, **kwargs, **dict(zip(names, combo)))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,339 @@
+"""Differential suite: PagedKVCache vs the contiguous LayerKVCache oracle.
+
+Every test drives both layouts through equivalent write schedules and
+asserts the paged decode-attention output matches the contiguous cache's
+dense-oracle output to fp32 ≤ 1e-6 — i.e. the paged layout changes *where*
+committed groups live, never *what* they contain.  Also covers committed-
+store bit-exactness, block free/reuse after eviction, allocator
+invariants, and the Pallas paged kernel.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention_quant import (decode_attend_dense,
+                                        flash_prefill,
+                                        paged_chunk_attend,
+                                        paged_decode_attend)
+from repro.core.kvcache import LayerKVCache
+from repro.core.paged import BlockAllocator, PagedKVCache
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 1e-6
+
+
+def _mk_paged(S, H, D, T, *, BT, kb, vb, group, residual, blocks=None):
+    blocks = blocks if blocks is not None else S * (T // BT)
+    alloc = BlockAllocator(S, num_blocks=blocks, max_blocks=T // BT,
+                           block_tokens=BT, residual=residual, group=group)
+    cache = PagedKVCache.init(
+        S, H, D, num_blocks=blocks, block_tokens=BT, max_tokens=T,
+        k_bits=kb, v_bits=vb, group=group, residual=residual,
+        dtype=jnp.float32, scale_dtype=jnp.float32)
+    return cache, alloc
+
+
+def _oracle(k, v, length, *, T, kb, vb, group, residual):
+    """Contiguous single-slot cache appended token-by-token (the canonical
+    commit schedule)."""
+    c = LayerKVCache.init(1, k.shape[1], k.shape[3], max_tokens=T,
+                          k_bits=kb, v_bits=vb, group=group,
+                          residual=residual, dtype=jnp.float32,
+                          scale_dtype=jnp.float32)
+    step = jax.jit(lambda c, kt, vt: c.append(kt, vt))
+    for t in range(length):
+        c = step(c, k[:, :, t:t + 1], v[:, :, t:t + 1])
+    return c
+
+
+def _append_all(cache, alloc, k, v, lens):
+    """Batched paged appends with per-slot active masks (mixed lengths)."""
+    step = jax.jit(lambda c, kt, vt, a: c.append(kt, vt, a))
+    for t in range(max(lens)):
+        active = np.array([t < L for L in lens])
+        for s, a in enumerate(active):
+            if a:
+                alloc.ensure(s, t + 2)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        cache = step(cache, k[:, :, t:t + 1], v[:, :, t:t + 1],
+                     jnp.asarray(active))
+    return cache
+
+
+def _chunk_all(cache, alloc, k, v, lens, C):
+    """Chunked-prefill writes: every slot consumes its next C-token chunk
+    per step; shorter prompts finish early (n_valid = 0)."""
+    wc = jax.jit(lambda c, kc, vc, nv: c.write_chunk(kc, vc, nv))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, C), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, C), (0, 0)))
+    for i in range(-(-max(lens) // C)):
+        nv = np.array([min(max(L - i * C, 0), C) for L in lens], np.int32)
+        for s in range(len(lens)):
+            if nv[s]:
+                alloc.ensure(s, i * C + int(nv[s]))
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        cache = wc(cache, kp[:, :, i * C:(i + 1) * C],
+                   vp[:, :, i * C:(i + 1) * C], jnp.asarray(nv))
+    return cache
+
+
+def _assert_parity(q, paged, oracles, atol=ATOL):
+    out_p = np.asarray(paged_decode_attend(q, paged), np.float32)
+    for s, oc in enumerate(oracles):
+        out_o = np.asarray(decode_attend_dense(q[s:s + 1], oc), np.float32)
+        np.testing.assert_allclose(out_p[s:s + 1], out_o, atol=atol)
+
+
+# ------------------------------------------------------------- randomized sweep
+
+SWEEP = [
+    # kb, vb, group, residual, BT, lens  (block ≠ group exercises offsets)
+    (0, 0, 16, 32, 32, (130, 64, 97)),
+    (1, 1, 8, 16, 16, (70, 33, 48)),
+    (2, 1, 32, 64, 64, (200, 96, 131)),
+    (4, 2, 16, 16, 32, (90, 41, 64)),
+    (8, 8, 16, 32, 16, (80, 49, 100)),
+]
+
+
+@pytest.mark.parametrize("kb,vb,group,residual,BT,lens", SWEEP)
+def test_append_parity(kb, vb, group, residual, BT, lens):
+    """Decode appends at three different per-slot lengths in one batch."""
+    rng = np.random.default_rng(hash((kb, vb, group)) % 2 ** 31)
+    S, H, D, T = len(lens), 2, 32, 256
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    cache = _append_all(cache, alloc, k, v, lens)
+    assert [int(x) for x in cache.lengths] == list(lens)
+    oracles = [_oracle(k[s:s + 1], v[s:s + 1], L, T=T, kb=kb, vb=vb,
+                       group=group, residual=residual)
+               for s, L in enumerate(lens)]
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    _assert_parity(q, cache, oracles)
+
+
+@pytest.mark.parametrize("kb,vb,group,residual,BT,lens", SWEEP)
+def test_chunked_prefill_parity(kb, vb, group, residual, BT, lens):
+    """Chunked prefill (incl. partial final chunks) matches the append
+    oracle — the commit schedule is write-order independent."""
+    rng = np.random.default_rng(hash((kb, group, residual)) % 2 ** 31)
+    S, H, D, T = len(lens), 2, 32, 256
+    C = residual + group  # largest legal chunk
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    cache = _chunk_all(cache, alloc, k, v, lens, C)
+    oracles = [_oracle(k[s:s + 1], v[s:s + 1], L, T=T, kb=kb, vb=vb,
+                       group=group, residual=residual)
+               for s, L in enumerate(lens)]
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    _assert_parity(q, cache, oracles)
+
+
+def test_mixed_chunk_then_append_schedule():
+    """Prefill in chunks, then decode appends — the serving lifecycle."""
+    rng = np.random.default_rng(7)
+    kb, vb, group, residual, BT = 2, 1, 16, 32, 32
+    S, H, D, T = 3, 2, 32, 256
+    plens = [48, 33, 80]
+    extra = 24
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    cache = _chunk_all(cache, alloc, k, v, plens, C=residual + group)
+    # decode appends continue each slot from its prompt length
+    step = jax.jit(lambda c, kt, vt, a: c.append(kt, vt, a))
+    kpad = jnp.pad(k, ((0, 0), (0, 0), (0, extra), (0, 0)))
+    for t in range(extra):
+        idx = jnp.asarray([min(p + t, T - 1) for p in plens])
+        kt = jnp.stack([k[s, :, min(plens[s] + t, T - 1)]
+                        for s in range(S)])[:, :, None, :]
+        vt = jnp.stack([v[s, :, min(plens[s] + t, T - 1)]
+                        for s in range(S)])[:, :, None, :]
+        for s in range(S):
+            alloc.ensure(s, plens[s] + t + 2)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        cache = step(cache, kt, vt, jnp.ones((S,), bool))
+    oracles = []
+    for s in range(S):
+        ks = jnp.concatenate(
+            [k[s:s + 1, :, :plens[s]],
+             jnp.stack([k[s, :, min(plens[s] + t, T - 1)]
+                        for t in range(extra)], axis=1)[None]], axis=2)
+        vs = jnp.concatenate(
+            [v[s:s + 1, :, :plens[s]],
+             jnp.stack([v[s, :, min(plens[s] + t, T - 1)]
+                        for t in range(extra)], axis=1)[None]], axis=2)
+        oracles.append(_oracle(ks, vs, plens[s] + extra, T=T, kb=kb, vb=vb,
+                               group=group, residual=residual))
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    _assert_parity(q, cache, oracles)
+
+
+def test_committed_store_bit_exact():
+    """Stronger than attention parity: the paged pool blocks hold byte-for-
+    byte the same packed codes/scales the contiguous cache commits."""
+    rng = np.random.default_rng(11)
+    kb, vb, group, residual, BT = 2, 1, 16, 32, 32
+    S, H, D, T = 2, 2, 32, 128
+    lens = [100, 70]
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    cache = _append_all(cache, alloc, k, v, lens)
+    for s, L in enumerate(lens):
+        oc = _oracle(k[s:s + 1], v[s:s + 1], L, T=T, kb=kb, vb=vb,
+                     group=group, residual=residual)
+        commit = int(oc.commit_length())
+        for i in range(commit // BT + (1 if commit % BT else 0)):
+            blk = int(alloc.page_table[s, i])
+            assert blk > 0
+            n_tok = min(BT, commit - i * BT)
+            got = np.asarray(cache.k_codes[blk, :, :n_tok * kb // 8])
+            want = np.asarray(
+                oc.k_codes[0, :, i * BT * kb // 8:
+                           (i * BT + n_tok) * kb // 8])
+            np.testing.assert_array_equal(got, want)
+            got_v = np.asarray(cache.v_codes[blk, :, :n_tok])
+            want_v = np.asarray(oc.v_codes[0, :, i * BT:i * BT + n_tok])
+            np.testing.assert_array_equal(got_v, want_v)
+            got_s = np.asarray(cache.k_scale[blk, :, :n_tok // group],
+                               np.float32)
+            want_s = np.asarray(
+                oc.k_scale[0, :, i * BT // group:
+                           (i * BT + n_tok) // group], np.float32)
+            np.testing.assert_array_equal(got_s, want_s)
+
+
+def test_block_free_and_reuse_after_eviction():
+    """Finishing a request frees its blocks; a new request reusing them
+    must not see stale tokens."""
+    rng = np.random.default_rng(13)
+    kb, vb, group, residual, BT = 2, 1, 16, 16, 16
+    S, H, D, T = 2, 2, 32, 128
+    # pool sized exactly for peak occupancy (5 + 3 blocks), so the second
+    # request in slot 0 MUST reuse slot 0's freed blocks
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual, blocks=8)
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache = _append_all(cache, alloc, k, v, [96, 64])
+    used0 = set(alloc.blocks_of(0))
+    assert used0 and alloc.free_blocks == 8 - len(used0) - len(
+        alloc.blocks_of(1))
+    # request in slot 0 finishes → blocks return to the free list
+    freed = alloc.release(0)
+    assert freed == len(used0)
+    assert alloc.free_blocks == 8 - len(alloc.blocks_of(1))
+    lens_np = np.asarray(cache.lengths).copy()
+    lens_np[0] = 0
+    cache = cache.with_pages(alloc.page_table, lens_np)
+    assert int(cache.lengths[0]) == 0 and int(cache.lengths[1]) == 64
+
+    # new request admitted into slot 0 with fresh content
+    k2 = jnp.asarray(rng.normal(size=(1, H, T, D)).astype(np.float32))
+    v2 = jnp.asarray(rng.normal(size=(1, H, T, D)).astype(np.float32))
+    kmix = jnp.concatenate([k2, k[1:2]], axis=0)
+    vmix = jnp.concatenate([v2, v[1:2]], axis=0)
+    step = jax.jit(lambda c, kt, vt, a: c.append(kt, vt, a))
+    L2 = 80
+    for t in range(L2):
+        active = np.array([True, False])
+        alloc.ensure(0, t + 2)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        cache = step(cache, kmix[:, :, t:t + 1], vmix[:, :, t:t + 1],
+                     jnp.asarray(active))
+    assert set(alloc.blocks_of(0)) & used0, "expected freed-block reuse"
+    oracles = [
+        _oracle(k2, v2, L2, T=T, kb=kb, vb=vb, group=group,
+                residual=residual),
+        _oracle(k[1:2], v[1:2], 64, T=T, kb=kb, vb=vb, group=group,
+                residual=residual),
+    ]
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    _assert_parity(q, cache, oracles)
+
+
+def test_allocator_invariants():
+    alloc = BlockAllocator(2, num_blocks=4, max_blocks=4, block_tokens=16,
+                           residual=16, group=16)
+    assert alloc.free_blocks == 4
+    assert alloc.blocks_for_len(16) == 0     # nothing committed yet
+    assert alloc.blocks_for_len(48) == 2     # commit 32 → 2 blocks
+    assert alloc.can_admit(48)
+    newly = alloc.ensure(0, 48)
+    assert len(newly) == 2 and 0 not in newly
+    assert alloc.ensure(0, 48) == []         # idempotent
+    alloc.ensure(1, 48)
+    assert alloc.free_blocks == 0
+    with pytest.raises(RuntimeError):
+        alloc.ensure(1, 80)
+    with pytest.raises(ValueError):
+        alloc.ensure(0, 16 + 16 + 4 * 16 + 16)  # beyond page-table width
+    assert alloc.release(0) == 2
+    assert alloc.free_blocks == 2
+    assert alloc.blocks_of(0) == []
+
+
+def test_chunk_attend_matches_flash():
+    """paged_chunk_attend over an fp paged cache == blocked flash attention
+    on the contiguous prompt (per-slot causal masking through the table)."""
+    rng = np.random.default_rng(17)
+    group, residual, BT, C = 16, 32, 32, 48
+    S, H, Hq, D, T = 3, 2, 4, 32, 192
+    lens = [130, 64, 97]
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    qf = jnp.asarray(rng.normal(size=(S, Hq, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=0, vb=0,
+                             group=group, residual=residual)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, C), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, C), (0, 0)))
+    qp = jnp.pad(qf, ((0, 0), (0, 0), (0, C), (0, 0)))
+    outs = []
+    for i in range(-(-max(lens) // C)):
+        nv = np.array([min(max(L - i * C, 0), C) for L in lens], np.int32)
+        for s in range(S):
+            if nv[s]:
+                alloc.ensure(s, i * C + int(nv[s]))
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        start = jnp.asarray(cache.lengths)
+        cache = cache.write_chunk(kp[:, :, i * C:(i + 1) * C],
+                                  vp[:, :, i * C:(i + 1) * C],
+                                  jnp.asarray(nv))
+        outs.append(paged_chunk_attend(qp[:, :, i * C:(i + 1) * C],
+                                       cache, start))
+    got = np.asarray(jnp.concatenate(outs, axis=2), np.float32)
+    for s, L in enumerate(lens):
+        ref = np.asarray(flash_prefill(qf[s:s + 1, :, :L], k[s:s + 1, :, :L],
+                                       v[s:s + 1, :, :L], causal=True),
+                         np.float32)
+        np.testing.assert_allclose(got[s:s + 1, :, :L], ref, atol=1e-5)
+
+
+def test_paged_kernel_matches_jnp():
+    """Pallas paged kernel (scalar-prefetch page-table BlockSpecs) vs the
+    pure-jnp paged read path."""
+    from repro.kernels.ops import paged_asym_decode_attention
+    rng = np.random.default_rng(19)
+    kb, vb, group, residual, BT = 2, 1, 32, 64, 64
+    S, H, D, T = 3, 2, 64, 256
+    lens = [200, 96, 131]
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    cache = _append_all(cache, alloc, k, v, lens)
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    o_jnp = np.asarray(paged_decode_attend(q, cache), np.float32)
+    o_krn = np.asarray(paged_asym_decode_attention(q, cache), np.float32)
+    np.testing.assert_allclose(o_krn, o_jnp, atol=1e-5)

@@ -88,13 +88,22 @@ import sys
 sys.path.insert(0, %r)
 from benchmarks.hlo_analysis import analyze_hlo
 
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+try:  # jax >= 0.5: typed mesh axes + jax.shard_map
+    mesh = jax.make_mesh((4,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+except (AttributeError, TypeError):
+    mesh = jax.make_mesh((4,), ("d",))
 def f(x):
     def body(c, _):
         return lax.psum(c, "d"), None
     return lax.scan(body, x, None, length=5)[0]
-g = jax.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None),
-                  axis_names={"d"}, check_vma=False)
+if hasattr(jax, "shard_map"):
+    g = jax.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None),
+                      axis_names={"d"}, check_vma=False)
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+    g = shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None),
+                  check_rep=False)
 txt = jax.jit(g).lower(jnp.ones((8, 16))).compile().as_text()
 c = analyze_hlo(txt)
 ar = c.collective_bytes.get("all-reduce", 0)

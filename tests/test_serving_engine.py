@@ -1,0 +1,163 @@
+"""Serving-engine lifecycle over paged caches: admit → chunked prefill →
+decode → EOS/max-tokens finish → slot + block reclaim.
+
+The core property: a batch mixing several prompt *lengths* produces, for
+every request, exactly the token stream a single-request engine produces —
+and does so through one compilation of each step function (chunked prefill
+pads the final chunk instead of specializing on length).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("llama2-7b"))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, slots=4, max_tokens=128):
+    return ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
+                         dtype=jnp.float32)
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, L, dtype=np.int32) for L in lengths]
+
+
+def _single_run(model, params, prompt, max_new, eos=None, max_tokens=128):
+    """Oracle: the same engine with one slot and one request."""
+    eng = _mk_engine(model, params, slots=1, max_tokens=max_tokens)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=max_new,
+                       eos=eos))
+    (done,) = eng.run()
+    return done.output
+
+
+def test_mixed_lengths_match_single_request_runs(small_model):
+    """≥3 different prompt lengths in ONE decode loop, outputs token-for-
+    token equal to per-request runs, with no per-length recompilation."""
+    cfg, model, params = small_model
+    lengths = [9, 17, 24, 33]           # 4 distinct lengths, one batch
+    prompts = _prompts(cfg, lengths)
+    eng = _mk_engine(model, params, slots=len(prompts))
+    assert eng.paged
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    # one compiled shape each, regardless of the length mix
+    stats = eng.jit_stats()
+    assert stats == {"prefill_chunk": 1, "decode": 1}, stats
+    by_rid = {r.rid: r for r in done}
+    for rid, p in enumerate(prompts):
+        want = _single_run(model, params, p, max_new=6)
+        assert by_rid[rid].output == want, (
+            rid, by_rid[rid].output, want)
+
+
+def test_full_lifecycle_slot_and_block_reclaim(small_model):
+    """More requests than slots: waiting requests are admitted as slots
+    free, and every block returns to the allocator at the end."""
+    cfg, model, params = small_model
+    prompts = _prompts(cfg, [8, 19, 25, 16, 30, 11, 22], seed=3)
+    eng = _mk_engine(model, params, slots=3)
+    total_blocks = eng.alloc.free_blocks
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == len(prompts)
+    assert all(len(r.output) == 5 for r in done)
+    # slots and blocks fully reclaimed
+    assert all(r is None for r in eng.active)
+    assert eng.alloc.free_blocks == total_blocks
+    assert (eng.alloc.page_table == 0).all()
+    assert (eng.alloc.lengths == 0).all()
+    # requests admitted later still match their single-request streams
+    for rid in (4, 6):
+        want = _single_run(model, params, prompts[rid], max_new=5)
+        got = next(r.output for r in done if r.rid == rid)
+        assert got == want
+
+
+def test_eos_truncates_stream(small_model):
+    """A request stops the moment it emits its EOS token and frees its
+    slot while the others keep decoding."""
+    cfg, model, params = small_model
+    prompts = _prompts(cfg, [12, 21, 27], seed=5)
+    # probe: what does request 0 emit without EOS?
+    free_run = _single_run(model, params, prompts[0], max_new=8)
+    eos = free_run[2]                    # make its 3rd token the EOS
+    eng = _mk_engine(model, params, slots=3)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=8, eos=eos))
+    for rid in (1, 2):
+        eng.submit(Request(rid=rid, prompt=prompts[rid], max_new_tokens=8))
+    done = eng.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].output == free_run[:3]          # truncated at EOS
+    for rid in (1, 2):
+        assert len(by_rid[rid].output) == 8          # unaffected
+        want = _single_run(model, params, prompts[rid], max_new=8)
+        assert by_rid[rid].output == want
+
+
+def test_max_tokens_capacity_finish(small_model):
+    """A slot hitting the cache capacity finishes instead of overflowing."""
+    cfg, model, params = small_model
+    (p,) = _prompts(cfg, [24], seed=7)
+    eng = _mk_engine(model, params, slots=1, max_tokens=48)
+    eng.submit(Request(rid=0, prompt=p, max_new_tokens=1000))
+    (done,) = eng.run()
+    assert done.done
+    assert 24 + len(done.output) <= 48
+
+
+def test_partial_chunk_admission(small_model):
+    """Prompt lengths that are not multiples of the chunk size go through
+    the padded/masked final chunk — including a 1-token prompt."""
+    cfg, model, params = small_model
+    prompts = _prompts(cfg, [1, 15, 16, 17], seed=9)
+    eng = _mk_engine(model, params, slots=4)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 4
+    for rid, p in enumerate(prompts):
+        want = _single_run(model, params, p, max_new=4)
+        got = next(r.output for r in done if r.rid == rid)
+        assert got == want
+
+
+def test_legacy_fallback_for_ssm_archs():
+    """Archs the paged path doesn't cover fall back to static batching."""
+    cfg = reduced(get_config("mamba2-370m"))
+    model = Model(cfg)
+    assert not model.supports_paged()
+    params = model.init(jax.random.PRNGKey(1))
+    eng = ServingEngine(model, params, slots=2, max_tokens=64,
+                        prompt_len=16, dtype=jnp.float32)
+    assert not eng.paged
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 16,
+                                               dtype=np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.output) >= 1 for r in done)
