@@ -1,0 +1,176 @@
+"""Serving-engine benchmark: fused mixed-tick stepping vs the alternating
+prefill/decode baseline, on one mixed-length request trace.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--tiny] \
+        [--out BENCH_serve.json]
+
+Both engines drain the identical trace (greedy decoding, so the token
+streams are identical too — asserted); the report captures the perf
+trajectory of the serving hot path from this PR on:
+
+* ``decode_tok_s``      — decode-generated tokens per second of drain wall
+* ``ttft_p50_s``/``ttft_mean_s`` — time to first token
+* ``ticks``             — jit'd step invocations to drain the trace
+* ``tick_wall_*``       — per-tick wall-time stats (steady-state timed
+                          pass; the first drain is the compile warmup)
+
+Writes ``BENCH_serve.json`` (CI uploads it as an artifact next to the
+``benchmarks.run`` CSV).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def _build_model(seed: int = 0):
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+    from repro.configs import get_config, reduced
+    from repro.core.asymkv import AsymKVPolicy
+    from repro.models.transformer import Model
+
+    cfg = reduced(get_config("llama2-7b"))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, high_bits=2,
+                       low_bits=1, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _trace(cfg, *, n_requests: int, lengths: list[int],
+           max_new: list[int], seed: int = 0):
+    """Mixed-length trace with *staggered* decode budgets — requests finish
+    at different ticks, so later admissions prefill while earlier slots are
+    mid-decode (the continuous-serving regime the fused step targets)."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    lengths[i % len(lengths)],
+                                    dtype=np.int32),
+                max_new_tokens=max_new[i % len(max_new)])
+        for i in range(n_requests)
+    ]
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        # fresh per-drain bookkeeping on shared Request objects
+        r.output = []
+        r.done = False
+        r.t_first = r.t_done = 0.0
+        eng.submit(r)
+    t0 = time.perf_counter()
+    ticks0, n_tick_times = eng.ticks, len(eng.tick_times)
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    return done, wall, eng.ticks - ticks0, eng.tick_times[n_tick_times:]
+
+
+def bench_engine(model, params, reqs, *, fused: bool, slots: int,
+                 max_tokens: int, repeats: int = 3) -> dict:
+    import jax.numpy as jnp
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
+                        dtype=jnp.float32, fused=fused)
+    _drain(eng, reqs)                       # warmup drain: pays compiles
+    # best-of-N timed drains: wall time on a shared host is noisy, the
+    # tick schedule is deterministic — min wall is the honest steady state
+    best = None
+    for _ in range(max(1, repeats)):
+        res = _drain(eng, reqs)
+        if best is None or res[1] < best[1]:
+            best = res
+    done, wall, ticks, tick_times = best
+    gen = sum(len(r.output) for r in done)
+    dec = sum(max(0, len(r.output) - 1) for r in done)
+    ttft = [r.t_first - r.t_admit for r in done if r.t_first]
+    streams = {r.rid: list(r.output) for r in done}
+    return {
+        "mode": "fused" if fused else "alternating",
+        "requests": len(done),
+        "gen_tokens": gen,
+        "decode_tokens": dec,
+        "wall_s": wall,
+        "gen_tok_s": gen / max(wall, 1e-9),
+        "decode_tok_s": dec / max(wall, 1e-9),
+        "ttft_p50_s": float(np.median(ttft)) if ttft else None,
+        "ttft_mean_s": float(np.mean(ttft)) if ttft else None,
+        "ticks": ticks,
+        "tick_wall_mean_s": float(np.mean(tick_times)) if tick_times else None,
+        "tick_wall_p50_s": float(np.median(tick_times)) if tick_times else None,
+        "tick_wall_max_s": float(np.max(tick_times)) if tick_times else None,
+        "jit_stats": eng.jit_stats(),
+    }, streams
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (fewer/shorter requests)")
+    ap.add_argument("--slots", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed drains per engine (best-of-N wall)")
+    args = ap.parse_args()
+
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+
+    cfg, model, params = _build_model()
+    if args.tiny:
+        slots, max_tokens = args.slots or 2, 128
+        lengths, max_new, n_requests = [8, 49, 16], [12, 4, 8], 6
+    else:
+        slots, max_tokens = args.slots or 4, 256
+        lengths = [8, 96, 16, 64, 24, 80]
+        max_new, n_requests = [24, 8, 32, 12, 48, 16], 16
+
+    reqs = _trace(cfg, n_requests=n_requests, lengths=lengths,
+                  max_new=max_new)
+    fused, s_f = bench_engine(model, params, reqs, fused=True,
+                              slots=slots, max_tokens=max_tokens,
+                              repeats=args.repeats)
+    alt, s_a = bench_engine(model, params, reqs, fused=False,
+                            slots=slots, max_tokens=max_tokens,
+                            repeats=args.repeats)
+    assert s_f == s_a, "fused and alternating token streams diverged"
+
+    report = {
+        "bench": "serving_fused_vs_alternating",
+        "model": cfg.name,
+        "trace": {"n_requests": n_requests, "prompt_lengths": lengths,
+                  "max_new_tokens": list(max_new), "slots": slots,
+                  "max_tokens": max_tokens,
+                  "prefill_chunk": model.residual + model.group},
+        "fused": fused,
+        "alternating": alt,
+        "tick_reduction": (alt["ticks"] - fused["ticks"]) / max(
+            alt["ticks"], 1),
+        "decode_tok_s_ratio": fused["decode_tok_s"] / max(
+            alt["decode_tok_s"], 1e-9),
+    }
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(json.dumps({k: report[k] for k in
+                      ("tick_reduction", "decode_tok_s_ratio")}))
+    print(f"fused:       {fused['decode_tok_s']:.1f} decode tok/s, "
+          f"{fused['ticks']} ticks, ttft p50 {fused['ttft_p50_s']:.3f}s")
+    print(f"alternating: {alt['decode_tok_s']:.1f} decode tok/s, "
+          f"{alt['ticks']} ticks, ttft p50 {alt['ttft_p50_s']:.3f}s")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -78,8 +78,10 @@ def model_flops(cfg, cell) -> float:
         return 6.0 * n_active * cell.batch * cell.seq
     if cell.kind == "prefill":
         return 2.0 * n_active * cell.batch * cell.seq
-    if cell.kind == "chunk":  # chunked prefill: C tokens per slot per step
-        C = cell.chunk or 256
+    if cell.kind in ("chunk", "serve"):
+        # chunked prefill: C tokens per slot per step; the fused serve
+        # tick additionally embeds one piggybacked decode row per slot
+        C = (cell.chunk or 256) + (1 if cell.kind == "serve" else 0)
         return 2.0 * n_active * cell.batch * C
     return 2.0 * n_active * cell.batch  # one decode token per sequence
 
@@ -113,9 +115,10 @@ def model_flops_attn(cfg, cell) -> float:
         if cell.kind == "decode":
             kv = cell.seq if kind != "L" else min(cell.seq, cfg.window or S)
             extra += 2.0 * B * H * kv * (qk + vd)
-        elif cell.kind == "chunk":
-            # C chunk queries against an (on average) half-full cache
-            C = cell.chunk or 256
+        elif cell.kind in ("chunk", "serve"):
+            # C chunk queries (serve: + a decode row) against an (on
+            # average) half-full cache
+            C = (cell.chunk or 256) + (1 if cell.kind == "serve" else 0)
             kv = S / 2 if kind != "L" else min(cfg.window or S, S)
             extra += 2.0 * B * H * C * kv * (qk + vd)
         else:

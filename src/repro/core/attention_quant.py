@@ -374,6 +374,7 @@ def paged_chunk_attend(
     cache: PagedKVCache,
     q_start: jax.Array,
     *,
+    q_pos: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
 ) -> jax.Array:
@@ -387,6 +388,10 @@ def paged_chunk_attend(
     ``≤ q_start + i``, which includes earlier chunk tokens whether they
     landed in the ring or were already committed.  Rows past a slot's
     ``n_valid`` produce garbage and must be ignored by the caller.
+
+    ``q_pos [S, C]`` overrides the contiguous ``q_start + i`` row
+    positions — the fused serving step uses this to piggyback a decode row
+    (at its own position) onto a chunk batch; rows are fully independent.
     """
     S, Hq, C, D = q.shape
     Hkv = cache.resid_k.shape[1]
@@ -397,7 +402,8 @@ def paged_chunk_attend(
 
     commit = cache.commit_lengths()
     lengths = cache.lengths
-    q_pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [S, C]
+    if q_pos is None:
+        q_pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
     lo_valid = (jnp.maximum(0, q_pos - window + 1) if window is not None
                 else jnp.zeros_like(q_pos))              # [S, C]
     BT = cache.block_tokens

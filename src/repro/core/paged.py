@@ -59,9 +59,10 @@ Mutation entry points (all jit-safe, fixed shapes):
   guarantees this); the final partial chunk may have any ``n_valid``.
 
 Read paths live in :mod:`repro.core.attention_quant`
-(``paged_decode_attend`` / ``paged_chunk_attend``) and the Pallas kernel
-``repro.kernels.asym_decode_attn.paged_asym_decode_attn`` whose BlockSpecs
-index the pools *through the page table* via scalar prefetch.
+(``paged_decode_attend`` / ``paged_chunk_attend``) and the unified Pallas
+kernel ``repro.kernels.paged_attn.paged_asym_attn`` whose BlockSpecs index
+the pools *through the page table* via scalar prefetch (decode and chunk
+query shapes, sliding windows, fp ring fold — all one kernel).
 """
 
 from __future__ import annotations
@@ -500,6 +501,10 @@ class BlockAllocator:
         self._free: deque[int] = deque(range(1, num_blocks + 1))
         self.page_table = np.zeros((slots, max_blocks), np.int32)
         self.lengths = np.zeros((slots,), np.int32)
+        # Sliding-window freeing frontier: blocks below ``_min_block[s]``
+        # were released early (windowed layers) and must never be remapped
+        # for this slot — ``ensure`` maps from the frontier onward.
+        self._min_block = np.zeros((slots,), np.int64)
 
     @property
     def free_blocks(self) -> int:
@@ -528,7 +533,7 @@ class BlockAllocator:
                 f"({self.max_blocks} blocks × {self.block_tokens} tokens)")
         newly = []
         row = self.page_table[slot]
-        for i in range(need):
+        for i in range(int(self._min_block[slot]), need):
             if row[i] == 0:
                 if not self._free:
                     raise RuntimeError("block pool exhausted")
@@ -539,6 +544,23 @@ class BlockAllocator:
     def advance(self, slot: int, n_tokens: int):
         self.lengths[slot] += n_tokens
 
+    def free_below(self, slot: int, lo_token: int) -> int:
+        """Releases blocks whose tokens lie *wholly* below ``lo_token``
+        (sliding-window layers: positions < ``length − window`` are never
+        read again, so block ``i`` is reclaimable once ``(i+1)·BT ≤ lo``).
+        Advances the slot's freeing frontier so ``ensure`` never remaps the
+        released range.  Returns how many blocks were freed."""
+        nb = min(max(0, lo_token // self.block_tokens), self.max_blocks)
+        row = self.page_table[slot]
+        freed = 0
+        for i in range(int(self._min_block[slot]), nb):
+            if row[i] > 0:
+                self._free.append(int(row[i]))
+                row[i] = 0
+                freed += 1
+        self._min_block[slot] = max(int(self._min_block[slot]), nb)
+        return freed
+
     def release(self, slot: int) -> int:
         """Frees all of a slot's blocks; returns how many were freed."""
         row = self.page_table[slot]
@@ -546,4 +568,5 @@ class BlockAllocator:
         self._free.extend(freed)
         row[:] = 0
         self.lengths[slot] = 0
+        self._min_block[slot] = 0
         return len(freed)

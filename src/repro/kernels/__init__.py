@@ -1,12 +1,19 @@
 """TPU Pallas kernels for the AsymKV hot paths.
 
-``asym_decode_attn`` — fused dequant-inside-attention flash decode;
-``rtn_pack``         — group quantize + sub-byte bit-pack (cache commit);
-``flash_prefill``    — blocked causal/windowed attention.
+``asym_decode_attention``  — fused dequant-inside-attention flash decode
+                             over the contiguous cache (fp ring folded
+                             in-kernel);
+``paged_asym_attention``   — the unified paged serving kernel: decode AND
+                             chunked-prefill query shapes through the page
+                             table, sliding windows included;
+``rtn_pack``               — group quantize + sub-byte bit-pack (commit);
+``flash_prefill``          — blocked causal/windowed attention.
 
-Each has a pure-jnp oracle in ``ref.py``; interpret-mode sweeps in
-``tests/test_kernels.py`` assert allclose against it.
+Each has a pure-jnp oracle in ``ref.py`` / ``repro.core.attention_quant``;
+interpret-mode sweeps in ``tests/test_kernels.py`` and
+``tests/test_paged_cache.py`` assert allclose against them.
 """
 from repro.kernels.ops import (  # noqa: F401
-    asym_decode_attention, rtn_pack, flash_prefill_kernel,
+    asym_decode_attention, paged_asym_attention,
+    paged_asym_decode_attention, rtn_pack, flash_prefill_kernel,
 )

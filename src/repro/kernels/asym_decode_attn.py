@@ -1,7 +1,7 @@
-"""Fused AsymKV decode attention — the paper's hot spot on TPU.
+"""Fused AsymKV decode attention over the *contiguous* packed cache.
 
-Flash-decode over the *packed* quantized KV store: each grid step streams
-one block of packed K/V codes + group scales from HBM into VMEM, unpacks
+Flash-decode over the packed quantized KV store: each grid step streams one
+block of packed K/V codes + group scales from HBM into VMEM, unpacks
 sub-byte codes with shift/mask ops, dequantizes to fp32 *in VMEM*, and runs
 the two MXU matmuls of online-softmax attention.  HBM traffic is therefore
 ``bits/16`` of a bf16 cache — exactly the paper's memory saving, realized at
@@ -12,20 +12,21 @@ Layout (per KV head; ``f = 8 // bits`` codes per byte):
   K codes  [T·k_bits/8, D]  packed along tokens  (per-channel scales [T/G, D])
   V codes  [T, D·v_bits/8]  packed along channels (per-token scales [T, D/G])
 
-Grid ``(B·Hkv, T/BLK)`` — the token dimension iterates minor-most, so the
-online-softmax scratch (m, l, acc in VMEM) accumulates sequentially; outputs
-are partial stats ``(m, l, acc)`` that the wrapper merges with the fp
-residual ring (see ``ops.asym_decode_attention``).
+Two entry points share one body:
 
-``paged_asym_decode_attn`` is the paged-layout variant: the committed store
-lives in a block *pool* (``repro.core.paged.PagedKVCache``) and the grid's
-token dimension walks the **page table** instead of a contiguous token
-axis.  The page table and per-slot commit lengths are scalar-prefetch
-operands (``pltpu.PrefetchScalarGridSpec``), so every BlockSpec index map
-resolves its HBM block through ``page_table[slot, t]`` before the DMA is
-issued — the vLLM-style paged-attention pattern, here over *sub-byte packed*
-pools.  Unmapped entries (page-table value 0) point at the reserved scratch
-block and are masked via ``commit``/``pt > 0`` inside the kernel.
+* ``asym_decode_attn`` — grid ``(B·Hkv, T/BLK)``; returns *partial* flash
+  stats ``(m, l, acc)`` over the committed store only (the building block,
+  kept for split-K composition and the stats-parity tests).
+* ``asym_decode_attn_fused`` — grid ``(B·Hkv, T/BLK + 1)``; the final grid
+  step folds the **fp residual ring in-kernel** (ring positions recomputed
+  from ``commit``; committed-slot positions are ring-aware, so wrapped
+  stores and sliding-window (``window``) layers mask correctly) and writes
+  the finished, normalized output.  This is the decode hot path — no jnp
+  merge runs after the kernel.
+
+The *paged* (block-pool / page-table) variant lives in
+``repro.kernels.paged_attn`` and additionally serves chunked-prefill query
+shapes; see its docstring for the scalar-prefetch grid layout.
 """
 
 from __future__ import annotations
@@ -36,9 +37,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["asym_decode_attn", "paged_asym_decode_attn"]
+__all__ = ["asym_decode_attn", "asym_decode_attn_fused", "pick_block"]
 
 NEG_INF = -1e30
+
+
+def pick_block(T: int, block: int, group: int) -> int:
+    """Largest token-block size ≤ ``block`` that divides ``T`` and is a
+    multiple of ``group`` (capacities are always group multiples, so
+    ``group`` itself is a valid floor — no capacity can crash the kernel)."""
+    b = max(group, min(block, T) // group * group)
+    while b > group and T % b:
+        b -= group
+    if T % b:
+        raise ValueError(f"capacity {T} is not a multiple of group {group}")
+    return b
 
 
 def _unpack_tokens(packed, bits: int):
@@ -63,6 +76,60 @@ def _unpack_channels(packed, bits: int):
     return x.reshape(packed.shape[0], packed.shape[1] * f)
 
 
+# ------------------------------------------------------------------------
+# Shared kernel-body pieces.  Every attention kernel in this module and in
+# ``paged_attn`` builds its blocks from these, so the dequant layout and —
+# critically — the online-softmax / ring-fold merge numerics can never
+# diverge between the contiguous and paged paths (``_fold_residual_ring``
+# used to pin this for the old jnp merge; these helpers pin it in-kernel).
+# ------------------------------------------------------------------------
+
+def _dequant_k_block(kc_ref, ks_ref, kz_ref, *, bits: int, group: int):
+    """Packed K block refs → dequantized fp32 [BLK, D]."""
+    codes = _unpack_tokens(kc_ref[0, 0], bits).astype(jnp.float32)
+    ks = jnp.repeat(ks_ref[0, 0], group, axis=0)
+    kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
+    return codes * ks + kz
+
+
+def _dequant_v_block(vc_ref, vs_ref, vz_ref, *, bits: int, group: int):
+    """Packed V block refs → dequantized fp32 [BLK, Dv]."""
+    codes = _unpack_channels(vc_ref[0, 0], bits).astype(jnp.float32)
+    vs = jnp.repeat(vs_ref[0, 0], group, axis=1)
+    vz = jnp.repeat(vz_ref[0, 0], group, axis=1)
+    return codes * vs + vz
+
+
+def _accum_block(q, k, v, valid, scale, m_scr, l_scr, acc_scr):
+    """Scores one KV block and folds it into the online-softmax scratch.
+
+    ``q [Q, D]``, ``k [T, D]``, ``v [T, Dv]`` fp32; ``valid`` broadcastable
+    to ``[Q, T]``.  Fully-masked blocks are exact no-ops (alpha = 1).
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]),
+                  jnp.zeros_like(s))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _ring_positions(commit, cap: int):
+    """Absolute token position of each residual-ring column, [1, cap]."""
+    c = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+    return commit + jnp.mod(c - commit, cap)
+
+
+def _normalized_out(l_scr, acc_scr):
+    return acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+
+
 def _kernel(commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref,
             vz_ref, m_out, l_out, acc_out, m_scr, l_scr, acc_scr, *,
             k_bits: int, v_bits: int, group: int, v_group: int, block: int,
@@ -76,36 +143,12 @@ def _kernel(commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # ---- dequantize K block: [BLK, D] --------------------------------
-    k_codes = _unpack_tokens(kc_ref[0, 0], k_bits).astype(jnp.float32)
-    ks = jnp.repeat(ks_ref[0, 0], group, axis=0)   # [BLK, D]
-    kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
-    k = k_codes * ks + kz
-
-    # ---- scores + mask ------------------------------------------------
     q = q_ref[0, 0].astype(jnp.float32)            # [r, D]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    k = _dequant_k_block(kc_ref, ks_ref, kz_ref, bits=k_bits, group=group)
+    v = _dequant_v_block(vc_ref, vs_ref, vz_ref, bits=v_bits, group=v_group)
     pos = t * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
-    valid = pos < commit_ref[0]
-    s = jnp.where(valid, s, NEG_INF)               # [r, BLK]
-
-    # ---- dequantize V block: [BLK, Dv] --------------------------------
-    v_codes = _unpack_channels(vc_ref[0, 0], v_bits).astype(jnp.float32)
-    vs = jnp.repeat(vs_ref[0, 0], v_group, axis=1)  # [BLK, Dv]
-    vz = jnp.repeat(vz_ref[0, 0], v_group, axis=1)
-    v = v_codes * vs + vz
-
-    # ---- online softmax -----------------------------------------------
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(valid, p, 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    _accum_block(q, k, v, pos < commit_ref[0], scale,
+                 m_scr, l_scr, acc_scr)
 
     @pl.when(t == n_t - 1)
     def _finalize():
@@ -137,8 +180,7 @@ def asym_decode_attn(
     T = v_codes.shape[2]
     v_group = v_group or group
     Dv = v_scale.shape[3] * v_group
-    block = min(block, T)
-    assert T % block == 0 and block % group == 0
+    block = pick_block(T, block, group)
     n_t = T // block
     grid = (B * H, n_t)
 
@@ -195,18 +237,18 @@ def asym_decode_attn(
 
 
 # =========================================================================
-# Paged variant — BlockSpecs index the pool through the page table
+# Fused variant — fp residual ring folded in-kernel, normalized output
 # =========================================================================
 
-def _paged_kernel(pt_ref, commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref,
-                  vs_ref, vz_ref, m_out, l_out, acc_out, m_scr, l_scr,
-                  acc_scr, *, k_bits: int, v_bits: int, group: int,
-                  v_group: int, block_tokens: int, n_heads: int,
-                  scale: float):
-    i = pl.program_id(0)
+def _fused_kernel(meta_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref,
+                  vz_ref, rk_ref, rv_ref, out_ref, m_scr, l_scr, acc_scr, *,
+                  k_bits: int, v_bits: int, group: int, v_group: int,
+                  block: int, cap: int, T: int, window: int, scale: float):
     t = pl.program_id(1)
     n_t = pl.num_programs(1)
-    b = i // n_heads
+    commit = meta_ref[0]
+    length = meta_ref[1]
+    lo = jnp.maximum(0, length - window) if window > 0 else 0
 
     @pl.when(t == 0)
     def _init():
@@ -214,125 +256,114 @@ def _paged_kernel(pt_ref, commit_ref, q_ref, kc_ref, ks_ref, kz_ref, vc_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # ---- dequantize K block: [BT, D] ----------------------------------
-    k_codes = _unpack_tokens(kc_ref[0, 0], k_bits).astype(jnp.float32)
-    ks = jnp.repeat(ks_ref[0, 0], group, axis=0)
-    kz = jnp.repeat(kz_ref[0, 0], group, axis=0)
-    k = k_codes * ks + kz
-
-    # ---- scores + page-table mask -------------------------------------
     q = q_ref[0, 0].astype(jnp.float32)                # [r, D]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    pos = (t * block_tokens
-           + jax.lax.broadcasted_iota(jnp.int32, (1, block_tokens), 1))
-    valid = (pos < commit_ref[b]) & (pt_ref[b, t] > 0)
-    s = jnp.where(valid, s, NEG_INF)                   # [r, BT]
 
-    # ---- dequantize V block: [BT, Dv] ---------------------------------
-    v_codes = _unpack_channels(vc_ref[0, 0], v_bits).astype(jnp.float32)
-    vs = jnp.repeat(vs_ref[0, 0], v_group, axis=1)
-    vz = jnp.repeat(vz_ref[0, 0], v_group, axis=1)
-    v = v_codes * vs + vz
-
-    # ---- online softmax -----------------------------------------------
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(valid, p, 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    @pl.when(t < n_t - 1)
+    def _pool_block():
+        k = _dequant_k_block(kc_ref, ks_ref, kz_ref,
+                             bits=k_bits, group=group)
+        v = _dequant_v_block(vc_ref, vs_ref, vz_ref,
+                             bits=v_bits, group=v_group)
+        # Ring-aware absolute position of each committed slot: the
+        # committed store is a ring of T slots, so slot j holds token
+        # j + ⌊(commit−1−j)/T⌋·T (negative = never written).
+        j = t * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        pos = j + ((commit - 1 - j) // T) * T
+        _accum_block(q, k, v, (pos >= 0) & (pos >= lo), scale,
+                     m_scr, l_scr, acc_scr)
 
     @pl.when(t == n_t - 1)
-    def _finalize():
-        m_out[0, 0] = m_scr[...]
-        l_out[0, 0] = l_scr[...]
-        acc_out[0, 0] = acc_scr[...]
+    def _ring_and_finalize():
+        rpos = _ring_positions(commit, cap)
+        rvalid = (rpos >= commit) & (rpos < length) & (rpos >= lo)
+        _accum_block(q, rk_ref[0, 0].astype(jnp.float32),
+                     rv_ref[0, 0].astype(jnp.float32), rvalid, scale,
+                     m_scr, l_scr, acc_scr)
+        out_ref[0, 0] = _normalized_out(l_scr, acc_scr)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_bits", "v_bits", "group", "v_group", "block_tokens",
-                     "scale", "interpret"))
-def paged_asym_decode_attn(
-    q: jax.Array,           # [S, Hkv, r, D]
-    k_codes: jax.Array,     # [N, Hkv, BT·k_bits/8, D] uint8 pool
-    k_scale: jax.Array,     # [N, Hkv, BT/G, D]
+    static_argnames=("k_bits", "v_bits", "group", "v_group", "block",
+                     "window", "scale", "interpret"))
+def asym_decode_attn_fused(
+    q: jax.Array,        # [B, Hkv, r, D]
+    k_codes: jax.Array,  # [B, Hkv, T·k_bits/8, D] uint8
+    k_scale: jax.Array,  # [B, Hkv, T/G, D]
     k_zero: jax.Array,
-    v_codes: jax.Array,     # [N, Hkv, BT, Dv·v_bits/8] uint8 pool
-    v_scale: jax.Array,     # [N, Hkv, BT, Dv/vg]
+    v_codes: jax.Array,  # [B, Hkv, T, Dv·v_bits/8] uint8
+    v_scale: jax.Array,  # [B, Hkv, T, Dv/G]
     v_zero: jax.Array,
-    page_table: jax.Array,  # [S, NB] int32 (0 = unmapped/scratch)
-    commit: jax.Array,      # [S] int32 per-slot committed length
+    resid_k: jax.Array,  # [B, Hkv, cap, D] fp residual ring
+    resid_v: jax.Array,  # [B, Hkv, cap, Dv]
+    meta: jax.Array,     # [2] int32: (commit, length)
     *,
     k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
-    block_tokens: int = 64, scale: float, interpret: bool = True,
+    block: int = 512, window: int = 0, scale: float, interpret: bool = True,
 ):
-    """Partial flash-decode stats over a *paged* committed store.
+    """Full fused decode attention: committed store + fp ring in ONE kernel.
 
-    The grid is ``(S·H, NB)``; the token dimension walks page-table columns
-    and each in-spec index map dereferences ``page_table[slot, t]`` (scalar
-    prefetch) to pick the pool block to DMA.  Per-slot variable lengths are
-    handled by the ``commit`` mask — slots only pay HBM traffic for blocks
-    the grid touches, which is bounded by the page-table width.
-    Returns ``(m [S,H,r], l [S,H,r], acc [S,H,r,Dv])`` in fp32.
+    Grid ``(B·Hkv, T/BLK + 1)`` — the extra final step folds the residual
+    ring and normalizes, returning finished ``out [B, H, r, Dv]`` fp32.
+    ``window = W > 0`` masks positions ``< length − W`` (sliding-window
+    layers over ring-committed stores included); ``window = 0`` is global.
     """
-    S, H, r, D = q.shape
-    BT = block_tokens
+    B, H, r, D = q.shape
+    T = v_codes.shape[2]
     v_group = v_group or group
     Dv = v_scale.shape[3] * v_group
-    NB = page_table.shape[1]
-    grid = (S * H, NB)
+    cap = resid_k.shape[2]
+    block = pick_block(T, block, group)
+    n_t = T // block
+    grid = (B * H, n_t + 1)
     kb, vb = k_bits, v_bits
 
-    def bh(i):
+    def bh(i, t):
         return (i // H, i % H)
 
+    def tcl(t):
+        return jnp.minimum(t, n_t - 1)  # final (ring) step re-DMAs last block
+
+    specs_in = [
+        pl.BlockSpec((2,), lambda i, t: (0,)),                    # meta
+        pl.BlockSpec((1, 1, r, D), lambda i, t: (*bh(i, t), 0, 0)),
+        pl.BlockSpec((1, 1, block * kb // 8, D),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, block // group, D),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, block // group, D),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, block, Dv * vb // 8),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, block, Dv // v_group),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, block, Dv // v_group),
+                     lambda i, t: (*bh(i, t), tcl(t), 0)),
+        pl.BlockSpec((1, 1, cap, D), lambda i, t: (*bh(i, t), 0, 0)),
+        pl.BlockSpec((1, 1, cap, Dv), lambda i, t: (*bh(i, t), 0, 0)),
+    ]
+    specs_out = [
+        pl.BlockSpec((1, 1, r, Dv), lambda i, t: (*bh(i, t), 0, 0)),
+    ]
+    out_shapes = [jax.ShapeDtypeStruct((B, H, r, Dv), jnp.float32)]
     from jax.experimental.pallas import tpu as pltpu
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # page_table, commit
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, r, D), lambda i, t, pt, cm: (*bh(i), 0, 0)),
-            pl.BlockSpec((1, 1, BT * kb // 8, D),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-            pl.BlockSpec((1, 1, BT // group, D),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-            pl.BlockSpec((1, 1, BT // group, D),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-            pl.BlockSpec((1, 1, BT, Dv * vb // 8),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-            pl.BlockSpec((1, 1, BT, Dv // v_group),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-            pl.BlockSpec((1, 1, BT, Dv // v_group),
-                         lambda i, t, pt, cm: (pt[i // H, t], i % H, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, r), lambda i, t, pt, cm: (*bh(i), 0)),
-            pl.BlockSpec((1, 1, r), lambda i, t, pt, cm: (*bh(i), 0)),
-            pl.BlockSpec((1, 1, r, Dv), lambda i, t, pt, cm: (*bh(i), 0, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((r,), jnp.float32),
-            pltpu.VMEM((r,), jnp.float32),
-            pltpu.VMEM((r, Dv), jnp.float32),
-        ],
-    )
-    out_shapes = [
-        jax.ShapeDtypeStruct((S, H, r), jnp.float32),
-        jax.ShapeDtypeStruct((S, H, r), jnp.float32),
-        jax.ShapeDtypeStruct((S, H, r, Dv), jnp.float32),
+    scratch = [
+        pltpu.VMEM((r,), jnp.float32),
+        pltpu.VMEM((r,), jnp.float32),
+        pltpu.VMEM((r, Dv), jnp.float32),
     ]
     kernel = functools.partial(
-        _paged_kernel, k_bits=k_bits, v_bits=v_bits, group=group,
-        v_group=v_group, block_tokens=BT, n_heads=H, scale=scale)
-    return pl.pallas_call(
+        _fused_kernel, k_bits=k_bits, v_bits=v_bits, group=group,
+        v_group=v_group, block=block, cap=cap, T=T, window=window,
+        scale=scale)
+    (out,) = pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
+        grid=grid,
+        in_specs=specs_in,
+        out_specs=specs_out,
         out_shape=out_shapes,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(page_table, commit, q, k_codes, k_scale, k_zero,
-      v_codes, v_scale, v_zero)
+    )(meta, q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+      resid_k, resid_v)
+    return out

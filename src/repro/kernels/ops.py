@@ -1,12 +1,15 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``asym_decode_attention`` is the full decode-attention entry point: the
-kernel produces partial flash stats over the packed committed store and this
-wrapper folds in the fp residual ring — numerically identical (≤1e-5) to
-``repro.core.attention_quant.decode_attend``.
+``asym_decode_attention`` (contiguous cache) and ``paged_asym_attention``
+(paged cache, decode *and* chunk query shapes) are full attention entry
+points: the kernels fold the fp residual ring in their final grid step and
+return finished, normalized outputs — there is **no jnp merge left on the
+decode hot path**.  Both match their pure-jnp oracles
+(``attention_quant.decode_attend`` / ``paged_decode_attend`` /
+``paged_chunk_attend``) to ≤1e-5, sliding-window layers included.
 
-On CPU the kernels run in interpret mode (``interpret=True`` default); on
-TPU pass ``interpret=False``.
+On CPU the kernels run in interpret mode (``interpret=None`` resolves to
+``True`` off-TPU); on TPU pass ``interpret=False`` or rely on the default.
 """
 
 from __future__ import annotations
@@ -20,119 +23,126 @@ import jax.numpy as jnp
 from repro.core.kvcache import LayerKVCache
 from repro.core.paged import PagedKVCache
 from repro.kernels.asym_decode_attn import (asym_decode_attn,
-                                            paged_asym_decode_attn)
+                                            asym_decode_attn_fused)
 from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.paged_attn import paged_asym_attn
 from repro.kernels.rtn_pack import rtn_pack
 
-__all__ = ["asym_decode_attention", "paged_asym_decode_attention",
+__all__ = ["asym_decode_attention", "paged_asym_attention",
+           "paged_asym_decode_attention", "kernel_supported",
            "rtn_pack", "flash_prefill_kernel"]
 
 
-def _fold_residual_ring(m, l, acc, qh, resid_k, resid_v, valid, scale):
-    """Merges the fp residual ring into partial flash stats and normalizes.
-
-    ``m/l [B,H,r]``, ``acc [B,H,r,Dv]`` — kernel outputs; ``valid [B, cap]``
-    masks live ring slots per batch row.  Shared by the contiguous and
-    paged kernel wrappers so the merge numerics can never diverge.
-    """
-    s = jnp.einsum("bhrd,bhkd->bhrk", qh.astype(jnp.float32),
-                   resid_k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[:, None, None], s, -1e30)
-    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-    p = jnp.where(valid[:, None, None],
-                  jnp.exp(s - m_new[..., None]), 0.0)
-    alpha = jnp.exp(m - m_new)
-    l_new = l * alpha + jnp.sum(p, axis=-1)
-    acc_new = acc * alpha[..., None] + jnp.einsum(
-        "bhrk,bhkd->bhrd", p, resid_v.astype(jnp.float32))
-    return acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
-@partial(jax.jit, static_argnames=("block", "interpret"))
+def kernel_supported(cache) -> bool:
+    """The fused kernels cover quantized K+V caches (fp/MLA → jnp path)."""
+    return (cache.k_bits > 0 and cache.v_bits > 0
+            and cache.v_slice_offset < 0)
+
+
+@partial(jax.jit, static_argnames=("block", "window", "interpret"))
 def asym_decode_attention(
     q: jax.Array,            # [B, Hq, 1, D]
     cache: LayerKVCache,
     *,
     block: int = 512,
-    interpret: bool = True,
+    window: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ):
-    """Kernel-backed decode attention over a quantized cache (+ fp ring)."""
+    """Kernel-backed decode attention over a quantized contiguous cache.
+
+    The fp residual ring is folded inside the kernel's final grid step;
+    ``window`` enables the sliding-window mask for local (L) layers.
+    """
     B, Hq, Sq, D = q.shape
     assert Sq == 1
     Hkv = cache.resid_k.shape[1]
     r = Hq // Hkv
     scale = D ** -0.5
     qh = q.reshape(B, Hkv, r, D)
-    commit = cache.commit_length().reshape(1).astype(jnp.int32)
-
-    assert cache.k_bits > 0 and cache.v_bits > 0 and \
-        cache.v_slice_offset < 0, \
+    assert kernel_supported(cache), \
         "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
-    m, l, acc = asym_decode_attn(
+    meta = jnp.stack([cache.commit_length(),
+                      cache.length]).astype(jnp.int32)
+    out = asym_decode_attn_fused(
         qh, cache.k_codes, cache.k_scale.astype(jnp.float32),
         cache.k_zero.astype(jnp.float32), cache.v_codes,
         cache.v_scale.astype(jnp.float32),
-        cache.v_zero.astype(jnp.float32), commit,
+        cache.v_zero.astype(jnp.float32), cache.resid_k,
+        cache.residual_v(), meta,
         k_bits=cache.k_bits, v_bits=cache.v_bits, group=cache.group,
-        v_group=cache.v_group, block=block, scale=scale,
-        interpret=interpret)
-
-    # fold in the fp residual ring (tiny — pure jnp)
-    pos = cache.ring_positions()
-    valid = (pos >= cache.commit_length()) & (pos < cache.length)
-    valid = jnp.broadcast_to(valid[None], (B, valid.shape[0]))
-    out = _fold_residual_ring(m, l, acc, qh, cache.resid_k,
-                              cache.residual_v(), valid, scale)
+        v_group=cache.v_group, block=block, window=window or 0,
+        scale=scale, interpret=_resolve_interpret(interpret))
     return out.reshape(B, Hq, 1, D).astype(q.dtype)
 
 
 @partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_asym_attention(
+    q: jax.Array,            # [S, Hq, Sq, D] — Sq = 1 (decode) or C (chunk)
+    cache: PagedKVCache,
+    q_pos: Optional[jax.Array] = None,   # [S, Sq] absolute row positions
+    *,
+    window: Optional[int] = None,
+    interpret: Optional[bool] = None,
+):
+    """Unified kernel-backed attention over a *paged* quantized cache.
+
+    One Pallas kernel serves every serving query shape: decode (``Sq = 1``,
+    default ``q_pos = lengths − 1``), causal prefill chunks (``Sq = C``
+    with ``q_pos = start + i``), and the fused mixed step (arbitrary
+    per-row positions; rows with ``q_pos < 0`` return zeros).  The fp
+    residual ring is folded inside the kernel and ``window`` applies the
+    per-slot sliding-window lower bound — L layers run the same kernel.
+    """
+    S, Hq, Sq, D = q.shape
+    Hkv = cache.resid_k.shape[1]
+    r = Hq // Hkv
+    scale = D ** -0.5
+    # GQA rows flattened query-major: row j = qi·r + ri.
+    qh = (q.reshape(S, Hkv, r, Sq, D).swapaxes(2, 3)
+          .reshape(S, Hkv, Sq * r, D))
+    commit = cache.commit_lengths().astype(jnp.int32)
+    lengths = cache.lengths.astype(jnp.int32)
+    if q_pos is None:
+        q_pos = (lengths - 1)[:, None]              # decode: last position
+    qp_rows = jnp.repeat(q_pos.astype(jnp.int32), r, axis=1)  # [S, Sq·r]
+    # One trailing zero column: the kernel's final grid step DMAs the
+    # scratch block there and folds the fp ring instead.
+    pt_pad = jnp.pad(cache.page_table, ((0, 0), (0, 1)))
+
+    assert kernel_supported(cache), \
+        "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
+    out = paged_asym_attn(
+        qh, cache.k_codes, cache.k_scale.astype(jnp.float32),
+        cache.k_zero.astype(jnp.float32), cache.v_codes,
+        cache.v_scale.astype(jnp.float32),
+        cache.v_zero.astype(jnp.float32),
+        cache.resid_k, cache.residual_v(), pt_pad, commit, lengths,
+        qp_rows,
+        k_bits=cache.k_bits, v_bits=cache.v_bits, group=cache.group,
+        v_group=cache.v_group, block_tokens=cache.block_tokens,
+        window=window or 0, scale=scale,
+        interpret=_resolve_interpret(interpret))
+    out = (out.reshape(S, Hkv, Sq, r, D).swapaxes(2, 3)
+           .reshape(S, Hq, Sq, D))
+    return out.astype(q.dtype)
+
+
 def paged_asym_decode_attention(
     q: jax.Array,            # [S, Hq, 1, D]
     cache: PagedKVCache,
     *,
     window: Optional[int] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
-    """Kernel-backed decode attention over a *paged* quantized cache.
-
-    The Pallas kernel walks each slot's page table (scalar prefetch drives
-    the BlockSpec index maps) and returns partial flash stats over the
-    committed pool blocks; this wrapper folds in the per-slot fp residual
-    ring.  Numerically matches ``attention_quant.paged_decode_attend`` for
-    **global (non-windowed) layers**.  Windowed layers need a per-slot
-    lower-bound mask the kernel doesn't take yet — unlike the contiguous
-    layout, a paged window cache keeps full-capacity page tables, so the
-    kernel would silently attend beyond the window; refuse instead.
-    """
-    if window is not None:
-        raise NotImplementedError(
-            "paged kernel path has no sliding-window mask yet — use "
-            "attention_quant.paged_decode_attend for L layers")
-    S, Hq, Sq, D = q.shape
-    assert Sq == 1
-    Hkv = cache.resid_k.shape[1]
-    r = Hq // Hkv
-    scale = D ** -0.5
-    qh = q.reshape(S, Hkv, r, D)
-    commit = cache.commit_lengths().astype(jnp.int32)
-
-    assert cache.k_bits > 0 and cache.v_bits > 0 and \
-        cache.v_slice_offset < 0, \
-        "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
-    m, l, acc = paged_asym_decode_attn(
-        qh, cache.k_codes, cache.k_scale.astype(jnp.float32),
-        cache.k_zero.astype(jnp.float32), cache.v_codes,
-        cache.v_scale.astype(jnp.float32),
-        cache.v_zero.astype(jnp.float32),
-        cache.page_table, commit,
-        k_bits=cache.k_bits, v_bits=cache.v_bits, group=cache.group,
-        v_group=cache.v_group, block_tokens=cache.block_tokens,
-        scale=scale, interpret=interpret)
-
-    # fold in the per-slot fp residual ring (tiny — pure jnp)
-    pos = cache.ring_positions()                       # [S, cap]
-    valid = (pos >= commit[:, None]) & (pos < cache.lengths[:, None])
-    out = _fold_residual_ring(m, l, acc, qh, cache.resid_k,
-                              cache.residual_v(), valid, scale)
-    return out.reshape(S, Hq, 1, D).astype(q.dtype)
+    """Decode-shaped entry point (kept for callers/tests of PR 1): the
+    unified kernel with default last-position rows.  Windowed (L) layers
+    are fully supported — the jnp fallback is no longer needed."""
+    assert q.shape[2] == 1
+    return paged_asym_attention(q, cache, window=window,
+                                interpret=interpret)

@@ -1,0 +1,213 @@
+"""Unified paged AsymKV attention kernel — one Pallas kernel for the whole
+serving hot path.
+
+This kernel serves **both** query shapes of the continuous-batching engine
+over the packed block pool of :class:`repro.core.paged.PagedKVCache`:
+
+* **decode** — one query row per slot (``Sq = 1``), attending over the
+  slot's full committed history + fp residual ring;
+* **prefill chunks** — ``Sq = C`` causal query rows per slot at per-slot
+  offsets (``q_pos`` carries each row's absolute position), attending over
+  history *plus* the freshly written chunk;
+* **mixed rows** — the fused serving step piggybacks a decode row onto a
+  chunk batch; rows are independent, so any per-row position vector works
+  (rows with ``q_pos < 0`` are dead and produce zeros).
+
+Layout (per KV head; ``f = 8 // bits`` codes per byte):
+
+  K pool   [N, H, BT·k_bits/8, D]  token-packed codes  (scales [N, H, BT/G, D])
+  V pool   [N, H, BT, Dv·v_bits/8] channel-packed codes (scales [N, H, BT, Dv/vg])
+  fp ring  [S, H, cap, D]          per-slot residual ring (cap = residual+G)
+
+Grid ``(S·Hkv, NB + 1)`` — the token dimension walks the **page table**
+columns (scalar prefetch: every pool BlockSpec index map resolves its HBM
+block through ``page_table[slot, t]`` before the DMA is issued — the
+vLLM-style paged-attention pattern over *sub-byte packed* pools).  The page
+table is padded with one trailing zero column: grid step ``NB`` DMAs the
+reserved scratch block (masked to a no-op by ``pt > 0``) and instead folds
+the **fp residual ring in-kernel** — the final online-softmax block — then
+normalizes and writes the finished output.  No partial stats leave the
+kernel and no jnp merge runs afterwards: committed history, sliding-window
+masking, and the fp ring are all one fused pass.
+
+Masking, per query row ``j`` at absolute position ``p = q_pos[j]``:
+
+  committed   pos < commit[slot]          (and ``page_table`` entry > 0)
+  causal      pos ≤ p
+  window      pos > p - W                 (static ``window``; 0 = global)
+  ring        commit ≤ rpos < length      (ring positions recomputed
+                                           in-kernel from ``commit``)
+
+GQA rows are pre-flattened by the wrapper: ``q [S, Hkv, Sq·r, D]`` with row
+``j = qi·r + ri`` and ``q_pos`` repeated per ``r`` — the kernel never needs
+to know ``r``.
+
+TPU notes: block sizes follow the pool's ``block_tokens`` (a multiple of
+the quant group); the two MXU matmuls run on the dequantized fp32 block in
+VMEM, so HBM traffic is ``bits/16`` of a bf16 cache — the paper's memory
+saving realized at the bandwidth-bound decode step.  On CPU run
+``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.asym_decode_attn import (NEG_INF, _accum_block,
+                                            _dequant_k_block,
+                                            _dequant_v_block,
+                                            _normalized_out,
+                                            _ring_positions)
+
+__all__ = ["paged_asym_attn"]
+
+
+def _kernel(pt_ref, cm_ref, ln_ref, q_ref, qpos_ref, kc_ref, ks_ref, kz_ref,
+            vc_ref, vs_ref, vz_ref, rk_ref, rv_ref, out_ref,
+            m_scr, l_scr, acc_scr, *, k_bits: int, v_bits: int, group: int,
+            v_group: int, block_tokens: int, n_heads: int, cap: int,
+            window: int, scale: float):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    b = i // n_heads
+
+    @pl.when(t == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # [Q, D]
+    qp = qpos_ref[0]                                   # [Q] int32
+
+    def row_mask(pos):
+        """Per-row causal + window + dead-row mask vs key positions."""
+        m = (pos <= qp[:, None]) & (qp[:, None] >= 0)
+        if window > 0:
+            m &= pos > qp[:, None] - window
+        return m
+
+    # ---- pool block ---------------------------------------------------
+    # At t == NB the padded page-table column is 0, so ``valid`` is all
+    # False and this block is an exact no-op — the ring fold below is the
+    # only live work of the final grid step.
+    k = _dequant_k_block(kc_ref, ks_ref, kz_ref, bits=k_bits, group=group)
+    v = _dequant_v_block(vc_ref, vs_ref, vz_ref, bits=v_bits, group=v_group)
+    pos = (t * block_tokens
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block_tokens), 1))
+    valid = (pt_ref[b, t] > 0) & (pos < cm_ref[b]) & row_mask(pos)
+    _accum_block(q, k, v, valid, scale, m_scr, l_scr, acc_scr)
+
+    # ---- final step: fold the fp residual ring, normalize, emit -------
+    @pl.when(t == n_t - 1)
+    def _ring_and_finalize():
+        commit = cm_ref[b]
+        rpos = _ring_positions(commit, cap)            # absolute ring pos
+        rvalid = ((rpos >= commit) & (rpos < ln_ref[b]) & row_mask(rpos))
+        _accum_block(q, rk_ref[0, 0].astype(jnp.float32),
+                     rv_ref[0, 0].astype(jnp.float32), rvalid, scale,
+                     m_scr, l_scr, acc_scr)
+        out_ref[0, 0] = _normalized_out(l_scr, acc_scr)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "v_bits", "group", "v_group", "block_tokens",
+                     "window", "scale", "interpret"))
+def paged_asym_attn(
+    q: jax.Array,           # [S, Hkv, Q, D] — Q = Sq·r flattened query rows
+    k_codes: jax.Array,     # [N, Hkv, BT·k_bits/8, D] uint8 pool
+    k_scale: jax.Array,     # [N, Hkv, BT/G, D]
+    k_zero: jax.Array,
+    v_codes: jax.Array,     # [N, Hkv, BT, Dv·v_bits/8] uint8 pool
+    v_scale: jax.Array,     # [N, Hkv, BT, Dv/vg]
+    v_zero: jax.Array,
+    resid_k: jax.Array,     # [S, Hkv, cap, D] fp residual ring
+    resid_v: jax.Array,     # [S, Hkv, cap, Dv]
+    page_table: jax.Array,  # [S, NB+1] int32, LAST COLUMN ZERO (ring step)
+    commit: jax.Array,      # [S] int32 per-slot committed length
+    lengths: jax.Array,     # [S] int32 per-slot stream length
+    q_pos: jax.Array,       # [S, Q] int32 per-row absolute position (<0 dead)
+    *,
+    k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
+    block_tokens: int = 64, window: int = 0, scale: float,
+    interpret: bool = True,
+):
+    """Fused paged attention over (committed pool + fp ring).
+
+    Returns the **normalized** output ``[S, Hkv, Q, Dv]`` in fp32 — the
+    residual-ring merge happens inside the kernel's final grid step, so
+    there is nothing left for the caller to fold.  ``window = 0`` disables
+    sliding-window masking (global layers); ``window = W`` applies the
+    per-row lower bound ``pos > q_pos - W`` (local layers).
+    """
+    S, H, Q, D = q.shape
+    BT = block_tokens
+    v_group = v_group or group
+    Dv = v_scale.shape[3] * v_group
+    cap = resid_k.shape[2]
+    NB = page_table.shape[1] - 1  # last column is the zero-padded ring step
+    grid = (S * H, NB + 1)
+    kb, vb = k_bits, v_bits
+
+    def bh(i):
+        return (i // H, i % H)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # page_table, commit, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, D),
+                         lambda i, t, pt, cm, ln: (*bh(i), 0, 0)),
+            pl.BlockSpec((1, Q), lambda i, t, pt, cm, ln: (i // H, 0)),
+            pl.BlockSpec((1, 1, BT * kb // 8, D),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, BT // group, D),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, BT // group, D),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv * vb // 8),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv // v_group),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, BT, Dv // v_group),
+                         lambda i, t, pt, cm, ln: (pt[i // H, t], i % H,
+                                                   0, 0)),
+            pl.BlockSpec((1, 1, cap, D),
+                         lambda i, t, pt, cm, ln: (*bh(i), 0, 0)),
+            pl.BlockSpec((1, 1, cap, Dv),
+                         lambda i, t, pt, cm, ln: (*bh(i), 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, Dv),
+                         lambda i, t, pt, cm, ln: (*bh(i), 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Q,), jnp.float32),
+            pltpu.VMEM((Q,), jnp.float32),
+            pltpu.VMEM((Q, Dv), jnp.float32),
+        ],
+    )
+    out_shapes = [jax.ShapeDtypeStruct((S, H, Q, Dv), jnp.float32)]
+    kernel = functools.partial(
+        _kernel, k_bits=k_bits, v_bits=v_bits, group=group, v_group=v_group,
+        block_tokens=BT, n_heads=H, cap=cap, window=window, scale=scale)
+    (out,) = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(page_table, commit, lengths, q, q_pos, k_codes, k_scale, k_zero,
+      v_codes, v_scale, v_zero, resid_k, resid_v)
+    return out

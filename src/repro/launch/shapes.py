@@ -17,7 +17,7 @@ __all__ = ["ShapeCell", "SHAPES", "LONG_OK", "cells_for", "all_cells"]
 @dataclasses.dataclass(frozen=True)
 class ShapeCell:
     name: str
-    kind: str  # train | prefill | decode | chunk
+    kind: str  # train | prefill | decode | chunk | serve
     seq: int
     batch: int
     # Paged serving cells (variable-length continuous batching): ``layout``
@@ -43,6 +43,12 @@ SHAPES = {
                                 block_tokens=256),
     "serve_decode_8k": ShapeCell("serve_decode_8k", "decode", 8192, 64,
                                  layout="paged", block_tokens=256),
+    # Fused mixed prefill+decode tick (Sarathi-style piggybacking): one
+    # compiled ``model.serve_step`` advances every mid-prompt slot by a
+    # chunk AND every decoding slot by a token.
+    "serve_mixed_8k": ShapeCell("serve_mixed_8k", "serve", 8192, 64,
+                                layout="paged", chunk=256,
+                                block_tokens=256),
 }
 
 # Sub-quadratic archs that run the 500k-context decode cell.

@@ -83,6 +83,11 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
     if cell.kind == "chunk":
         C = cell.chunk or 256
         return {"tokens": sd((B, C), i32), "n_valid": sd((B,), i32)}
+    if cell.kind == "serve":
+        # fused mixed tick: chunk tokens + piggybacked decode tokens
+        C = cell.chunk or 256
+        return {"tokens": sd((B, C), i32), "n_valid": sd((B,), i32),
+                "token": sd((B,), i32), "active": sd((B,), jnp.bool_)}
     if cell.kind == "decode":
         if cell.layout == "paged":
             # per-slot positions + active mask (variable-length batching)
@@ -302,13 +307,31 @@ def make_step_bundle(
     # serving: params in bf16
     params_struct = spec_shapes(model.spec, dtype=jnp.bfloat16)
 
-    if cell.layout == "paged" or cell.kind == "chunk":
-        # Paged serving cells: chunked prefill + per-slot decode over the
-        # block-pool cache (variable-length continuous batching).
+    if cell.layout == "paged" or cell.kind in ("chunk", "serve"):
+        # Paged serving cells: fused mixed tick / chunked prefill /
+        # per-slot decode over the block-pool cache (variable-length
+        # continuous batching).
         caches_struct = paged_cache_structs(model, cell)
         c_pspecs = cache_pspecs(caches_struct, mesh)
         c_shard = _to_shardings(c_pspecs, mesh)
         rep = NamedSharding(mesh, P())
+        if cell.kind == "serve":
+            def svfn(params, tokens, caches, n_valid, token, active):
+                return model.serve_step(params, tokens, caches, n_valid,
+                                        token, active)
+            return StepBundle(
+                fn=svfn,
+                args=(params_struct, inputs["tokens"], caches_struct,
+                      inputs["n_valid"], inputs["token"],
+                      inputs["active"]),
+                in_shardings=(p_shard, in_batch_shard["tokens"], c_shard,
+                              in_batch_shard["n_valid"],
+                              in_batch_shard["token"],
+                              in_batch_shard["active"]),
+                out_shardings=(rep, c_shard),
+                model=model,
+                donate_argnums=(2,),
+            )
         if cell.kind == "chunk":
             def cfn(params, tokens, caches, n_valid):
                 return model.prefill_chunk(params, tokens, caches, n_valid)

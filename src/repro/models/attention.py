@@ -14,6 +14,10 @@ Modes:
   * ``chunk``   — chunked prefill over a paged cache: writes ``C`` tokens
     per slot at per-slot offsets, then attends the chunk queries over
     history + chunk with positional causal masking.
+  * ``serve``   — the fused mixed tick: each slot's next prompt chunk AND
+    its decode token in one pass (rows are position-tagged; see
+    ``Model.serve_step``).  With ``use_pallas`` the paged modes read
+    through the unified Pallas kernel (``repro.kernels.paged_attn``).
 """
 
 from __future__ import annotations
@@ -175,12 +179,30 @@ def _qkv(params, x, cfg: ModelConfig, positions, theta):
     return (q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2))
 
 
+def _paged_attend(q, cache, *, q_start=None, q_pos=None, window=None,
+                  use_pallas=False):
+    """Paged read dispatch: the unified Pallas kernel when enabled and
+    supported (quantized K+V, non-MLA), else the pure-jnp oracle paths."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        if kops.kernel_supported(cache):
+            if q_pos is None and q_start is not None:
+                C = q.shape[2]
+                q_pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)
+            return kops.paged_asym_attention(q, cache, q_pos, window=window)
+    if q_start is None and q_pos is None:
+        return paged_decode_attend(q, cache, window=window)
+    if q_start is None:
+        q_start = q_pos[:, 0]
+    return paged_chunk_attend(q, cache, q_start, q_pos=q_pos, window=window)
+
+
 def attention_fwd(
     params: dict,
     x: jax.Array,
     cfg: ModelConfig,
     *,
-    mode: str,  # train | prefill | decode | chunk
+    mode: str,  # train | prefill | decode | chunk | serve
     positions: jax.Array,
     cache: Optional[LayerKVCache] = None,
     window: Optional[int] = None,
@@ -191,20 +213,43 @@ def attention_fwd(
     seqpar_axes: Optional[tuple] = None,
     seqpar_min: int = 1 << 62,
     valid: Optional[jax.Array] = None,  # [S] — paged decode/chunk validity
+    decode_active: Optional[jax.Array] = None,  # [S] — serve decode rows
+    use_pallas: bool = False,
 ):
-    """Returns (out [B,S,d], updated cache or None)."""
+    """Returns (out [B,S,d], updated cache or None).
+
+    ``serve`` is the fused mixed prefill+decode mode: ``x [S, C+1]`` holds
+    each slot's next prompt chunk (rows ``0..C-1``, ``valid`` real tokens)
+    *plus* its decode token (row ``C``, live where ``decode_active``); the
+    chunk is written at per-slot offsets, the decode token appended, and
+    one attention call with per-row positions serves both query kinds.
+    """
     theta = cfg.rope_theta if theta is None else theta
     q, k, v = _qkv(params, x, cfg, positions, theta)
 
-    if mode == "chunk":
+    if mode == "serve":
+        assert isinstance(cache, PagedKVCache)
+        C = q.shape[2] - 1
+        start = cache.lengths
+        cache = cache.write_chunk(k[:, :, :C], v[:, :, :C], valid)
+        cache = cache.append(k[:, :, C:], v[:, :, C:], decode_active)
+        # chunk row i sits at start + i; the decode row's token was
+        # appended at position start (its pre-append length)
+        q_pos = jnp.concatenate(
+            [start[:, None] + jnp.arange(C, dtype=jnp.int32)[None],
+             start[:, None]], axis=1)                   # [S, C+1]
+        out = _paged_attend(q, cache, q_pos=q_pos, window=window,
+                            use_pallas=use_pallas)
+    elif mode == "chunk":
         assert isinstance(cache, PagedKVCache)
         q_start = cache.lengths
         cache = cache.write_chunk(k, v, valid)
-        out = paged_chunk_attend(q, cache, q_start, window=window)
+        out = _paged_attend(q, cache, q_start=q_start, window=window,
+                            use_pallas=use_pallas)
     elif mode == "decode" and isinstance(cache, PagedKVCache):
         active = None if valid is None else valid > 0
         cache = cache.append(k, v, active)
-        out = paged_decode_attend(q, cache, window=window)
+        out = _paged_attend(q, cache, window=window, use_pallas=use_pallas)
     elif mode == "decode":
         assert cache is not None and q.shape[2] == 1
         cache = cache.append(k, v)

@@ -163,6 +163,10 @@ class Model:
         # least seqpar_min_tokens — the long_500k path.
         self.seqpar_axes: Optional[tuple] = None
         self.seqpar_min_tokens: int = 1 << 62
+        # Paged serving attention backend: True routes decode/chunk/serve
+        # reads through the unified Pallas kernel (interpret mode off-TPU);
+        # False keeps the pure-jnp oracle paths.
+        self.use_pallas: bool = False
         self.spec = self._param_specs()
 
     def _constrain(self, x):
@@ -327,10 +331,25 @@ class Model:
                 caches[f"run{i}_stage{j}"] = self._stack(one, n)
         return caches
 
+    def paged_stage_windows(self) -> dict:
+        """Per-stage sliding window of the paged cache pytree: ``run{i}_
+        stage{j}`` → ``cfg.window`` for local (L) runs, else None.  The
+        serving engine uses this to give windowed stages their own block
+        mapping so out-of-window blocks can be freed during decode."""
+        out: dict[str, Optional[int]] = {}
+        for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                continue
+            for j, _ in enumerate(self.run_stages(run)):
+                out[f"run{i}_stage{j}"] = (self.cfg.window
+                                           if run.kind == "L" else None)
+        return out
+
     # ------------------------------------------------------------ blocks
 
     def _attn_block(self, p, x, run: Run, *, mode, positions, cache=None,
-                    cross_cache=None, enc_out=None, aux=None, valid=None):
+                    cross_cache=None, enc_out=None, aux=None, valid=None,
+                    decode_active=None):
         """One attention block.  Returns (x, cache, cross_cache, aux)."""
         cfg = self.cfg
         window = cfg.window if run.kind == "L" else None
@@ -346,7 +365,9 @@ class Model:
                 p["attn"], h, cfg, mode=mode, positions=positions,
                 cache=cache, window=window, theta=theta,
                 seqpar_axes=self.seqpar_axes,
-                seqpar_min=self.seqpar_min_tokens, valid=valid)
+                seqpar_min=self.seqpar_min_tokens, valid=valid,
+                decode_active=decode_active,
+                use_pallas=self.use_pallas)
         if cfg.sandwich_norm:
             a_out = _apply_norm(cfg, p["post_attn_norm"], a_out)
         x = x + a_out
@@ -554,7 +575,7 @@ class Model:
             stacked, one)
 
     def _serve_runs(self, params, x, caches, *, mode, positions,
-                    enc_out=None, valid=None):
+                    enc_out=None, valid=None, decode_active=None):
         """Shared prefill/decode traversal.
 
         Caches are scanned as part of the CARRY with per-iteration
@@ -566,7 +587,7 @@ class Model:
         new_caches = {}
         for i, run in enumerate(self.runs):
             if run.kind == "M":
-                if mode == "chunk":
+                if mode in ("chunk", "serve"):
                     raise NotImplementedError(
                         "chunked prefill over SSM runs needs masked state "
                         "updates (see init_paged_caches gating)")
@@ -611,7 +632,7 @@ class Model:
                     x, c1, cc1, _ = self._attn_block(
                         p, x, run, mode=mode, positions=positions,
                         cache=c1, cross_cache=cc1, enc_out=enc_out,
-                        valid=valid)
+                        valid=valid, decode_active=decode_active)
                     new_caches[key] = jax.tree.map(lambda a: a[None], c1)
                     if cc1 is not None:
                         new_caches[key + "_cross"] = jax.tree.map(
@@ -632,14 +653,14 @@ class Model:
                         x2, c2, cc2, _ = self._attn_block(
                             p, x, run, mode=mode, positions=positions,
                             cache=c, cross_cache=cc, enc_out=enc_out,
-                            valid=valid)
+                            valid=valid, decode_active=decode_active)
                         return (x2, self._put_layer(stk, c2, idx),
                                 self._put_layer(cstk, cc2, idx)), None
                     x, stk = carry
                     c = self._take_layer(stk, idx)
                     x2, c2, _, _ = self._attn_block(
                         p, x, run, mode=mode, positions=positions, cache=c,
-                        valid=valid)
+                        valid=valid, decode_active=decode_active)
                     return (x2, self._put_layer(stk, c2, idx)), None
 
                 if has_cross:
@@ -696,6 +717,47 @@ class Model:
                                      positions=positions, valid=n_valid)
         x = _apply_norm(cfg, params["final_norm"], x)
         last = jnp.clip(n_valid - 1, 0, C - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = self._lm_head(params, x_last)[:, 0]
+        return logits, caches
+
+    def serve_step(self, params, tokens: jax.Array, caches: dict,
+                   n_valid: jax.Array, decode_tok: jax.Array,
+                   decode_active: jax.Array):
+        """One fused mixed prefill+decode serving step over paged caches.
+
+        Sarathi-style piggybacking in a single compiled computation:
+        ``tokens [S, C]`` carries each *prefilling* slot's next prompt
+        chunk (``n_valid [S]`` real tokens; 0 = not prefilling) while
+        ``decode_tok [S]`` carries each *decoding* slot's last sampled
+        token (live where ``decode_active [S]``).  The decode token rides
+        as row ``C`` of the embedded batch, so one QKV/MLP/attention pass
+        advances every prefilling slot by a chunk AND every decoding slot
+        by a token — decoding slots never stall behind another request's
+        prefill, and one compilation serves every mix.  Returns per-slot
+        logits at each slot's live row (chunk row ``n_valid − 1`` or the
+        decode row) ``[S, V]`` and the updated caches.
+        """
+        cfg = self.cfg
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        S, C = tokens.shape
+        toks = jnp.concatenate([tokens, decode_tok[:, None]], axis=1)
+        x = embed_lookup(params["embed"], toks, dtype)
+        if cfg.norm_plus_one:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+        starts = None
+        for c in caches.values():  # all stages share one length vector
+            starts = c.lengths[0]
+            break
+        # chunk rows at start + i; the decode row's token lands at start
+        positions = jnp.concatenate(
+            [starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None],
+             starts[:, None]], axis=1)[:, None, :]       # [S, 1, C+1]
+        x, caches = self._serve_runs(params, x, caches, mode="serve",
+                                     positions=positions, valid=n_valid,
+                                     decode_active=decode_active)
+        x = _apply_norm(cfg, params["final_norm"], x)
+        last = jnp.where(decode_active, C, jnp.clip(n_valid - 1, 0, C - 1))
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
         logits = self._lm_head(params, x_last)[:, 0]
         return logits, caches

@@ -1,32 +1,46 @@
 """Continuous-batching serving engine over paged AsymKV caches.
 
-Two modes, one API:
+Three modes, one API:
 
-* **Paged (default for decoder-only attention archs)** — variable-length
-  continuous batching on :class:`~repro.core.paged.PagedKVCache`:
+* **Fused paged (default for decoder-only attention archs)** — variable-
+  length continuous batching with Sarathi-style mixed ticks on
+  :class:`~repro.core.paged.PagedKVCache`:
 
   - *admission*: a request takes any free slot; its prompt is **not**
     padded to a batch-wide length;
-  - *chunked prefill*: every mid-prompt slot consumes its next
-    ``prefill_chunk`` tokens per step through one jit'd
-    ``model.prefill_chunk`` call of fixed shape ``[slots, C]`` — prompts
-    of any mix of lengths share one compilation (the final partial chunk
-    is padded and masked via ``n_valid``), so admitting a new length never
-    recompiles;
-  - *decode*: one jit'd ``model.decode_step`` with per-slot positions and
-    an active mask — slots at different stream lengths decode in the same
-    tick;
+  - *fused stepping*: whenever any slot is mid-prompt, the engine issues a
+    **single** jit'd ``model.serve_step`` per tick that piggybacks each
+    prefilling slot's next ``prefill_chunk`` tokens onto the decode batch
+    — decoding slots emit a token in the same tick instead of stalling
+    behind another request's prefill.  Pure-decode ticks drop to the
+    1-token-wide ``model.decode_step``.  Two compiled shapes serve every
+    prompt-length mix (the final partial chunk is padded and masked via
+    ``n_valid``), so admitting a new length never recompiles;
   - *reclaim*: on EOS/max-tokens the slot frees immediately and its cache
     blocks return to the :class:`~repro.core.paged.BlockAllocator` free
-    list, ready for the next admission.
+    list; sliding-window (L) stages additionally release blocks wholly
+    below ``length − window`` *during* decode (``BlockAllocator.
+    free_below``) — windowed stages own their block mapping for exactly
+    this reason.
 
-  The engine owns the host-side block mapping (one logical mapping shared
-  by every layer/stage) and pushes it into the cache pytree's
-  ``page_table``/``lengths`` leaves before each step (`_sync_caches`).
+  The engine owns the host-side block mappings (one shared by all global
+  stages + one per windowed stage) and pushes them into each cache
+  pytree's ``page_table``/``lengths`` leaves before each step
+  (`_sync_caches`).
+
+* **Alternating paged** (``fused=False``) — the PR-1 baseline: prefill-
+  chunk steps and decode ticks alternate (decoding slots wait whenever any
+  slot is mid-prompt).  Kept as the differential/benchmark baseline.
 
 * **Legacy static batching** — the original pad-to-``prompt_len``
   generational engine, kept for archs the paged path doesn't cover yet
   (SSM hybrids, encoder-decoder, MLA; see ``Model.supports_paged``).
+
+``ticks`` counts jit'd step invocations; ``tick_times`` their wall times —
+the serving benchmark (``benchmarks.bench_serving``) reads both.  Passing
+``use_pallas=True`` routes every paged attention read through the unified
+Pallas kernel (``repro.kernels.paged_attn``); the default keeps the jnp
+paths (the kernel runs in interpret mode off-TPU).
 
 Single-host CPU works end-to-end (the ``serve_requests`` example); on a
 pod the same engine runs with the sharded step functions.
@@ -69,7 +83,9 @@ class ServingEngine:
                  dtype=jnp.float32, paged: Optional[bool] = None,
                  block_tokens: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 fused: Optional[bool] = None,
+                 use_pallas: bool = False):
         self.model = model
         self.params = params
         self.slots = slots
@@ -79,6 +95,8 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
         self.paged = model.supports_paged() if paged is None else paged
+        self.ticks = 0              # jit'd step invocations
+        self.tick_times: list[float] = []
 
         if not self.paged and prompt_len is None:
             raise ValueError(
@@ -90,6 +108,8 @@ class ServingEngine:
             BT = block_tokens or PagedKVCache.default_block_tokens(G)
             self.block_tokens = BT
             self.chunk = prefill_chunk or (R + G)
+            self.fused = True if fused is None else fused
+            self.use_pallas = use_pallas
             if self.chunk % G or self.chunk > R + G:
                 raise ValueError(
                     f"prefill_chunk {self.chunk} must be a multiple of "
@@ -99,15 +119,44 @@ class ServingEngine:
             self.caches = model.init_paged_caches(
                 slots, max_tokens, num_blocks=self.num_blocks,
                 block_tokens=BT, dtype=dtype)
-            self.alloc = BlockAllocator(
-                slots, self.num_blocks, max_blocks,
-                block_tokens=BT, residual=R, group=G)
+
+            def mk_alloc():
+                return BlockAllocator(
+                    slots, self.num_blocks, max_blocks,
+                    block_tokens=BT, residual=R, group=G)
+
+            # One block mapping shared by every global stage; windowed (L)
+            # stages own theirs so out-of-window blocks can be freed early
+            # without invalidating another stage's live data.
+            self.alloc = mk_alloc()
+            self.stage_windows = model.paged_stage_windows()
+            self.wallocs: dict[str, BlockAllocator] = {
+                k: mk_alloc() for k, w in self.stage_windows.items() if w}
+            self.win_blocks_freed = 0
             # caches are donated: the block pool is the dominant buffer and
             # must update in place, not copy per tick (mirrors steps.py's
             # bundles; a no-op on CPU, load-bearing on TPU)
-            self._chunk_fn = jax.jit(model.prefill_chunk,
+
+            def _with_backend(fn, flag=use_pallas):
+                # Pin THIS engine's attention backend at trace time: the
+                # flag lives on the shared Model, so without the pin a
+                # second engine on the same model would silently retarget
+                # the first engine's not-yet-traced step functions.
+                def wrapped(*args):
+                    prev = model.use_pallas
+                    model.use_pallas = flag
+                    try:
+                        return fn(*args)
+                    finally:
+                        model.use_pallas = prev
+                return wrapped
+
+            self._serve = jax.jit(_with_backend(model.serve_step),
+                                  donate_argnums=(2,))
+            self._chunk_fn = jax.jit(_with_backend(model.prefill_chunk),
                                      donate_argnums=(2,))
-            self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+            self._decode = jax.jit(_with_backend(model.decode_step),
+                                   donate_argnums=(2,))
             # per-slot host state
             self._off = np.zeros(slots, np.int64)     # prompt tokens consumed
             self._next_tok = np.zeros(slots, np.int32)
@@ -161,26 +210,47 @@ class ServingEngine:
                 # see each other's commitments, or concurrent admissions
                 # oversubscribe an undersized pool and ensure() blows up
                 # mid-prefill.
-                self.alloc.ensure(i, len(req.prompt) + 2)
+                self._ensure(i, len(req.prompt) + 2)
             newly.append((i, req))
         return newly
 
     # ------------------------------------------------------ paged plumbing
 
-    def _sync_caches(self):
-        """Pushes the host block mapping + lengths into every stage cache."""
-        pt = jnp.asarray(self.alloc.page_table)
-        ln = jnp.asarray(self.alloc.lengths, jnp.int32)
+    def _ensure(self, i: int, new_len: int):
+        """Maps blocks up to ``new_len`` in every block mapping (global +
+        per-windowed-stage; a windowed mapping can never exhaust before the
+        global one — it only ever frees extra)."""
+        self.alloc.ensure(i, new_len)
+        for w in self.wallocs.values():
+            w.ensure(i, new_len)
 
-        def upd(c):
+    def _advance(self, i: int, n_tokens: int):
+        """Advances a slot's length everywhere, then releases windowed
+        blocks that fell wholly below each L stage's window."""
+        self.alloc.advance(i, n_tokens)
+        length = int(self.alloc.lengths[i])
+        for key, w in self.wallocs.items():
+            w.advance(i, n_tokens)
+            self.win_blocks_freed += w.free_below(
+                i, length - self.stage_windows[key])
+
+    def _sync_caches(self):
+        """Pushes each stage's block mapping + lengths into its cache."""
+        ln = jnp.asarray(self.alloc.lengths, jnp.int32)
+        tables = {k: jnp.asarray(w.page_table)
+                  for k, w in self.wallocs.items()}
+        pt = jnp.asarray(self.alloc.page_table)
+
+        def upd(key, c):
             if not isinstance(c, PagedKVCache):
                 return c
+            t = tables.get(key, pt)
             return dataclasses.replace(
                 c,
-                page_table=jnp.broadcast_to(pt[None], c.page_table.shape),
+                page_table=jnp.broadcast_to(t[None], c.page_table.shape),
                 lengths=jnp.broadcast_to(ln[None], c.lengths.shape))
 
-        self.caches = {k: upd(c) for k, c in self.caches.items()}
+        self.caches = {k: upd(k, c) for k, c in self.caches.items()}
 
     def _finish(self, i: int, now: float):
         r = self.active[i]
@@ -188,13 +258,17 @@ class ServingEngine:
         r.t_done = now
         self.active[i] = None
         self.alloc.release(i)
+        for w in self.wallocs.values():
+            w.release(i)
         self._off[i] = 0
 
     def jit_stats(self) -> dict:
         """Compilation counts of the step functions — the serving test
         asserts these stay at 1 across mixed prompt lengths."""
         stats = {"decode": int(self._decode._cache_size())}
-        if self.paged:
+        if self.paged and self.fused:
+            stats["serve"] = int(self._serve._cache_size())
+        elif self.paged:
             stats["prefill_chunk"] = int(self._chunk_fn._cache_size())
         else:
             stats["prefill"] = int(self._prefill._cache_size())
@@ -206,63 +280,30 @@ class ServingEngine:
         return [i for i, r in enumerate(self.active)
                 if r is not None and self._off[i] < len(r.prompt)]
 
-    def _step_prefill_chunk(self):
-        """All mid-prompt slots consume their next chunk in one fused call."""
-        C = self.chunk
-        toks = np.zeros((self.slots, C), np.int32)
-        nv = np.zeros(self.slots, np.int32)
-        for i in self._prefilling():
-            r = self.active[i]
-            part = r.prompt[self._off[i]:self._off[i] + C]
-            toks[i, :len(part)] = part
-            nv[i] = len(part)
-            self.alloc.ensure(i, int(self.alloc.lengths[i]) + len(part))
-        self._sync_caches()
-        logits, self.caches = self._chunk_fn(
-            self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv))
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        now = time.time()
-        for i in range(self.slots):
-            if nv[i] == 0:
-                continue
-            self._off[i] += int(nv[i])
-            self.alloc.advance(i, int(nv[i]))
-            r = self.active[i]
-            if self._off[i] >= len(r.prompt):  # prefill complete
-                r.t_first = now
-                r.output.append(int(nxt[i]))
-                self._next_tok[i] = nxt[i]
+    def _decoding(self) -> list[int]:
+        return [i for i, r in enumerate(self.active)
+                if r is not None and self._off[i] >= len(r.prompt)]
 
-    def _step_decode(self) -> list[Request]:
-        """One decode tick for every slot with a completed prefill."""
-        active = np.array(
-            [r is not None and self._off[i] >= len(r.prompt)
-             for i, r in enumerate(self.active)])
-        if not active.any():
-            return []
-        done: list[Request] = []
-        for i in np.nonzero(active)[0]:
+    def _reserve_decode(self) -> tuple[list[int], list[Request]]:
+        """Maps the next block for every decode-ready slot; slots that hit
+        an exhausted pool finish at capacity (no preemption yet — ROADMAP)
+        so the drain keeps going."""
+        ready, done = [], []
+        for i in self._decoding():
             try:
-                self.alloc.ensure(i, int(self.alloc.lengths[i]) + 2)
+                self._ensure(i, int(self.alloc.lengths[i]) + 2)
+                ready.append(i)
             except RuntimeError:
-                # pool exhausted by decode growth (no preemption yet —
-                # ROADMAP): finish this request at capacity instead of
-                # crashing the drain; its blocks free up for the others.
                 r = self.active[i]
-                active[i] = False
                 self._finish(i, time.time())
                 done.append(r)
-        if not active.any():
-            return done
-        self._sync_caches()
-        pos = jnp.asarray(self.alloc.lengths, jnp.int32)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(self._next_tok), self.caches, pos,
-            jnp.asarray(active))
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        now = time.time()
-        for i in np.nonzero(active)[0]:
-            self.alloc.advance(i, 1)
+        return ready, done
+
+    def _postprocess_decode(self, idxs: list[int], nxt: np.ndarray,
+                            now: float) -> list[Request]:
+        done: list[Request] = []
+        for i in idxs:
+            self._advance(i, 1)
             r = self.active[i]
             tok = int(nxt[i])
             if not r.output:  # empty-prompt requests: first token is here
@@ -276,23 +317,124 @@ class ServingEngine:
                 done.append(r)
         return done
 
+    def _postprocess_chunk(self, nv: np.ndarray, nxt: np.ndarray,
+                           now: float) -> list[Request]:
+        """Advances prefill offsets; slots completing their prompt get
+        their first token (and finish right away if max_new_tokens == 1)."""
+        done: list[Request] = []
+        for i in range(self.slots):
+            if nv[i] == 0:
+                continue
+            self._off[i] += int(nv[i])
+            self._advance(i, int(nv[i]))
+            r = self.active[i]
+            if self._off[i] >= len(r.prompt):  # prefill complete
+                r.t_first = now
+                r.output.append(int(nxt[i]))
+                self._next_tok[i] = nxt[i]
+                if len(r.output) >= r.max_new_tokens:
+                    self._finish(i, now)
+                    done.append(r)
+        return done
+
+    def _step_serve(self) -> list[Request]:
+        """One fused tick: every mid-prompt slot consumes its next chunk
+        AND every decode-ready slot emits a token, in a single jit'd
+        ``model.serve_step`` call."""
+        C = self.chunk
+        toks = np.zeros((self.slots, C), np.int32)
+        nv = np.zeros(self.slots, np.int32)
+        for i in self._prefilling():
+            r = self.active[i]
+            part = r.prompt[self._off[i]:self._off[i] + C]
+            toks[i, :len(part)] = part
+            nv[i] = len(part)
+            self._ensure(i, int(self.alloc.lengths[i]) + len(part))
+        dec, done = self._reserve_decode()
+        dec_act = np.zeros(self.slots, bool)
+        dec_act[dec] = True
+        self._sync_caches()
+        t0 = time.perf_counter()
+        logits, self.caches = self._serve(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv),
+            jnp.asarray(self._next_tok), jnp.asarray(dec_act))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.tick_times.append(time.perf_counter() - t0)
+        self.ticks += 1
+        now = time.time()
+        done += self._postprocess_chunk(nv, nxt, now)
+        done += self._postprocess_decode(dec, nxt, now)
+        return done
+
+    def _step_prefill_chunk(self) -> list[Request]:
+        """All mid-prompt slots consume their next chunk in one fused call
+        (the alternating baseline's prefill tick)."""
+        C = self.chunk
+        toks = np.zeros((self.slots, C), np.int32)
+        nv = np.zeros(self.slots, np.int32)
+        for i in self._prefilling():
+            r = self.active[i]
+            part = r.prompt[self._off[i]:self._off[i] + C]
+            toks[i, :len(part)] = part
+            nv[i] = len(part)
+            self._ensure(i, int(self.alloc.lengths[i]) + len(part))
+        self._sync_caches()
+        t0 = time.perf_counter()
+        logits, self.caches = self._chunk_fn(
+            self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.tick_times.append(time.perf_counter() - t0)
+        self.ticks += 1
+        return self._postprocess_chunk(nv, nxt, time.time())
+
+    def _step_decode(self) -> list[Request]:
+        """One decode tick for every slot with a completed prefill."""
+        dec, done = self._reserve_decode()
+        if not dec:
+            return done
+        active = np.zeros(self.slots, bool)
+        active[dec] = True
+        self._sync_caches()
+        pos = jnp.asarray(self.alloc.lengths, jnp.int32)
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self._next_tok), self.caches, pos,
+            jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.tick_times.append(time.perf_counter() - t0)
+        self.ticks += 1
+        return done + self._postprocess_decode(dec, nxt, time.time())
+
     def _run_paged(self, max_ticks: int) -> list[Request]:
+        """Fused stepping: one jit'd call per tick.  Ticks with any
+        mid-prompt slot run the mixed ``serve_step`` (prefill chunks
+        piggyback on the decode batch); pure-decode ticks run the 1-token
+        ``decode_step``."""
         finished: list[Request] = []
-        ticks = 0
+        start_ticks = self.ticks
+        while self.queue or any(r is not None for r in self.active):
+            self._admit()
+            if self._prefilling():
+                finished.extend(self._step_serve())
+            else:
+                finished.extend(self._step_decode())
+            if self.ticks - start_ticks >= max_ticks:
+                break
+        finished.extend(self.rejected)
+        self.rejected = []
+        return finished
+
+    def _run_paged_alternating(self, max_ticks: int) -> list[Request]:
+        """PR-1 baseline: drain all prefill chunks, then decode — decoding
+        slots stall whenever any slot is mid-prompt."""
+        finished: list[Request] = []
+        start_ticks = self.ticks
         while self.queue or any(r is not None for r in self.active):
             self._admit()
             while self._prefilling():
-                self._step_prefill_chunk()
-                # finished-on-prefill edge: max_new_tokens == 1
-                now = time.time()
-                for i, r in enumerate(self.active):
-                    if (r is not None and self._off[i] >= len(r.prompt)
-                            and len(r.output) >= r.max_new_tokens):
-                        self._finish(i, now)
-                        finished.append(r)
+                finished.extend(self._step_prefill_chunk())
             finished.extend(self._step_decode())
-            ticks += 1
-            if ticks >= max_ticks:
+            if self.ticks - start_ticks >= max_ticks:
                 break
         finished.extend(self.rejected)
         self.rejected = []
@@ -361,8 +503,10 @@ class ServingEngine:
 
     def run(self, *, max_ticks: int = 10_000) -> list[Request]:
         """Drains the queue; returns finished requests."""
-        if self.paged:
+        if self.paged and self.fused:
             return self._run_paged(max_ticks)
+        if self.paged:
+            return self._run_paged_alternating(max_ticks)
         return self._run_legacy(max_ticks)
 
     # ----------------------------------------------------------- metrics

@@ -78,6 +78,56 @@ def test_asym_decode_attn_sweep(kb, vb, T, D, Hkv, r):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
 
 
+def test_pick_block_odd_capacities():
+    """Block selection must survive capacities that aren't multiples of the
+    requested block (the old ``min`` + ``assert`` crashed on e.g. 96)."""
+    from repro.kernels.asym_decode_attn import pick_block
+    assert pick_block(96, 512, 32) == 96
+    assert pick_block(160, 64, 32) == 32      # 64 doesn't divide 160
+    assert pick_block(1024, 512, 32) == 512
+    assert pick_block(48, 512, 16) == 48
+    assert pick_block(8, 512, 8) == 8
+    with pytest.raises(ValueError):
+        pick_block(40, 512, 16)               # capacity not a group multiple
+
+
+@pytest.mark.parametrize("kb", [1, 2, 4, 8])
+@pytest.mark.parametrize("vb", [1, 2, 4, 8])
+def test_fused_decode_bit_mix_sweep(kb, vb):
+    """In-kernel ring fold across ALL bit mixes, at an odd commit length
+    and a capacity (96) that isn't a multiple of the default block."""
+    B, Hkv, r, D, T, L = 2, 2, 4, 32, 96, 77
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, L, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, L, D)).astype(np.float32))
+    c = LayerKVCache.init(B, Hkv, D, max_tokens=T, k_bits=kb, v_bits=vb,
+                          group=16, residual=16, dtype=jnp.float32,
+                          scale_dtype=jnp.float32)
+    c = c.prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(B, Hkv * r, 1, D)).astype(np.float32))
+    out = asym_decode_attention(q, c)
+    want = decode_attend_dense(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("r", [1, 4])
+@pytest.mark.parametrize("window", [None, 24])
+def test_fused_decode_gqa_and_window(r, window):
+    """GQA ratios and the sliding-window mask through the fused kernel
+    (window smaller than the live length exercises the lower bound)."""
+    from repro.core.attention_quant import decode_attend
+    B, Hkv, D, T, L = 1, 2, 32, 128, 101
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, L, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, L, D)).astype(np.float32))
+    c = LayerKVCache.init(B, Hkv, D, max_tokens=T, k_bits=2, v_bits=1,
+                          group=16, residual=32, dtype=jnp.float32,
+                          scale_dtype=jnp.float32)
+    c = c.prefill(k, v)
+    q = jnp.asarray(RNG.normal(size=(B, Hkv * r, 1, D)).astype(np.float32))
+    out = asym_decode_attention(q, c, block=64, window=window)
+    want = decode_attend(q, c, block=64, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
 def test_asym_decode_partial_stats_vs_ref():
     """Kernel partial (m, l, acc) equals the oracle's over the committed
     prefix alone."""

@@ -337,3 +337,116 @@ def test_paged_kernel_matches_jnp():
     o_jnp = np.asarray(paged_decode_attend(q, cache), np.float32)
     o_krn = np.asarray(paged_asym_decode_attention(q, cache), np.float32)
     np.testing.assert_allclose(o_krn, o_jnp, atol=1e-5)
+
+
+# ------------------------------------------------- unified kernel parity
+
+def _quant_paged(rng, *, kb, vb, group, residual, BT, lens, S=3, H=2,
+                 D=32, T=256):
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    return _append_all(cache, alloc, k, v, lens), D
+
+
+@pytest.mark.parametrize("kb", [1, 2, 4, 8])
+@pytest.mark.parametrize("vb", [1, 2, 4, 8])
+def test_unified_kernel_decode_bit_mix_sweep(kb, vb):
+    """Unified kernel (fp ring folded in-kernel) vs the jnp paged decode
+    path, across ALL bit mixes at odd per-slot commit lengths."""
+    from repro.kernels.ops import paged_asym_decode_attention
+    rng = np.random.default_rng(kb * 16 + vb)
+    cache, D = _quant_paged(rng, kb=kb, vb=vb, group=16, residual=16,
+                            BT=32, lens=(130, 77, 51))
+    q = jnp.asarray(rng.normal(size=(3, 4, 1, D)).astype(np.float32))
+    o_jnp = np.asarray(paged_decode_attend(q, cache), np.float32)
+    o_krn = np.asarray(paged_asym_decode_attention(q, cache), np.float32)
+    np.testing.assert_allclose(o_krn, o_jnp, atol=1e-5)
+
+
+@pytest.mark.parametrize("r", [1, 4])
+@pytest.mark.parametrize("window", [None, 48])
+def test_unified_kernel_gqa_and_window(r, window):
+    """GQA ratios and the per-slot sliding-window lower bound — windowed
+    (L) layers run the SAME kernel, no jnp fallback."""
+    from repro.kernels.ops import paged_asym_decode_attention
+    rng = np.random.default_rng(23 + r)
+    cache, D = _quant_paged(rng, kb=2, vb=1, group=16, residual=32,
+                            BT=32, lens=(200, 96, 131))
+    q = jnp.asarray(rng.normal(size=(3, 2 * r, 1, D)).astype(np.float32))
+    o_jnp = np.asarray(paged_decode_attend(q, cache, window=window),
+                       np.float32)
+    o_krn = np.asarray(
+        paged_asym_decode_attention(q, cache, window=window), np.float32)
+    np.testing.assert_allclose(o_krn, o_jnp, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 40])
+def test_unified_kernel_chunk_shape(window):
+    """The same kernel serves prefill-chunk queries: per-row positions via
+    ``q_pos``, causal + window masks, ring fold — vs paged_chunk_attend."""
+    from repro.kernels.ops import paged_asym_attention
+    rng = np.random.default_rng(29)
+    cache, D = _quant_paged(rng, kb=2, vb=2, group=16, residual=32,
+                            BT=32, lens=(130, 64, 97))
+    C = 16
+    q = jnp.asarray(rng.normal(size=(3, 4, C, D)).astype(np.float32))
+    q_start = cache.lengths - C
+    q_pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    o_jnp = np.asarray(
+        paged_chunk_attend(q, cache, q_start, window=window), np.float32)
+    o_krn = np.asarray(
+        paged_asym_attention(q, cache, q_pos, window=window), np.float32)
+    np.testing.assert_allclose(o_krn, o_jnp, atol=1e-5)
+
+
+def test_unified_kernel_mixed_rows():
+    """Fused serving rows: chunk rows for some slots, a decode row for
+    others, dead rows (q_pos < 0) — all in one kernel call."""
+    from repro.kernels.ops import paged_asym_attention
+    rng = np.random.default_rng(31)
+    cache, D = _quant_paged(rng, kb=2, vb=1, group=16, residual=16,
+                            BT=32, lens=(100, 70, 55))
+    C = 8
+    q = jnp.asarray(rng.normal(size=(3, 4, C + 1, D)).astype(np.float32))
+    start = cache.lengths
+    # slot 0: chunk rows live (positions counting back from its length),
+    # slot 1: decode row only, slot 2: everything dead
+    q_pos = np.full((3, C + 1), -1, np.int32)
+    q_pos[0, :C] = np.asarray(start)[0] - C + np.arange(C)
+    q_pos[1, C] = np.asarray(start)[1] - 1
+    out = np.asarray(
+        paged_asym_attention(q, cache, jnp.asarray(q_pos)), np.float32)
+    # slot 0 chunk rows == chunk attend at the same positions
+    ref_c = np.asarray(paged_chunk_attend(
+        q[:, :, :C], cache, start - C), np.float32)
+    np.testing.assert_allclose(out[0, :, :C], ref_c[0], atol=1e-5)
+    # slot 1 decode row == decode attend
+    ref_d = np.asarray(paged_decode_attend(q[:, :, C:], cache), np.float32)
+    np.testing.assert_allclose(out[1, :, C:], ref_d[1], atol=1e-5)
+    # dead rows are exactly zero
+    np.testing.assert_array_equal(out[2], np.zeros_like(out[2]))
+
+
+def test_allocator_free_below_window():
+    """Sliding-window freeing: blocks wholly below ``length − window``
+    return to the free list and are never remapped for that slot."""
+    alloc = BlockAllocator(2, num_blocks=8, max_blocks=8, block_tokens=16,
+                           residual=16, group=16)
+    alloc.ensure(0, 100)                      # commit 80 → 5 blocks
+    alloc.advance(0, 100)
+    assert alloc.free_blocks == 3
+    freed = alloc.free_below(0, 100 - 32)     # lo=68 → blocks 0..3 wholly
+    assert freed == 4                         # below (4·16 = 64 ≤ 68)
+    assert alloc.free_blocks == 7
+    assert list(alloc.page_table[0][:4]) == [0, 0, 0, 0]
+    # growing further must NOT remap the freed range
+    alloc.ensure(0, 130)
+    assert list(alloc.page_table[0][:4]) == [0, 0, 0, 0]
+    assert alloc.page_table[0][5] > 0
+    # release resets the freeing frontier
+    alloc.release(0)
+    assert alloc.free_blocks == 8
+    alloc.ensure(0, 50)                       # fresh request maps from 0
+    assert alloc.page_table[0][0] > 0

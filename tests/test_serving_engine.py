@@ -64,7 +64,7 @@ def test_mixed_lengths_match_single_request_runs(small_model):
     assert len(done) == len(prompts)
     # one compiled shape each, regardless of the length mix
     stats = eng.jit_stats()
-    assert stats == {"prefill_chunk": 1, "decode": 1}, stats
+    assert stats == {"serve": 1, "decode": 1}, stats
     by_rid = {r.rid: r for r in done}
     for rid, p in enumerate(prompts):
         want = _single_run(model, params, p, max_new=6)
@@ -142,6 +142,83 @@ def test_partial_chunk_admission(small_model):
         want = _single_run(model, params, p, max_new=4)
         got = next(r.output for r in done if r.rid == rid)
         assert got == want
+
+
+def test_fused_mixed_trace_vs_alternating(small_model):
+    """The tentpole property: a trace where later requests' prefills
+    overlap earlier requests' decodes produces token-for-token identical
+    streams through the fused engine, in STRICTLY fewer engine ticks
+    (jit'd step invocations), with one compile per step function."""
+    cfg, model, params = small_model
+    lengths = [9, 33, 17, 40, 25, 12]
+    prompts = _prompts(cfg, lengths, seed=11)
+
+    def drive(fused):
+        eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                            dtype=jnp.float32, fused=fused)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=8))
+        done = eng.run()
+        return eng, {r.rid: r.output for r in done}
+
+    ef, out_f = drive(True)
+    ea, out_a = drive(False)
+    assert out_f == out_a, "fused stream diverged from alternating"
+    assert ef.ticks < ea.ticks, (ef.ticks, ea.ticks)
+    assert ef.jit_stats() == {"serve": 1, "decode": 1}, ef.jit_stats()
+    assert ea.jit_stats() == {"prefill_chunk": 1, "decode": 1}
+
+
+def test_fused_engine_with_pallas_kernel(small_model):
+    """The unified Pallas kernel (interpret mode) inside the fused serving
+    step produces the same streams as the jnp attention paths."""
+    cfg, model, params = small_model
+    prompts = _prompts(cfg, [9, 20], seed=13)
+
+    def drive(use_pallas):
+        # each engine pins its own backend at trace time — no flag leaks
+        eng = ServingEngine(model, params, slots=2, max_tokens=64,
+                            dtype=jnp.float32, use_pallas=use_pallas)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3))
+        done = eng.run()
+        return {r.rid: r.output for r in done}
+
+    assert drive(True) == drive(False)
+
+
+def test_windowed_block_freeing():
+    """Local (L) stages release pool blocks wholly below length − window
+    during decode, without changing any token stream."""
+    cfg = reduced(get_config("gemma3-1b"))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(2))
+    assert cfg.window == 16
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, L, dtype=np.int32)
+               for L in (40, 26)]
+
+    def drive(fused):
+        eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                            dtype=jnp.float32, fused=fused,
+                            block_tokens=8)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=10))
+        done = eng.run()
+        return eng, {r.rid: r.output for r in done}
+
+    ef, out_f = drive(True)
+    ea, out_a = drive(False)
+    assert out_f == out_a
+    # windowed stages exist and freed blocks mid-flight
+    assert ef.wallocs, "gemma L stages should own their block mapping"
+    assert ef.win_blocks_freed > 0
+    # everything reclaimed at drain end, in every mapping
+    for alloc in [ef.alloc, *ef.wallocs.values()]:
+        assert alloc.free_blocks == alloc.num_blocks
+        assert (alloc.page_table == 0).all()
 
 
 def test_legacy_fallback_for_ssm_archs():
