@@ -1,12 +1,20 @@
 """Serving-engine benchmark: fused mixed-tick stepping vs the alternating
-prefill/decode baseline, on one mixed-length request trace.
+prefill/decode baseline, plus the shared-prefix (prefix-cache) trace.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--tiny] \
         [--out BENCH_serve.json]
 
-Both engines drain the identical trace (greedy decoding, so the token
-streams are identical too — asserted); the report captures the perf
-trajectory of the serving hot path from this PR on:
+Two traces:
+
+* **mixed** — mixed-length prompts, staggered decode budgets; fused vs
+  alternating engines drain it identically (greedy decoding, streams
+  asserted equal).
+* **shared-prefix** — N requests over K distinct system prompts; the
+  prefix-cache engine (``prefix_cache=True``) vs the plain fused engine.
+  Streams are asserted identical; the report adds ``prefix_hit_rate``,
+  ``blocks_allocated`` (vs baseline), ``cow_copies``, and TTFT for both.
+
+Report keys per engine:
 
 * ``decode_tok_s``      — decode-generated tokens per second of drain wall
 * ``ttft_p50_s``/``ttft_mean_s`` — time to first token
@@ -64,6 +72,26 @@ def _trace(cfg, *, n_requests: int, lengths: list[int],
     ]
 
 
+def _shared_trace(cfg, *, n_requests: int, k_prompts: int, sys_len: int,
+                  sfx_len: int, max_new: list[int], seed: int = 1):
+    """N requests over K distinct system prompts (each request = one of the
+    K shared prefixes + a unique suffix) — the prefix-cache regime: later
+    admissions map the system prompt's committed blocks instead of
+    recomputing them."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(0, cfg.vocab, sys_len, dtype=np.int32)
+               for _ in range(k_prompts)]
+    return [
+        Request(rid=100 + i,
+                prompt=np.concatenate(
+                    [systems[i % k_prompts],
+                     rng.integers(0, cfg.vocab, sfx_len, dtype=np.int32)]),
+                max_new_tokens=max_new[i % len(max_new)])
+        for i in range(n_requests)
+    ]
+
+
 def _drain(eng, reqs):
     for r in reqs:
         # fresh per-drain bookkeeping on shared Request objects
@@ -79,27 +107,47 @@ def _drain(eng, reqs):
 
 
 def bench_engine(model, params, reqs, *, fused: bool, slots: int,
-                 max_tokens: int, repeats: int = 3) -> dict:
+                 max_tokens: int, repeats: int = 3,
+                 prefix_cache: bool = False,
+                 block_tokens=None) -> dict:
     import jax.numpy as jnp
     from repro.serving.engine import ServingEngine
 
     eng = ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
-                        dtype=jnp.float32, fused=fused)
-    _drain(eng, reqs)                       # warmup drain: pays compiles
+                        dtype=jnp.float32, fused=fused,
+                        prefix_cache=prefix_cache,
+                        block_tokens=block_tokens)
+    _drain(eng, reqs)   # warmup drain: pays compiles (and, with the prefix
+    # cache on, populates the trie — timed drains measure the warm cache)
     # best-of-N timed drains: wall time on a shared host is noisy, the
     # tick schedule is deterministic — min wall is the honest steady state
     best = None
     for _ in range(max(1, repeats)):
+        a0 = eng.alloc.allocated_total
+        p0 = eng.prefix_stats()
         res = _drain(eng, reqs)
-        if best is None or res[1] < best[1]:
-            best = res
-    done, wall, ticks, tick_times = best
+        extra = {"blocks_allocated": eng.alloc.allocated_total - a0}
+        if prefix_cache:
+            p1 = eng.prefix_stats()
+            d = {k: p1[k] - p0[k] for k in
+                 ("lookups", "hits", "tokens_shared", "cow_copies",
+                  "evicted_blocks")}
+            extra |= {
+                "prefix_hit_rate": d["hits"] / max(1, d["lookups"]),
+                "prefix_tokens_shared": d["tokens_shared"],
+                "cow_copies": d["cow_copies"],
+                "evicted_blocks": d["evicted_blocks"],
+            }
+        if best is None or res[1] < best[0][1]:
+            best = (res, extra)
+    (done, wall, ticks, tick_times), extra = best
     gen = sum(len(r.output) for r in done)
     dec = sum(max(0, len(r.output) - 1) for r in done)
     ttft = [r.t_first - r.t_admit for r in done if r.t_first]
     streams = {r.rid: list(r.output) for r in done}
     return {
-        "mode": "fused" if fused else "alternating",
+        "mode": ("fused+prefix_cache" if prefix_cache
+                 else "fused" if fused else "alternating"),
         "requests": len(done),
         "gen_tokens": gen,
         "decode_tokens": dec,
@@ -113,6 +161,7 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
         "tick_wall_p50_s": float(np.median(tick_times)) if tick_times else None,
         "tick_wall_max_s": float(np.max(tick_times)) if tick_times else None,
         "jit_stats": eng.jit_stats(),
+        **extra,
     }, streams
 
 
@@ -133,10 +182,16 @@ def main() -> None:
     if args.tiny:
         slots, max_tokens = args.slots or 2, 128
         lengths, max_new, n_requests = [8, 49, 16], [12, 4, 8], 6
+        shared = dict(n_requests=6, k_prompts=2, sys_len=48, sfx_len=8,
+                      max_new=[8, 4, 6])
+        shared_bt = 8
     else:
         slots, max_tokens = args.slots or 4, 256
         lengths = [8, 96, 16, 64, 24, 80]
         max_new, n_requests = [24, 8, 32, 12, 48, 16], 16
+        shared = dict(n_requests=12, k_prompts=3, sys_len=64, sfx_len=16,
+                      max_new=[16, 8, 24, 12])
+        shared_bt = 16
 
     reqs = _trace(cfg, n_requests=n_requests, lengths=lengths,
                   max_new=max_new)
@@ -147,6 +202,21 @@ def main() -> None:
                             slots=slots, max_tokens=max_tokens,
                             repeats=args.repeats)
     assert s_f == s_a, "fused and alternating token streams diverged"
+
+    # --- shared-prefix trace: prefix cache vs the plain fused engine -----
+    sreqs = _shared_trace(cfg, **shared)
+    sp_on, ss_on = bench_engine(model, params, sreqs, fused=True,
+                                slots=slots, max_tokens=max_tokens,
+                                repeats=args.repeats, prefix_cache=True,
+                                block_tokens=shared_bt)
+    sp_off, ss_off = bench_engine(model, params, sreqs, fused=True,
+                                  slots=slots, max_tokens=max_tokens,
+                                  repeats=args.repeats,
+                                  block_tokens=shared_bt)
+    assert ss_on == ss_off, "prefix-cache token streams diverged"
+    assert sp_on["prefix_hit_rate"] > 0, sp_on
+    assert sp_on["blocks_allocated"] < sp_off["blocks_allocated"], (
+        sp_on["blocks_allocated"], sp_off["blocks_allocated"])
 
     report = {
         "bench": "serving_fused_vs_alternating",
@@ -161,14 +231,29 @@ def main() -> None:
             alt["ticks"], 1),
         "decode_tok_s_ratio": fused["decode_tok_s"] / max(
             alt["decode_tok_s"], 1e-9),
+        "shared_prefix": {
+            "trace": {**shared, "slots": slots, "max_tokens": max_tokens,
+                      "block_tokens": shared_bt},
+            "prefix_cache": sp_on,
+            "baseline": sp_off,
+            "blocks_allocated_ratio": sp_on["blocks_allocated"] / max(
+                sp_off["blocks_allocated"], 1),
+            "ttft_p50_ratio": (sp_on["ttft_p50_s"] or 0) / max(
+                sp_off["ttft_p50_s"] or 1e-9, 1e-9),
+        },
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps({k: report[k] for k in
                       ("tick_reduction", "decode_tok_s_ratio")}))
-    print(f"fused:       {fused['decode_tok_s']:.1f} decode tok/s, "
+    print(f"fused:        {fused['decode_tok_s']:.1f} decode tok/s, "
           f"{fused['ticks']} ticks, ttft p50 {fused['ttft_p50_s']:.3f}s")
-    print(f"alternating: {alt['decode_tok_s']:.1f} decode tok/s, "
+    print(f"alternating:  {alt['decode_tok_s']:.1f} decode tok/s, "
           f"{alt['ticks']} ticks, ttft p50 {alt['ttft_p50_s']:.3f}s")
+    print(f"shared-prefix: hit rate {sp_on['prefix_hit_rate']:.2f}, "
+          f"blocks {sp_on['blocks_allocated']} vs "
+          f"{sp_off['blocks_allocated']} baseline, ttft p50 "
+          f"{sp_on['ttft_p50_s']:.3f}s vs {sp_off['ttft_p50_s']:.3f}s, "
+          f"{sp_on['cow_copies']} COW copies")
     print(f"wrote {args.out}")
 
 

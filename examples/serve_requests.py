@@ -1,5 +1,14 @@
-"""Batched serving example: continuous batching over an AsymKV 2/1-bit
+"""Batched serving examples: continuous batching over an AsymKV 2/1-bit
 cache (gemma3-1b family, reduced size for CPU).
+
+Two variants:
+
+* plain — independent random prompts through the fused paged engine;
+* shared prefix — every request carries the same 48-token system prompt
+  and the engine runs with the ref-counted prefix cache on
+  (``--shared-prefix``): admissions after the first map the system
+  prompt's committed blocks instead of recomputing them (copy-on-write
+  protects the shared tail block).
 
     PYTHONPATH=src python examples/serve_requests.py
 """
@@ -14,6 +23,20 @@ def main():
         "--lk", "3", "--lv", "0",
     ])
     assert stats["requests"] == 10
+
+    # Shared-prefix variant: several requests over one system prompt.
+    # block-tokens 8 matches the reduced model's quant group so the
+    # 48-token system prompt spans full, shareable blocks.
+    stats = serve_main([
+        "--arch", "gemma3-1b", "--reduced",
+        "--requests", "8", "--slots", "2",
+        "--prompt-len", "16", "--max-new", "12",
+        "--lk", "3", "--lv", "0",
+        "--shared-prefix", "48", "--block-tokens", "8",
+    ])
+    assert stats["requests"] == 8
+    assert stats["prefix_hits"] > 0, "expected prefix-cache hits"
+    assert stats["prefix_tokens_shared"] > 0
 
 
 if __name__ == "__main__":

@@ -20,6 +20,16 @@ All softmax math runs in fp32; matmuls accumulate in fp32 via
 On TPU the same call sites dispatch to the Pallas kernels in
 ``repro.kernels`` (``use_pallas=True``); this module is the CPU/dry-run and
 oracle path.
+
+The paged read paths treat committed pool blocks as **immutable**: every
+read masks positions against ``PagedKVCache.commit_lengths()`` (which
+includes the per-slot ``commit_base`` floor, so blocks mapped from a shared
+prefix are read exactly up to the shared span), and nothing here ever
+writes a pool block.  That is what makes ref-counted prefix sharing safe —
+a block mapped into several slots' page tables is only ever *read* through
+this module; the serving engine asserts the matching write-side invariant
+(refcount > 1 ⇒ no commit may target the block; copy-on-write first) in
+``ServingEngine._cow_pass``.
 """
 
 from __future__ import annotations

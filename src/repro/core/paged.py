@@ -35,18 +35,33 @@ This module replaces that store with a **block pool + page table**:
   uses — so committed codes/scales are **bit-identical** between layouts
   (the differential suite in ``tests/test_paged_cache.py`` pins this).
 
-* **Allocator** — :class:`BlockAllocator` is a host-side free list; the
-  serving engine maps blocks ahead of the commit frontier
-  (``ensure``) and releases a slot's blocks the moment its request
-  finishes (``release``), so memory turns over at request granularity.
+* **Allocator** — :class:`BlockAllocator` is a host-side free list with
+  **per-block reference counts**; the serving engine maps blocks ahead of
+  the commit frontier (``ensure``) and drops a slot's references the
+  moment its request finishes (``release``), so memory turns over at
+  request granularity.  A block mapped into several page-table rows
+  (prefix sharing) or pinned by the engine's :class:`PrefixCache` returns
+  to the free list only when its last holder releases it.
+
+* **Prefix sharing / copy-on-write** — :class:`PrefixCache` is a
+  host-side trie from committed full blocks of *prompt tokens* to pool
+  block ids.  A new request whose prompt matches a cached prefix maps the
+  shared blocks (``BlockAllocator.share``) instead of recomputing them,
+  sets its ``commit_base`` leaf to the shared span ``F``, and starts
+  chunked prefill at token ``F``.  The first commit that would land in a
+  block whose refcount > 1 is preceded by a COW
+  (``BlockAllocator.cow`` + :meth:`PagedKVCache.copy_blocks`).
 
 Allocator invariants:
 
 1. block 0 is never handed out;
 2. a block is mapped before any commit that writes into it (the engine
    calls ``ensure(slot, new_len)`` before each append/chunk step);
-3. every mapped block belongs to exactly one slot; ``release`` returns all
-   of a slot's blocks to the free list and zeroes its page-table row.
+3. a block with refcount 1 has exactly one holder and may be written by
+   it; a block with refcount > 1 is **read-only** — the engine
+   copy-on-writes it before any commit would touch it;
+4. ``release``/``free_below`` drop references and zero page-table rows;
+   a block is free-listed exactly when its count reaches zero.
 
 Mutation entry points (all jit-safe, fixed shapes):
 
@@ -62,7 +77,9 @@ Read paths live in :mod:`repro.core.attention_quant`
 (``paged_decode_attend`` / ``paged_chunk_attend``) and the unified Pallas
 kernel ``repro.kernels.paged_attn.paged_asym_attn`` whose BlockSpecs index
 the pools *through the page table* via scalar prefetch (decode and chunk
-query shapes, sliding windows, fp ring fold — all one kernel).
+query shapes, sliding windows, fp ring fold — all one kernel).  Both mask
+committed reads against :meth:`PagedKVCache.commit_lengths`, which floors
+at the per-slot ``commit_base`` — the device-side half of prefix sharing.
 """
 
 from __future__ import annotations
@@ -77,7 +94,7 @@ import numpy as np
 
 from repro.core.quant import QuantSpec, QuantArray, quantize, dequantize
 
-__all__ = ["PagedKVCache", "BlockAllocator"]
+__all__ = ["PagedKVCache", "BlockAllocator", "PrefixCache", "PrefixNode"]
 
 
 def _cl(lengths: jax.Array, residual: int, group: int) -> jax.Array:
@@ -103,6 +120,7 @@ class PagedKVCache:
     resid_v: Optional[jax.Array]
     page_table: jax.Array          # [S, NB] int32, 0 = unmapped
     lengths: jax.Array             # [S] int32
+    commit_base: jax.Array         # [S] int32 — committed-span floor
 
     # -- static aux ----------------------------------------------------------
     k_bits: int = 2
@@ -121,7 +139,7 @@ class PagedKVCache:
                "v_group")
     _LEAVES = ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
                "v_zero", "k_fp", "v_fp", "resid_k", "resid_v",
-               "page_table", "lengths")
+               "page_table", "lengths", "commit_base")
 
     def tree_flatten(self):
         return (tuple(getattr(self, n) for n in self._LEAVES),
@@ -199,6 +217,7 @@ class PagedKVCache:
             resid_k=z((S, H, cap, D), dtype), resid_v=resid_v,
             page_table=jnp.zeros((S, max_blocks), jnp.int32),
             lengths=jnp.zeros((S,), jnp.int32),
+            commit_base=jnp.zeros((S,), jnp.int32),
             k_bits=k_bits, v_bits=v_bits, group=group, residual=residual,
             block_tokens=block_tokens, num_blocks=N, max_blocks=max_blocks,
             dtype=dtype, v_slice_offset=v_slice_offset, v_group=v_grp,
@@ -231,8 +250,17 @@ class PagedKVCache:
                          scale_dtype=self.v_scale.dtype)
 
     def commit_lengths(self) -> jax.Array:
-        """Per-slot committed (quantized) token count ``[S] int32``."""
-        return _cl(self.lengths, self.residual, self.group)
+        """Per-slot committed (quantized) token count ``[S] int32``.
+
+        ``commit_base`` is a floor on the committed span: a slot admitted
+        onto a shared prefix (prefix cache) has blocks mapped for tokens
+        ``[0, base)`` that were committed by a *previous* request, so reads
+        and the commit cadence must treat them as committed even while
+        ``lengths - residual`` is still below ``base``.  Zero (the default)
+        reduces to the plain cadence.
+        """
+        return jnp.maximum(_cl(self.lengths, self.residual, self.group),
+                           self.commit_base)
 
     def ring_positions(self) -> jax.Array:
         """Absolute token index held by each ring slot, per slot ``[S, cap]``
@@ -391,8 +419,10 @@ class PagedKVCache:
         cache = dataclasses.replace(
             self, resid_k=resid_k, resid_v=resid_v, lengths=new_len)
 
-        old_c = _cl(self.lengths, self.residual, G)
-        new_c = _cl(new_len, self.residual, G)
+        old_c = jnp.maximum(_cl(self.lengths, self.residual, G),
+                            self.commit_base)
+        new_c = jnp.maximum(_cl(new_len, self.residual, G),
+                            self.commit_base)
         return self._commit_groups(cache, old_c, active & (new_c > old_c))
 
     def write_chunk(self, k: jax.Array, v: Optional[jax.Array] = None,
@@ -417,8 +447,12 @@ class PagedKVCache:
         if n_valid is None:
             n_valid = jnp.full((S,), C, jnp.int32)
         start = self.lengths
-        old_c = _cl(start, self.residual, G)
-        new_c = _cl(start + n_valid, self.residual, G)
+        # commit_base floors both ends: a shared-prefix slot must never
+        # re-commit groups below its mapped span (they live in blocks other
+        # slots read), and its first chunks start with the ring empty.
+        old_c = jnp.maximum(_cl(start, self.residual, G), self.commit_base)
+        new_c = jnp.maximum(_cl(start + n_valid, self.residual, G),
+                            self.commit_base)
 
         # Pre-gather commit-group sources from (old ring ∪ chunk) BEFORE the
         # ring scatter: a full chunk may overwrite ring entries whose tokens
@@ -459,14 +493,41 @@ class PagedKVCache:
 
     # --------------------------------------------------- host-side plumbing
 
-    def with_pages(self, page_table: np.ndarray,
-                   lengths: np.ndarray) -> "PagedKVCache":
+    def with_pages(self, page_table: np.ndarray, lengths: np.ndarray,
+                   commit_base: Optional[np.ndarray] = None
+                   ) -> "PagedKVCache":
         """Returns a copy with host-updated page table / lengths (the
-        engine's admission & reclaim path)."""
+        engine's admission & reclaim path).  ``commit_base`` (optional)
+        sets the per-slot committed-span floor used by prefix sharing."""
         return dataclasses.replace(
             self,
             page_table=jnp.asarray(page_table, jnp.int32),
-            lengths=jnp.asarray(lengths, jnp.int32))
+            lengths=jnp.asarray(lengths, jnp.int32),
+            commit_base=(self.commit_base if commit_base is None
+                         else jnp.asarray(commit_base, jnp.int32)))
+
+    def copy_blocks(self, src: jax.Array, dst: jax.Array) -> "PagedKVCache":
+        """Copy-on-write pool-row copy: ``pool[dst[p]] := pool[src[p]]`` for
+        every pool leaf (codes, scales, zeros, fp stores).
+
+        ``src/dst [P] int32`` — pairs may be padded with ``(0, 0)`` (scratch
+        onto itself, a no-op) so one compiled shape serves any COW count.
+        The engine calls this *before* a step whose commit frontier would
+        write into a block with refcount > 1: the writer gets a private
+        copy, every other holder keeps reading the original.
+        """
+        upd = {}
+        for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                     "v_zero", "k_fp", "v_fp"):
+            a = getattr(self, name)
+            if a is not None:
+                # block axis: 0 for a single layer, 1 for the engine's
+                # layer-stacked leaves ([L, N, ...]; pool leaves are 4D per
+                # layer, so it is always ndim - 4)
+                ax = a.ndim - 4
+                idx = (slice(None),) * ax + (dst,)
+                upd[name] = a.at[idx].set(jnp.take(a, src, axis=ax))
+        return dataclasses.replace(self, **upd)
 
     def nbytes(self) -> int:
         """Total storage in bytes (static accounting)."""
@@ -488,6 +549,16 @@ class BlockAllocator:
 
     ``num_blocks`` counts usable blocks — the scratch block 0 is extra and
     never handed out.
+
+    **Ref-counting (prefix sharing).**  Every live block carries a
+    reference count: 1 when freshly mapped by ``ensure``/``cow``, +1 per
+    extra holder (:meth:`acquire` — another slot mapping the same block via
+    :meth:`share`, or the engine's prefix trie pinning a cached prefix).
+    :meth:`release_block` decrements and returns the block to the free list
+    only at zero, so ``release``/``free_below`` on one holder never pulls a
+    shared block out from under another.  The invariant the engine
+    enforces on top: **a block with refcount > 1 is read-only** — any
+    commit into it must be preceded by :meth:`cow`.
     """
 
     def __init__(self, slots: int, num_blocks: int, max_blocks: int,
@@ -505,10 +576,66 @@ class BlockAllocator:
         # were released early (windowed layers) and must never be remapped
         # for this slot — ``ensure`` maps from the frontier onward.
         self._min_block = np.zeros((slots,), np.int64)
+        # Per-block reference counts (index = block id; [0] unused).
+        self._refs = np.zeros((num_blocks + 1,), np.int32)
+        # Fresh allocations over the allocator's lifetime (ensure + cow) —
+        # the prefix-sharing benchmark's "blocks allocated" metric.
+        self.allocated_total = 0
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    def ref(self, block: int) -> int:
+        """Current reference count of a block (0 = free)."""
+        return int(self._refs[block])
+
+    def acquire(self, block: int) -> None:
+        """Adds a holder to a live block (sharing admission / trie pin)."""
+        if not (0 < block <= self.num_blocks) or self._refs[block] <= 0:
+            raise ValueError(f"acquire of dead block {block}")
+        self._refs[block] += 1
+
+    def release_block(self, block: int) -> bool:
+        """Drops one holder; frees the block at refcount zero.  Returns
+        True when the block actually returned to the free list."""
+        if self._refs[block] <= 0:
+            raise ValueError(f"release of dead block {block}")
+        self._refs[block] -= 1
+        if self._refs[block] == 0:
+            self._free.append(int(block))
+            return True
+        return False
+
+    def _alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("block pool exhausted")
+        b = self._free.popleft()
+        self._refs[b] = 1
+        self.allocated_total += 1
+        return int(b)
+
+    def share(self, slot: int, idx: int, block: int) -> None:
+        """Maps an already-live block into a slot's page table (prefix
+        sharing at admission), taking a reference on it."""
+        if self.page_table[slot, idx] != 0:
+            raise ValueError(f"slot {slot} idx {idx} already mapped")
+        self.acquire(block)
+        self.page_table[slot, idx] = block
+
+    def cow(self, slot: int, idx: int) -> tuple[int, int]:
+        """Copy-on-write remap: replaces the (shared) block at ``idx`` with
+        a fresh private one and drops the slot's reference on the original.
+        Returns ``(src, dst)`` — the caller must copy the pool row
+        ``src → dst`` on device (:meth:`PagedKVCache.copy_blocks`) before
+        the next commit."""
+        src = int(self.page_table[slot, idx])
+        if src <= 0:
+            raise ValueError(f"cow of unmapped slot {slot} idx {idx}")
+        dst = self._alloc()
+        self.page_table[slot, idx] = dst
+        self.release_block(src)
+        return src, dst
 
     def blocks_of(self, slot: int) -> list[int]:
         return [int(b) for b in self.page_table[slot] if b > 0]
@@ -535,9 +662,7 @@ class BlockAllocator:
         row = self.page_table[slot]
         for i in range(int(self._min_block[slot]), need):
             if row[i] == 0:
-                if not self._free:
-                    raise RuntimeError("block pool exhausted")
-                row[i] = self._free.popleft()
+                row[i] = self._alloc()
                 newly.append(int(row[i]))
         return newly
 
@@ -555,18 +680,148 @@ class BlockAllocator:
         freed = 0
         for i in range(int(self._min_block[slot]), nb):
             if row[i] > 0:
-                self._free.append(int(row[i]))
+                if self.release_block(int(row[i])):
+                    freed += 1
                 row[i] = 0
-                freed += 1
         self._min_block[slot] = max(int(self._min_block[slot]), nb)
         return freed
 
     def release(self, slot: int) -> int:
-        """Frees all of a slot's blocks; returns how many were freed."""
+        """Drops the slot's reference on all its blocks; returns how many
+        actually returned to the free list (shared blocks survive until
+        their last holder — another slot or the prefix trie — lets go)."""
         row = self.page_table[slot]
-        freed = [int(b) for b in row if b > 0]
-        self._free.extend(freed)
+        freed = 0
+        for b in row:
+            if b > 0 and self.release_block(int(b)):
+                freed += 1
         row[:] = 0
         self.lengths[slot] = 0
         self._min_block[slot] = 0
-        return len(freed)
+        return freed
+
+
+class PrefixNode:
+    """One cached full block of prompt tokens.  ``blocks`` maps each block
+    *mapping* (the engine's ``"global"`` mapping plus one per windowed
+    stage) to the pool block id holding this span's committed groups in
+    that mapping's pools."""
+
+    __slots__ = ("key", "parent", "children", "blocks", "last_used")
+
+    def __init__(self, key: bytes, parent: Optional["PrefixNode"],
+                 blocks: dict):
+        self.key = key
+        self.parent = parent
+        self.children: dict[bytes, "PrefixNode"] = {}
+        self.blocks = blocks
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Host-side prefix trie: committed prompt blocks → pool block ids.
+
+    Depth ``d`` holds full blocks of ``block_tokens`` prompt tokens — node
+    identity is the chain of exact token-id group hashes from the root, so
+    a match guarantees the *entire* prefix ``[0, (d+1)·BT)`` is identical
+    to the donor request's (K/V at position ``t`` depend only on tokens
+    ``[0, t]``, so identical prefixes produce bit-identical committed
+    groups).  The trie itself holds one reference (``BlockAllocator.
+    acquire``) on every block it caches, keeping cached prefixes alive
+    after their donor request finishes; :meth:`pop_lru_leaf` is the
+    eviction entry point — the engine drops the trie's references, and the
+    blocks return to the free list only once no in-flight slot still maps
+    them.
+
+    All bookkeeping is host-side Python — nothing here is traced; the
+    device-visible effect of a hit is purely a pre-populated page-table
+    row plus a nonzero ``commit_base``.
+    """
+
+    def __init__(self, block_tokens: int):
+        self.block_tokens = block_tokens
+        self.root = PrefixNode(b"", None, {})
+        self._clock = 0
+        self._count = 0
+
+    def __len__(self) -> int:
+        return self._count
+
+    def block_key(self, prompt: np.ndarray, idx: int) -> bytes:
+        """Hash key of prompt block ``idx`` (its raw token ids — exact, so
+        distinct token groups can never collide)."""
+        BT = self.block_tokens
+        return np.ascontiguousarray(
+            np.asarray(prompt[idx * BT:(idx + 1) * BT], np.int32)).tobytes()
+
+    def touch(self, node: PrefixNode) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+
+    def match(self, prompt: np.ndarray,
+              required: Optional[set] = None) -> list["PrefixNode"]:
+        """Longest chain of cached full blocks matching ``prompt``,
+        root-first.  ``required`` — mapping keys every usable node must
+        carry (a node registered after a windowed stage already freed its
+        block lacks that stage's id and ends the chain)."""
+        chain: list[PrefixNode] = []
+        node = self.root
+        for j in range(len(prompt) // self.block_tokens):
+            child = node.children.get(self.block_key(prompt, j))
+            if child is None:
+                break
+            if required is not None and not required <= set(child.blocks):
+                break
+            self.touch(child)
+            chain.append(child)
+            node = child
+        return chain
+
+    def extend(self, parent: Optional[PrefixNode], key: bytes,
+               blocks: dict) -> tuple["PrefixNode", bool]:
+        """Inserts (or finds) the child of ``parent`` (None = root) for
+        ``key``.  Returns ``(node, created)``; the caller must acquire the
+        allocator references for ``blocks`` exactly when ``created``."""
+        parent = parent or self.root
+        node = parent.children.get(key)
+        if node is not None:
+            self.touch(node)
+            return node, False
+        node = PrefixNode(key, parent, dict(blocks))
+        parent.children[key] = node
+        self._count += 1
+        self.touch(node)
+        return node, True
+
+    def pop_lru_leaf(self, protect=(), freeable=None) -> Optional[PrefixNode]:
+        """Detaches and returns the least-recently-used *leaf* (leaf-only —
+        evicting a mid-chain node would orphan its descendants).
+
+        ``protect`` (identity set) — nodes that must survive: the engine
+        protects a chain it matched but has not yet mapped, so
+        admission-time eviction can never free blocks out from under the
+        request being admitted.  ``freeable`` (optional predicate) — only
+        leaves satisfying it are candidates: the engine passes a
+        refcount check so eviction never wipes prefixes whose blocks are
+        pinned by in-flight slots anyway (detaching those frees nothing
+        *now* and forfeits future hits).  The walk is iterative — tries can
+        be ``max_blocks`` deep, past Python's recursion limit.  The caller
+        owns releasing the node's block references."""
+        best: Optional[PrefixNode] = None
+        protect = {id(n) for n in protect}
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for c in node.children.values():
+                if c.children:
+                    stack.append(c)
+                elif (id(c) not in protect
+                        and (freeable is None or freeable(c))
+                        and (best is None or c.last_used < best.last_used)):
+                    best = c
+        if best is None:
+            return None
+        del best.parent.children[best.key]
+        best.parent = None
+        self._count -= 1
+        return best

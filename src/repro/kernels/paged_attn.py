@@ -33,6 +33,13 @@ masking, and the fp ring are all one fused pass.
 Masking, per query row ``j`` at absolute position ``p = q_pos[j]``:
 
   committed   pos < commit[slot]          (and ``page_table`` entry > 0)
+              — ``commit`` is ``PagedKVCache.commit_lengths()``, which
+              floors at the slot's ``commit_base``: blocks mapped from a
+              *shared prefix* are read up to exactly the shared span even
+              while the slot's own ``length − residual`` is still below
+              it.  The kernel only ever reads pool blocks, so ref-counted
+              shared blocks are safe to serve concurrently from any
+              number of slots.
   causal      pos ≤ p
   window      pos > p - W                 (static ``window``; 0 = global)
   ring        commit ≤ rpos < length      (ring positions recomputed

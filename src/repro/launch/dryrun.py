@@ -29,6 +29,7 @@ from repro.distributed.context import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, cells_for
 from repro.launch.steps import make_step_bundle
+from repro.models.transformer import Model
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
 from benchmarks.roofline import (model_flops, model_flops_attn,  # noqa: E402
@@ -151,9 +152,20 @@ def main():
     n_ok = n_fail = 0
     for arch in archs:
         cells = cells_for(arch)
+        # "all" sweeps the assigned per-arch grid; an explicit --shape also
+        # reaches the opt-in paged serving cells (serve_chunk/serve_decode/
+        # serve_mixed/serve_shared_prefix), which cells_for never returns —
+        # but only for archs the paged path covers (Model.supports_paged:
+        # no SSM/enc-dec/MLA/vision), so the default --arch all sweep
+        # doesn't record guaranteed failures.
+        explicit = SHAPES.get(args.shape)
+        paged_ok = Model.cfg_supports_paged(get_config(arch))
         shapes = ([c.name for c in cells] if args.shape == "all"
                   else ([args.shape] if args.shape in
-                        {c.name for c in cells} else []))
+                        {c.name for c in cells}
+                        or (explicit is not None
+                            and explicit.layout == "paged"
+                            and paged_ok) else []))
         for shape in shapes:
             for mp in meshes:
                 rec = run_cell(arch, shape, mp, out,

@@ -39,6 +39,12 @@ def main(argv=None):
     ap.add_argument("--high-bits", type=int, default=2)
     ap.add_argument("--low-bits", type=int, default=1)
     ap.add_argument("--float-cache", action="store_true")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend one common N-token system prompt to every "
+                         "request and serve with the ref-counted prefix "
+                         "cache (copy-on-write) enabled")
+    ap.add_argument("--block-tokens", type=int, default=0,
+                    help="paged pool block size (0 = engine default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -62,19 +68,28 @@ def main(argv=None):
         model = Model(cfg, policy, group=group, residual=residual,
                       enc_len_hint=args.prompt_len)
         params = model.init(jax.random.PRNGKey(args.seed))
+        shared = args.shared_prefix > 0
         engine = ServingEngine(model, params, slots=args.slots,
                                max_tokens=args.max_tokens,
                                prompt_len=args.prompt_len,
-                               dtype=jnp.float32)
+                               dtype=jnp.float32,
+                               block_tokens=args.block_tokens or None,
+                               prefix_cache=shared and model.supports_paged())
         rng = np.random.default_rng(args.seed)
+        system = (rng.integers(0, cfg.vocab, size=args.shared_prefix,
+                               dtype=np.int32) if shared else None)
         for rid in range(args.requests):
-            engine.submit(Request(
-                rid=rid,
-                prompt=rng.integers(0, cfg.vocab, size=args.prompt_len,
-                                    dtype=np.int32),
-                max_new_tokens=args.max_new))
+            prompt = rng.integers(0, cfg.vocab, size=args.prompt_len,
+                                  dtype=np.int32)
+            if shared:
+                prompt = np.concatenate([system, prompt])
+            engine.submit(Request(rid=rid, prompt=prompt,
+                                  max_new_tokens=args.max_new))
         done = engine.run()
         stats = ServingEngine.summarize(done)
+        if shared and engine.paged:
+            stats.update({f"prefix_{k}": v
+                          for k, v in engine.prefix_stats().items()})
     # cache memory accounting (the paper's Fig. 4 quantity)
     if n:
         q_bytes = policy.cache_bytes_per_token(

@@ -49,6 +49,15 @@ SHAPES = {
     "serve_mixed_8k": ShapeCell("serve_mixed_8k", "serve", 8192, 64,
                                 layout="paged", chunk=256,
                                 block_tokens=256),
+    # Shared-prefix serving: the SAME compiled serve_step (prefix sharing
+    # is host-side — trie match, refcounts, page-table rows); the only
+    # device-visible deltas are the per-slot ``commit_base`` floor and
+    # chunk rows that start mid-prompt at the first post-shared token.
+    # Named separately so dry-runs/benches of the prefix-cache
+    # configuration are addressable on the grid.
+    "serve_shared_prefix": ShapeCell("serve_shared_prefix", "serve", 8192,
+                                     64, layout="paged", chunk=256,
+                                     block_tokens=256),
 }
 
 # Sub-quadratic archs that run the 500k-context decode cell.

@@ -205,7 +205,7 @@ def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
         def leaf(name, a):
             if a is None:
                 return None
-            if name == "lengths":
+            if name in ("lengths", "commit_base"):
                 return P(None, b_ax)
             if name == "page_table":
                 return P(None, b_ax, None)

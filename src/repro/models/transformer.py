@@ -296,13 +296,18 @@ class Model:
                     caches[f"run{i}_stage{j}_cross"] = self._stack(cross, n)
         return caches
 
+    @staticmethod
+    def cfg_supports_paged(cfg: ModelConfig) -> bool:
+        """Config-level paged-serving support check (no Model needed —
+        the dry-run CLI gates opt-in paged cells with this)."""
+        return not (cfg.is_encdec or cfg.mla or cfg.frontend
+                    or "M" in cfg.pattern)
+
     def supports_paged(self) -> bool:
         """Paged serving covers decoder-only attention archs (A/E/L/G/Z).
         SSM chunk-state masking, encoder-decoder cross caches, MLA latent
         paging and vision prefixes are ROADMAP follow-ons."""
-        cfg = self.cfg
-        return not (cfg.is_encdec or cfg.mla or cfg.frontend
-                    or "M" in cfg.pattern)
+        return self.cfg_supports_paged(self.cfg)
 
     def init_paged_caches(self, slots: int, max_tokens: int, *,
                           num_blocks: int, block_tokens: int,
@@ -699,8 +704,13 @@ class Model:
         ``n_valid [S]`` — real tokens per slot this step (0 = slot idle, a
         partial final chunk passes ``< C``).  One compiled shape serves
         every prompt length — the engine pads the final chunk instead of
-        recompiling.  Returns (per-slot logits at each slot's last valid
-        chunk row ``[S, V]``, caches).
+        recompiling.  Row positions derive from each slot's cache
+        ``lengths``, so prefill may start **mid-prompt**: a slot admitted
+        onto a shared prefix (prefix cache) begins at ``lengths =
+        commit_base = F`` and its first chunk rows sit at positions
+        ``F, F+1, …`` attending to the shared committed blocks below
+        ``F``.  Returns (per-slot logits at each slot's last valid chunk
+        row ``[S, V]``, caches).
         """
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -734,9 +744,12 @@ class Model:
         as row ``C`` of the embedded batch, so one QKV/MLP/attention pass
         advances every prefilling slot by a chunk AND every decoding slot
         by a token — decoding slots never stall behind another request's
-        prefill, and one compilation serves every mix.  Returns per-slot
-        logits at each slot's live row (chunk row ``n_valid − 1`` or the
-        decode row) ``[S, V]`` and the updated caches.
+        prefill, and one compilation serves every mix.  Chunk rows start
+        at each slot's cache length, so shared-prefix admissions (prefill
+        resuming mid-prompt past the mapped span) reuse this same
+        compilation.  Returns per-slot logits at each slot's live row
+        (chunk row ``n_valid − 1`` or the decode row) ``[S, V]`` and the
+        updated caches.
         """
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32

@@ -25,8 +25,22 @@ Three modes, one API:
 
   The engine owns the host-side block mappings (one shared by all global
   stages + one per windowed stage) and pushes them into each cache
-  pytree's ``page_table``/``lengths`` leaves before each step
-  (`_sync_caches`).
+  pytree's ``page_table``/``lengths``/``commit_base`` leaves before each
+  step (`_sync_caches`).
+
+  - *prefix sharing* (``prefix_cache=True``): a host-side trie
+    (:class:`~repro.core.paged.PrefixCache`) maps committed full blocks of
+    prompt tokens to pool block ids.  Admission matches each incoming
+    prompt against the trie; matched blocks are **mapped, not recomputed**
+    (one :meth:`BlockAllocator.acquire` per mapping), the slot starts with
+    ``lengths = commit_base = F`` (the shared span, capped at
+    ``commit_len(P)`` so the fp ring stays per-slot), and chunked prefill
+    resumes at token ``F``.  Before any step, ``_cow_pass`` copy-on-writes
+    every block the commit frontier would touch while its refcount > 1 —
+    shared blocks are strictly read-only — and under block pressure the
+    engine LRU-evicts cached prefixes (``_evict_prefixes``).  Decoded
+    streams are bit-identical to the unshared engine
+    (``tests/test_prefix_sharing.py``).
 
 * **Alternating paged** (``fused=False``) — the PR-1 baseline: prefill-
   chunk steps and decode ticks alternate (decoding slots wait whenever any
@@ -57,10 +71,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged import BlockAllocator, PagedKVCache
+from repro.core.paged import BlockAllocator, PagedKVCache, PrefixCache
 from repro.models.transformer import Model
 
 __all__ = ["Request", "ServingEngine"]
+
+# Mapping key of the block mapping shared by every non-windowed stage
+# (windowed stages use their ``run{i}_stage{j}`` cache key instead).
+GLOBAL_MAPPING = "global"
 
 
 @dataclasses.dataclass
@@ -85,7 +103,8 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  fused: Optional[bool] = None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 prefix_cache: bool = False):
         self.model = model
         self.params = params
         self.slots = slots
@@ -161,7 +180,28 @@ class ServingEngine:
             self._off = np.zeros(slots, np.int64)     # prompt tokens consumed
             self._next_tok = np.zeros(slots, np.int32)
             self.rejected: list[Request] = []
+            # -- prefix sharing (copy-on-write) ---------------------------
+            # The trie maps committed full blocks of prompt tokens to pool
+            # block ids per mapping; admission maps matched blocks instead
+            # of recomputing them and sets the slot's commit_base floor.
+            self.prefix_cache = bool(prefix_cache)
+            self.trie: Optional[PrefixCache] = (
+                PrefixCache(BT) if self.prefix_cache else None)
+            self._commit_base = np.zeros(slots, np.int32)
+            self._reg_done = np.zeros(slots, np.int64)  # blocks registered
+            self.prefix_lookups = 0
+            self.prefix_hits = 0
+            self.prefix_tokens_shared = 0
+            self.cow_copies = 0
+            self.evicted_prefix_blocks = 0
+            self._copy_fn = jax.jit(
+                lambda c, src, dst: c.copy_blocks(src, dst),
+                donate_argnums=(0,))
         else:
+            if prefix_cache:
+                raise ValueError(
+                    "prefix_cache requires the paged engine (block-level "
+                    "sharing has no meaning in the static legacy path)")
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
             self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
@@ -178,6 +218,7 @@ class ServingEngine:
         free = [i for i, r in enumerate(self.active) if r is None]
         while free and self.queue:
             req = self.queue[0]
+            chain, F = [], 0
             if self.paged:
                 # Reject requests whose PROMPT can never fit the per-slot
                 # page table (crashing mid-run would abandon every other
@@ -190,15 +231,24 @@ class ServingEngine:
                     req.t_done = time.time()
                     self.rejected.append(req)
                     continue
-                if need > self.alloc.free_blocks:
-                    if self.alloc.free_blocks == self.alloc.num_blocks:
-                        # pool is idle yet too small — waiting won't help
-                        self.queue.popleft()
-                        req.done = True
-                        req.t_done = time.time()
-                        self.rejected.append(req)
-                        continue
-                    break  # head-of-line waits for blocks to free up
+                # Prefix-cache hit: fully shared blocks need no fresh
+                # allocation (the partial tail block COWs later, which the
+                # +0 here covers because blocks_for_len counts its index).
+                chain, F = self._match_prefix(req.prompt)
+                need_new = max(0, need - F // self.block_tokens)
+                if need_new > self.alloc.free_blocks:
+                    self._evict_prefixes(
+                        need_new - self.alloc.free_blocks, protect=chain)
+                if need_new > self.alloc.free_blocks:
+                    if any(r is not None for r in self.active):
+                        break  # blocks free up as in-flight requests end
+                    # pool is as free as it will ever get — waiting can't
+                    # help, reject instead of deadlocking the queue
+                    self.queue.popleft()
+                    req.done = True
+                    req.t_done = time.time()
+                    self.rejected.append(req)
+                    continue
             i = free.pop(0)
             self.queue.popleft()
             self.active[i] = req
@@ -206,6 +256,11 @@ class ServingEngine:
                 self._off[i] = 0
                 self._next_tok[i] = 0  # don't inherit the previous
                 # occupant's last token (empty prompts decode from 0)
+                self._commit_base[i] = 0
+                self._reg_done[i] = 0
+                if self.trie is not None:
+                    self.prefix_lookups += 1
+                    self._map_shared(i, chain, F)
                 # Reserve the prompt's blocks NOW: admission decisions must
                 # see each other's commitments, or concurrent admissions
                 # oversubscribe an undersized pool and ensure() blows up
@@ -214,29 +269,254 @@ class ServingEngine:
             newly.append((i, req))
         return newly
 
+    # ------------------------------------------------- prefix sharing (COW)
+
+    def _mappings(self):
+        """(key, allocator) for every block mapping: the global one shared
+        by all non-windowed stages, plus each windowed stage's own."""
+        yield GLOBAL_MAPPING, self.alloc
+        yield from self.wallocs.items()
+
+    def _cl(self, length: int) -> int:
+        """Host mirror of the cache's commit cadence (without the base)."""
+        R, G = self.model.residual, self.model.group
+        return max(0, (length - R) // G * G)
+
+    def _match_prefix(self, prompt) -> tuple[list, int]:
+        """Longest usable cached prefix for ``prompt``.
+
+        Returns ``(chain, F)``: the trie nodes (full blocks, root-first)
+        and the shareable span ``F`` in tokens.  ``F`` is capped at
+        ``commit_len(P)`` — the final ``residual``-ish tokens of any prompt
+        live in the per-slot fp ring and must be recomputed, and starting
+        chunked prefill at ``F ≤ commit_len(P)`` guarantees the ring holds
+        ``[commit, length)`` at every subsequent read (the bit-identity
+        invariant).  Sharing is disabled when ``prefill_chunk < residual``:
+        a full restart chunk would then leave ``commit < F`` at its first
+        read.
+        """
+        if self.trie is None or not len(prompt):
+            return [], 0
+        if self.chunk < self.model.residual:
+            return [], 0
+        required = {key for key, _ in self._mappings()}
+        chain = self.trie.match(np.asarray(prompt, np.int32), required)
+        if not chain:
+            return [], 0
+        F = min(len(chain) * self.block_tokens, self._cl(len(prompt)))
+        return chain, max(0, F)
+
+    def _map_shared(self, i: int, chain: list, F: int):
+        """Maps a matched prefix into slot ``i``: shared blocks enter every
+        mapping's page table with a reference each, the slot's length and
+        ``commit_base`` start at ``F``, and chunked prefill resumes at the
+        first token past the shared span."""
+        if F <= 0:
+            return
+        BT = self.block_tokens
+        n_map = -(-F // BT)         # incl. the partially-shared tail block
+        for j in range(n_map):
+            for key, alloc in self._mappings():
+                alloc.share(i, j, chain[j].blocks[key])
+        for _, alloc in self._mappings():
+            alloc.lengths[i] = F
+        self._commit_base[i] = F
+        self._off[i] = F
+        self._reg_done[i] = F // BT  # fully-shared blocks are already cached
+        self.prefix_hits += 1
+        self.prefix_tokens_shared += int(F)
+
+    def _register_prefix(self, i: int, length: int):
+        """Publishes slot ``i``'s freshly committed full prompt blocks into
+        the trie (insert-or-touch walk from the root), taking one trie
+        reference per newly cached block.  Runs inside ``_advance`` *before*
+        windowed ``free_below`` so a windowed stage's block is captured in
+        the tick it becomes fully committed, not lost to early freeing."""
+        r = self.active[i]
+        BT = self.block_tokens
+        commit = max(self._cl(length), int(self._commit_base[i]))
+        limit = min(commit, len(r.prompt)) // BT
+        if limit <= int(self._reg_done[i]):
+            return
+        prompt = np.asarray(r.prompt, np.int32)
+        node = None
+        for j in range(limit):
+            blocks = {key: int(alloc.page_table[i, j])
+                      for key, alloc in self._mappings()
+                      if int(alloc.page_table[i, j]) > 0}
+            if GLOBAL_MAPPING not in blocks:
+                break
+            node, created = self.trie.extend(
+                node, self.trie.block_key(prompt, j), blocks)
+            if created:
+                for key, alloc in self._mappings():
+                    if key in node.blocks:
+                        alloc.acquire(node.blocks[key])
+        self._reg_done[i] = limit
+
+    def _evict_prefixes(self, n_blocks: int, protect=()) -> int:
+        """LRU-evicts cached prefixes (leaf-first) until ``n_blocks`` have
+        returned to the *global* free list or the trie is empty.  Evicting
+        a prefix a slot still maps mid-flight only drops the trie's
+        reference — the blocks stay live until that slot releases them.
+        ``protect`` — trie nodes that must survive (a chain matched for
+        the admission in progress but not yet mapped).
+
+        Only prefixes whose *global* block would actually free (refcount
+        1, trie-only) are candidates: detaching a prefix that in-flight
+        slots still map frees nothing now and forfeits its future hits,
+        so under pressure from live traffic the engine waits for those
+        slots instead of wiping the warm trie."""
+        if self.trie is None:
+            return 0
+
+        def freeable(node):
+            blk = node.blocks.get(GLOBAL_MAPPING)
+            return blk is not None and self.alloc.ref(blk) == 1
+
+        freed = 0
+        while freed < n_blocks:
+            node = self.trie.pop_lru_leaf(protect, freeable)
+            if node is None:
+                break
+            for key, alloc in self._mappings():
+                if key in node.blocks:
+                    if alloc.release_block(node.blocks[key]) \
+                            and key == GLOBAL_MAPPING:
+                        freed += 1
+            self.evicted_prefix_blocks += 1
+        return freed
+
+    def _evict_some(self) -> bool:
+        """One eviction step for an exhausted-pool retry: pops the LRU
+        cached prefix that frees a block in *any* mapping (a windowed
+        allocator can run dry while the global one has room — a
+        global-only check would give up too early).  Returns whether
+        anything was freed; False means every cached block is still
+        pinned by an in-flight slot (or the trie is empty)."""
+        if self.trie is None:
+            return False
+
+        def freeable(node):
+            return any(alloc.ref(node.blocks[key]) == 1
+                       for key, alloc in self._mappings()
+                       if key in node.blocks)
+
+        node = self.trie.pop_lru_leaf(freeable=freeable)
+        if node is None:
+            return False
+        self.evicted_prefix_blocks += 1
+        released = [alloc.release_block(node.blocks[key])
+                    for key, alloc in self._mappings()
+                    if key in node.blocks]
+        return any(released)
+
+    def _cow_pass(self, planned: dict):
+        """Copy-on-write sweep before a step: for every slot about to
+        advance (``planned``: slot → new tokens this tick), any block its
+        commit frontier will write that is still shared (refcount > 1) is
+        remapped to a fresh private block and its pool row copied on
+        device.  Post-condition (the read-only invariant): every commit
+        target has refcount 1."""
+        if not planned or self.trie is None:
+            return  # without the prefix cache no block is ever shared
+        BT = self.block_tokens
+        for key, alloc in self._mappings():
+            pairs = []
+            for i, n_new in planned.items():
+                base = int(self._commit_base[i])
+                old_c = max(self._cl(int(alloc.lengths[i])), base)
+                new_c = max(self._cl(int(alloc.lengths[i]) + n_new), base)
+                if new_c <= old_c:
+                    continue
+                for bi in range(old_c // BT, (new_c - 1) // BT + 1):
+                    blk = int(alloc.page_table[i, bi])
+                    if blk > 0 and alloc.ref(blk) > 1:
+                        pairs.append(self._cow_one(alloc, i, bi))
+                    blk = int(alloc.page_table[i, bi])
+                    assert blk == 0 or alloc.ref(blk) == 1, (
+                        "shared block would be committed into "
+                        "(read-only invariant)", key, i, bi)
+            if pairs:
+                self._apply_cow(key, pairs)
+
+    def _cow_one(self, alloc: BlockAllocator, i: int, bi: int):
+        while True:
+            try:
+                pair = alloc.cow(i, bi)
+                break
+            except RuntimeError:
+                if not self._evict_some():
+                    raise
+        self.cow_copies += 1
+        return pair
+
+    def _apply_cow(self, key: str, pairs: list):
+        """Device-copies COW'd pool rows in every stage the mapping backs
+        (pairs are padded with scratch (0, 0) no-ops so one compiled
+        ``copy_blocks`` shape serves any COW count)."""
+        stages = ([k for k, w in self.stage_windows.items() if not w]
+                  if key == GLOBAL_MAPPING else [key])
+        width = max(1, self.slots)
+        for lo in range(0, len(pairs), width):
+            part = pairs[lo:lo + width]
+            part = part + [(0, 0)] * (width - len(part))
+            src = jnp.asarray([p[0] for p in part], jnp.int32)
+            dst = jnp.asarray([p[1] for p in part], jnp.int32)
+            for sk in stages:
+                self.caches[sk] = self._copy_fn(self.caches[sk], src, dst)
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache counters (the shared-prefix benchmark reads these)."""
+        return {
+            "enabled": self.trie is not None,
+            "lookups": self.prefix_lookups,
+            "hits": self.prefix_hits,
+            "hit_rate": self.prefix_hits / max(1, self.prefix_lookups),
+            "tokens_shared": self.prefix_tokens_shared,
+            "cow_copies": self.cow_copies,
+            "evicted_blocks": self.evicted_prefix_blocks,
+            "trie_blocks": len(self.trie) if self.trie is not None else 0,
+            "blocks_allocated": self.alloc.allocated_total,
+        }
+
     # ------------------------------------------------------ paged plumbing
 
     def _ensure(self, i: int, new_len: int):
         """Maps blocks up to ``new_len`` in every block mapping (global +
         per-windowed-stage; a windowed mapping can never exhaust before the
-        global one — it only ever frees extra)."""
-        self.alloc.ensure(i, new_len)
-        for w in self.wallocs.values():
-            w.ensure(i, new_len)
+        global one — it only ever frees extra).  An exhausted pool evicts
+        cached prefixes one LRU batch at a time before giving up — the
+        warm trie survives transient pressure (retry is idempotent —
+        already-mapped rows are skipped)."""
+        while True:
+            try:
+                self.alloc.ensure(i, new_len)
+                for w in self.wallocs.values():
+                    w.ensure(i, new_len)
+                return
+            except RuntimeError:
+                if not self._evict_some():
+                    raise
 
     def _advance(self, i: int, n_tokens: int):
-        """Advances a slot's length everywhere, then releases windowed
-        blocks that fell wholly below each L stage's window."""
+        """Advances a slot's length everywhere; newly completed prompt
+        blocks are published to the prefix trie *before* windowed stages
+        release blocks that fell wholly below their window."""
         self.alloc.advance(i, n_tokens)
         length = int(self.alloc.lengths[i])
+        if self.trie is not None and self.active[i] is not None:
+            self._register_prefix(i, length)
         for key, w in self.wallocs.items():
             w.advance(i, n_tokens)
             self.win_blocks_freed += w.free_below(
                 i, length - self.stage_windows[key])
 
     def _sync_caches(self):
-        """Pushes each stage's block mapping + lengths into its cache."""
+        """Pushes each stage's block mapping + lengths + commit-base floor
+        into its cache."""
         ln = jnp.asarray(self.alloc.lengths, jnp.int32)
+        cb = jnp.asarray(self._commit_base, jnp.int32)
         tables = {k: jnp.asarray(w.page_table)
                   for k, w in self.wallocs.items()}
         pt = jnp.asarray(self.alloc.page_table)
@@ -248,7 +528,8 @@ class ServingEngine:
             return dataclasses.replace(
                 c,
                 page_table=jnp.broadcast_to(t[None], c.page_table.shape),
-                lengths=jnp.broadcast_to(ln[None], c.lengths.shape))
+                lengths=jnp.broadcast_to(ln[None], c.lengths.shape),
+                commit_base=jnp.broadcast_to(cb[None], c.commit_base.shape))
 
         self.caches = {k: upd(k, c) for k, c in self.caches.items()}
 
@@ -261,6 +542,8 @@ class ServingEngine:
         for w in self.wallocs.values():
             w.release(i)
         self._off[i] = 0
+        self._commit_base[i] = 0
+        self._reg_done[i] = 0
 
     def jit_stats(self) -> dict:
         """Compilation counts of the step functions — the serving test
@@ -353,6 +636,9 @@ class ServingEngine:
         dec, done = self._reserve_decode()
         dec_act = np.zeros(self.slots, bool)
         dec_act[dec] = True
+        planned = {i: int(nv[i]) for i in range(self.slots) if nv[i]}
+        planned.update({i: 1 for i in dec})
+        self._cow_pass(planned)
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._serve(
@@ -378,6 +664,7 @@ class ServingEngine:
             toks[i, :len(part)] = part
             nv[i] = len(part)
             self._ensure(i, int(self.alloc.lengths[i]) + len(part))
+        self._cow_pass({i: int(nv[i]) for i in range(self.slots) if nv[i]})
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._chunk_fn(
@@ -394,6 +681,7 @@ class ServingEngine:
             return done
         active = np.zeros(self.slots, bool)
         active[dec] = True
+        self._cow_pass({i: 1 for i in dec})
         self._sync_caches()
         pos = jnp.asarray(self.alloc.lengths, jnp.int32)
         t0 = time.perf_counter()

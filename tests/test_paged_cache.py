@@ -450,3 +450,136 @@ def test_allocator_free_below_window():
     assert alloc.free_blocks == 8
     alloc.ensure(0, 50)                       # fresh request maps from 0
     assert alloc.page_table[0][0] > 0
+
+
+# ------------------------------------------------- refcounts / COW / sharing
+
+def test_allocator_refcount_acquire_release():
+    """Blocks free only at refcount zero; every holder (slot mapping, trie
+    pin) counts."""
+    alloc = BlockAllocator(2, num_blocks=4, max_blocks=4, block_tokens=16,
+                           residual=16, group=16)
+    b1, b2 = alloc.ensure(0, 48)
+    assert alloc.ref(b1) == alloc.ref(b2) == 1
+    alloc.share(1, 0, b1)                   # second slot maps the block
+    assert alloc.ref(b1) == 2
+    alloc.acquire(b1)                       # trie-style pin
+    assert alloc.ref(b1) == 3
+    assert alloc.release(0) == 1            # b2 freed; b1 survives (ref 2)
+    assert alloc.ref(b1) == 2 and alloc.ref(b2) == 0
+    assert alloc.free_blocks == 3
+    assert alloc.release(1) == 0            # b1 still pinned (ref 1)
+    assert alloc.ref(b1) == 1
+    assert alloc.release_block(b1)          # last pin dropped → freed
+    assert alloc.free_blocks == 4
+    with pytest.raises(ValueError):
+        alloc.acquire(b1)                   # dead blocks can't be acquired
+    with pytest.raises(ValueError):
+        alloc.share(0, 1, b1)
+
+
+def test_allocator_cow_remaps_to_private_block():
+    """cow() gives the writer a fresh refcount-1 block and drops its
+    reference on the shared original."""
+    alloc = BlockAllocator(2, num_blocks=4, max_blocks=4, block_tokens=16,
+                           residual=16, group=16)
+    (b1,) = alloc.ensure(0, 40)             # one committed block
+    alloc.share(1, 0, b1)
+    src, dst = alloc.cow(1, 0)
+    assert src == b1 and dst != b1
+    assert alloc.page_table[1, 0] == dst and alloc.page_table[0, 0] == b1
+    assert alloc.ref(b1) == 1 and alloc.ref(dst) == 1
+    assert alloc.allocated_total == 2       # ensure + cow
+
+
+def test_allocator_free_below_respects_refcounts():
+    """Windowed early freeing of a shared block drops only this mapping's
+    reference — the block stays live for its other holders."""
+    alloc = BlockAllocator(1, num_blocks=4, max_blocks=4, block_tokens=16,
+                           residual=16, group=16)
+    blocks = alloc.ensure(0, 80)            # commit 64 → 4 blocks
+    alloc.advance(0, 80)
+    alloc.acquire(blocks[0])                # pinned (cached prefix)
+    freed = alloc.free_below(0, 40)         # blocks 0,1 wholly below 40
+    assert freed == 1                       # only the unpinned one freed
+    assert alloc.ref(blocks[0]) == 1 and alloc.ref(blocks[1]) == 0
+    assert alloc.page_table[0, 0] == 0      # unmapped from the row anyway
+    assert alloc.release_block(blocks[0])   # pin dropped → freed now
+    assert alloc.free_blocks == 2
+
+
+def test_copy_blocks_pool_rows_bit_exact():
+    """PagedKVCache.copy_blocks duplicates exactly the pool rows named by
+    (src, dst) — the device half of COW — and scratch (0, 0) pairs are
+    no-ops."""
+    rng = np.random.default_rng(23)
+    kb, vb, group, residual, BT = 2, 1, 16, 16, 16
+    S, H, D, T = 2, 2, 32, 128
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache = _append_all(cache, alloc, k, v, [64, 48])
+    src_blk = alloc.blocks_of(0)[0]
+    dst_blk = alloc._alloc()                # a definitely-unused pool row
+    out = cache.copy_blocks(jnp.asarray([src_blk, 0], jnp.int32),
+                            jnp.asarray([dst_blk, 0], jnp.int32))
+    for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                 "v_zero"):
+        a = np.asarray(getattr(out, name))
+        np.testing.assert_array_equal(a[dst_blk], a[src_blk])
+    # the non-pool leaves and every other pool row are untouched
+    np.testing.assert_array_equal(np.asarray(out.resid_k),
+                                  np.asarray(cache.resid_k))
+    other = alloc.blocks_of(1)[0]
+    np.testing.assert_array_equal(np.asarray(out.k_codes[other]),
+                                  np.asarray(cache.k_codes[other]))
+
+
+def test_commit_base_floor_matches_unshared_schedule():
+    """A slot starting at ``lengths = commit_base = F`` over pre-committed
+    blocks reproduces, group for group, the commits of a slot that wrote
+    the whole stream itself — the cache-level core of prefix sharing."""
+    rng = np.random.default_rng(29)
+    kb, vb, group, residual, BT = 2, 1, 8, 8, 8
+    S, H, D, T = 2, 2, 16, 128
+    L = 64
+    k = jnp.asarray(rng.normal(size=(1, H, L, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, H, L, D)).astype(np.float32))
+
+    # full unshared run in slot 0
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual)
+    kk = jnp.concatenate([k, jnp.zeros_like(k)], axis=0)
+    vv = jnp.concatenate([v, jnp.zeros_like(v)], axis=0)
+    cache = _append_all(cache, alloc, kk, vv, [L, 0])
+
+    # shared run: slot 1 maps slot 0's blocks below F and resumes at F
+    F = 40                                   # commit_len(64) = 56 ≥ F ✓
+    alloc.page_table[1, : F // BT] = alloc.page_table[0, : F // BT]
+    alloc.lengths[1] = F
+    lens = np.array([L, F], np.int32)
+    base = np.array([0, F], np.int32)
+    cache = cache.with_pages(alloc.page_table, lens, base)
+    assert int(cache.commit_lengths()[1]) == F
+    step = jax.jit(lambda c, kt, vt, a: c.append(kt, vt, a))
+    for t in range(F, L):
+        alloc.ensure(1, t + 2)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths),
+                                 base)
+        kt = jnp.concatenate([k[:, :, t:t + 1]] * 2, axis=0)
+        vt = jnp.concatenate([v[:, :, t:t + 1]] * 2, axis=0)
+        cache = step(cache, kt, vt, jnp.asarray([False, True]))
+
+    # identical committed stores and identical reads
+    c0 = int(cache.commit_lengths()[0])
+    assert int(cache.commit_lengths()[1]) == c0
+    for i in range(c0 // BT):
+        b0 = int(alloc.page_table[0, i])
+        b1 = int(alloc.page_table[1, i])
+        np.testing.assert_array_equal(np.asarray(cache.k_codes[b1]),
+                                      np.asarray(cache.k_codes[b0]))
+    q = jnp.asarray(rng.normal(size=(1, 4, 1, D)).astype(np.float32))
+    out = np.asarray(paged_decode_attend(jnp.repeat(q, 2, axis=0), cache),
+                     np.float32)
+    np.testing.assert_allclose(out[1], out[0], atol=ATOL)

@@ -1,0 +1,216 @@
+"""Ref-counted prefix sharing with copy-on-write: differential + lifecycle.
+
+The load-bearing property (mirrors the paged-vs-contiguous suite): with the
+prefix cache enabled, every request's decoded token stream is **identical**
+to the unshared engine's — sharing changes *where* committed groups come
+from (mapped donor blocks vs recomputation), never *what* any read sees.
+Covered here:
+
+* identical streams across AsymKV bit mixes, including exact-repeat
+  prompts, divergent suffixes, and windowed (L-stage) models;
+* refcount lifecycle through the engine: shared blocks survive the donor's
+  release and return to the free list only at refcount zero;
+* copy-on-write at the partially-shared tail block (``F`` mid-block) and
+  at a block-aligned divergence point (no COW needed);
+* LRU eviction of a cached prefix while a request that mapped it is still
+  mid-flight.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_model(arch="llama2-7b", high=2, low=1, seed=0):
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, high_bits=high,
+                       low_bits=low, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _mk_model()
+
+
+def _drive(model, params, batches, *, prefix, slots=2, block_tokens=8,
+           max_tokens=128, max_new=6):
+    """Submits request batches sequentially (each batch drains before the
+    next submits, so later batches can hit prefixes registered by earlier
+    ones) and returns (engine, {rid: stream})."""
+    eng = ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
+                        dtype=jnp.float32, block_tokens=block_tokens,
+                        prefix_cache=prefix)
+    streams = {}
+    for batch in batches:
+        for rid, prompt in batch:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new))
+        for r in eng.run():
+            streams[r.rid] = r.output
+    return eng, streams
+
+
+def _prompts_shared(cfg, sys_len=48, sfx_len=8, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab, sys_len, dtype=np.int32)
+    outs = [system.copy()]  # one exact repeat of the bare system prompt
+    for _ in range(n - 1):
+        outs.append(np.concatenate(
+            [system, rng.integers(0, cfg.vocab, sfx_len, dtype=np.int32)]))
+    return outs
+
+
+@pytest.mark.parametrize("high,low", [(2, 1), (1, 1), (4, 2)])
+def test_streams_identical_across_bit_mixes(high, low):
+    """Shared-prefix serving is bit-identical to unshared serving — for
+    every AsymKV bit mix, with an exact-repeat prompt and divergent
+    suffixes, and with strictly fewer blocks allocated."""
+    cfg, model, params = _mk_model(high=high, low=low)
+    p = _prompts_shared(cfg)
+    batches = [[(0, p[0])], [(1, p[1]), (2, p[2]), (3, p[0])]]
+    e_on, s_on = _drive(model, params, batches, prefix=True)
+    e_off, s_off = _drive(model, params, batches, prefix=False)
+    assert s_on == s_off, (high, low)
+    st = e_on.prefix_stats()
+    assert st["hits"] >= 2, st
+    assert st["tokens_shared"] > 0
+    assert e_on.alloc.allocated_total < e_off.alloc.allocated_total
+
+
+def test_windowed_layers_shared_prefix():
+    """Gemma-style local (L) stages: windowed mappings register their
+    blocks before ``free_below`` reclaims them, so sharing works — and the
+    streams still match the unshared engine exactly."""
+    cfg, model, params = _mk_model(arch="gemma3-1b", seed=2)
+    assert cfg.window == 16
+    p = _prompts_shared(cfg, sys_len=40, seed=3)
+    batches = [[(0, p[0])], [(1, p[1]), (2, p[2])]]
+    e_on, s_on = _drive(model, params, batches, prefix=True, max_new=10)
+    e_off, s_off = _drive(model, params, batches, prefix=False, max_new=10)
+    assert s_on == s_off
+    assert e_on.prefix_stats()["hits"] >= 1
+    assert e_on.wallocs, "gemma should have windowed block mappings"
+
+
+def test_partial_tail_group_cow(small_model):
+    """F = commit_len(P) mid-block: the consumer maps the donor's tail
+    block read-only, then copy-on-writes it when its own commit frontier
+    reaches the shared span — streams stay identical."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+    # BT=16: donor registers 4 blocks (commit reaches 64 during decode),
+    # consumer F = min(64, commit_len(64)=56) = 56 — inside block 3.
+    batches = [[(0, prompt)], [(1, prompt.copy())]]
+    e_on, s_on = _drive(model, params, batches, prefix=True,
+                        block_tokens=16, max_new=12)
+    e_off, s_off = _drive(model, params, batches, prefix=False,
+                          block_tokens=16, max_new=12)
+    assert s_on == s_off
+    st = e_on.prefix_stats()
+    assert st["hits"] == 1 and st["cow_copies"] >= 1, st
+
+
+def test_divergence_point_block_aligned(small_model):
+    """A prompt diverging exactly at a block boundary shares the common
+    blocks with no COW at all (nothing shared is ever written)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(13)
+    donor = rng.integers(0, cfg.vocab, 48, dtype=np.int32)
+    div = donor.copy()
+    div[32:] = rng.integers(0, cfg.vocab, 16, dtype=np.int32)  # block 4+
+    batches = [[(0, donor)], [(1, div)]]
+    e_on, s_on = _drive(model, params, batches, prefix=True, max_new=8)
+    e_off, s_off = _drive(model, params, batches, prefix=False, max_new=8)
+    assert s_on == s_off
+    st = e_on.prefix_stats()
+    # matched chain = 4 full blocks (32 tokens) < commit_len(48) = 40, so
+    # F = 32 — block-aligned, shared blocks stay untouched
+    assert st["hits"] == 1 and st["tokens_shared"] == 32, st
+    assert st["cow_copies"] == 0, st
+
+
+def test_refcount_lifecycle_through_engine(small_model):
+    """Donor finishes while a consumer still maps its blocks: the blocks
+    survive (trie + consumer references) and the pool fully reclaims only
+    after eviction of the whole trie."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab, 48, dtype=np.int32)
+    eng, _ = _drive(model, params, [[(0, prompt)], [(1, prompt.copy())]],
+                    prefix=True)
+    # drained: no active slots, but the trie still pins the cached prefix
+    assert all(r is None for r in eng.active)
+    st = eng.prefix_stats()
+    assert st["trie_blocks"] > 0
+    assert eng.alloc.free_blocks < eng.alloc.num_blocks
+    evicted = eng._evict_prefixes(eng.num_blocks)
+    assert evicted > 0
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks
+    for w in eng.wallocs.values():
+        assert w.free_blocks == w.num_blocks
+
+
+def test_eviction_mid_flight(small_model):
+    """Evicting a cached prefix while a consumer that mapped it is still
+    decoding must not disturb the consumer's stream (its references keep
+    the blocks alive until it finishes)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(19)
+    prompt = rng.integers(0, cfg.vocab, 48, dtype=np.int32)
+    # consumer shares only the first 3 blocks (24 tokens): the deeper
+    # cached blocks are trie-only, so eviction really frees pool blocks
+    # while the consumer still maps (and reads) the shallow ones
+    consumer = prompt.copy()
+    consumer[24:] = rng.integers(0, cfg.vocab, 24, dtype=np.int32)
+
+    def drive(prefix, evict_after):
+        eng = ServingEngine(model, params, slots=1, max_tokens=128,
+                            dtype=jnp.float32, block_tokens=8,
+                            prefix_cache=prefix)
+        streams = {}
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        for r in eng.run():
+            streams[r.rid] = r.output
+        eng.submit(Request(rid=1, prompt=consumer.copy(), max_new_tokens=8))
+        done = eng.run(max_ticks=2)           # consumer mid-flight
+        if evict_after:
+            assert eng.active[0] is not None  # really mid-flight
+            assert eng._evict_prefixes(eng.num_blocks) > 0
+        done += eng.run()                     # finish the drain
+        for r in done:
+            streams[r.rid] = r.output
+        return eng, streams
+
+    e_ev, s_ev = drive(True, True)
+    _, s_off = drive(False, False)
+    assert s_ev == s_off
+    assert e_ev.prefix_stats()["hits"] >= 1
+    # mid-flight eviction skips blocks the consumer still pins; once it
+    # finished they became trie-only, so a second pass reclaims the pool
+    e_ev._evict_prefixes(e_ev.num_blocks)
+    assert e_ev.alloc.free_blocks == e_ev.alloc.num_blocks
+
+
+def test_prefix_cache_requires_paged_engine():
+    """The legacy static path has no blocks to share."""
+    cfg = reduced(get_config("mamba2-370m"))
+    model = Model(cfg)
+    assert not model.supports_paged()
+    params = model.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServingEngine(model, params, slots=1, max_tokens=64,
+                      prompt_len=16, dtype=jnp.float32, prefix_cache=True)
