@@ -1,10 +1,11 @@
 """Serving-engine benchmark: fused mixed-tick stepping vs the alternating
-prefill/decode baseline, plus the shared-prefix (prefix-cache) trace.
+prefill/decode baseline, the shared-prefix (prefix-cache) trace, and the
+overload (preemption/swap) trace.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--tiny] \
         [--out BENCH_serve.json]
 
-Two traces:
+Three traces:
 
 * **mixed** — mixed-length prompts, staggered decode budgets; fused vs
   alternating engines drain it identically (greedy decoding, streams
@@ -13,6 +14,13 @@ Two traces:
   prefix-cache engine (``prefix_cache=True``) vs the plain fused engine.
   Streams are asserted identical; the report adds ``prefix_hit_rate``,
   ``blocks_allocated`` (vs baseline), ``cow_copies``, and TTFT for both.
+* **overload** — the same requests against a block pool sized at ~60% of
+  the trace's peak working set, draining once per ``preemption_mode``
+  (``swap`` and ``recompute``) against a fully-backed no-pressure
+  baseline.  Asserts every request completes, ≥ 1 preemption fires in
+  each mode, and every token stream is **bit-identical** to the
+  unpressured run; the report adds preemption counts, swap bytes, and
+  TTFT/TPOT p50/p99 for all three engines.
 
 Report keys per engine:
 
@@ -92,6 +100,23 @@ def _shared_trace(cfg, *, n_requests: int, k_prompts: int, sys_len: int,
     ]
 
 
+def _pressure_pool(model, reqs, *, slots: int, block_tokens: int,
+                   frac: float = 0.6) -> int:
+    """Pool size at ``frac`` of the trace's peak working set: the sum of
+    the ``slots`` largest per-request block footprints (prompt + decode
+    budget), floored at the single largest so any one request still fits
+    — overload must preempt, never reject."""
+    G, R = model.group, model.residual
+
+    def need(r):
+        L = len(r.prompt) + r.max_new_tokens + 2
+        return -(-max(0, (L - R) // G * G) // block_tokens)
+
+    needs = sorted((need(r) for r in reqs), reverse=True)
+    peak = sum(needs[:slots])
+    return max(needs[0], int(frac * peak))
+
+
 def _drain(eng, reqs):
     for r in reqs:
         # fresh per-drain bookkeeping on shared Request objects
@@ -109,14 +134,16 @@ def _drain(eng, reqs):
 def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                  max_tokens: int, repeats: int = 3,
                  prefix_cache: bool = False,
-                 block_tokens=None) -> dict:
+                 block_tokens=None, num_blocks=None,
+                 preemption=None) -> dict:
     import jax.numpy as jnp
     from repro.serving.engine import ServingEngine
 
     eng = ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
                         dtype=jnp.float32, fused=fused,
                         prefix_cache=prefix_cache,
-                        block_tokens=block_tokens)
+                        block_tokens=block_tokens, num_blocks=num_blocks,
+                        preemption_mode=preemption)
     _drain(eng, reqs)   # warmup drain: pays compiles (and, with the prefix
     # cache on, populates the trie — timed drains measure the warm cache)
     # best-of-N timed drains: wall time on a shared host is noisy, the
@@ -125,6 +152,7 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
     for _ in range(max(1, repeats)):
         a0 = eng.alloc.allocated_total
         p0 = eng.prefix_stats()
+        s0 = eng.preempt_stats()
         res = _drain(eng, reqs)
         extra = {"blocks_allocated": eng.alloc.allocated_total - a0}
         if prefix_cache:
@@ -138,15 +166,24 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                 "cow_copies": d["cow_copies"],
                 "evicted_blocks": d["evicted_blocks"],
             }
+        if preemption:
+            s1 = eng.preempt_stats()
+            extra |= {k: s1[k] - s0[k] for k in
+                      ("preemptions", "swap_resumes", "recompute_resumes",
+                       "swap_out_bytes", "swap_in_bytes")}
         if best is None or res[1] < best[0][1]:
             best = (res, extra)
     (done, wall, ticks, tick_times), extra = best
     gen = sum(len(r.output) for r in done)
     dec = sum(max(0, len(r.output) - 1) for r in done)
     ttft = [r.t_first - r.t_admit for r in done if r.t_first]
+    # latency percentiles (ttft/tpot p50/p99) come from the engine's own
+    # summarize() so bench and engine can never disagree on definitions
+    summ = ServingEngine.summarize(done)
     streams = {r.rid: list(r.output) for r in done}
     return {
-        "mode": ("fused+prefix_cache" if prefix_cache
+        "mode": (f"fused+preemption:{preemption}" if preemption
+                 else "fused+prefix_cache" if prefix_cache
                  else "fused" if fused else "alternating"),
         "requests": len(done),
         "gen_tokens": gen,
@@ -154,8 +191,11 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
         "wall_s": wall,
         "gen_tok_s": gen / max(wall, 1e-9),
         "decode_tok_s": dec / max(wall, 1e-9),
-        "ttft_p50_s": float(np.median(ttft)) if ttft else None,
+        "ttft_p50_s": summ.get("ttft_p50_s"),
+        "ttft_p99_s": summ.get("ttft_p99_s"),
         "ttft_mean_s": float(np.mean(ttft)) if ttft else None,
+        "tpot_p50_s": summ.get("tpot_p50_s"),
+        "tpot_p99_s": summ.get("tpot_p99_s"),
         "ticks": ticks,
         "tick_wall_mean_s": float(np.mean(tick_times)) if tick_times else None,
         "tick_wall_p50_s": float(np.median(tick_times)) if tick_times else None,
@@ -185,6 +225,9 @@ def main() -> None:
         shared = dict(n_requests=6, k_prompts=2, sys_len=48, sfx_len=8,
                       max_new=[8, 4, 6])
         shared_bt = 8
+        overload = dict(n_requests=5, lengths=[48, 40, 56],
+                        max_new=[16, 12, 10], seed=3)
+        overload_bt = 8
     else:
         slots, max_tokens = args.slots or 4, 256
         lengths = [8, 96, 16, 64, 24, 80]
@@ -192,6 +235,9 @@ def main() -> None:
         shared = dict(n_requests=12, k_prompts=3, sys_len=64, sfx_len=16,
                       max_new=[16, 8, 24, 12])
         shared_bt = 16
+        overload = dict(n_requests=10, lengths=[96, 64, 80, 112],
+                        max_new=[32, 48, 24, 40], seed=3)
+        overload_bt = 16
 
     reqs = _trace(cfg, n_requests=n_requests, lengths=lengths,
                   max_new=max_new)
@@ -218,6 +264,30 @@ def main() -> None:
     assert sp_on["blocks_allocated"] < sp_off["blocks_allocated"], (
         sp_on["blocks_allocated"], sp_off["blocks_allocated"])
 
+    # --- overload trace: pool at ~60% of the working set, both modes -----
+    oreqs = _trace(cfg, **overload)
+    pool = _pressure_pool(model, oreqs, slots=slots,
+                          block_tokens=overload_bt)
+    ov_base, so_base = bench_engine(model, params, oreqs, fused=True,
+                                    slots=slots, max_tokens=max_tokens,
+                                    repeats=args.repeats,
+                                    block_tokens=overload_bt)
+    ov = {}
+    for mode in ("swap", "recompute"):
+        ov[mode], so_mode = bench_engine(
+            model, params, oreqs, fused=True, slots=slots,
+            max_tokens=max_tokens, repeats=args.repeats,
+            block_tokens=overload_bt, num_blocks=pool, preemption=mode)
+        assert so_mode == so_base, (
+            f"{mode}-preemption token streams diverged from the "
+            "no-pressure baseline")
+        assert ov[mode]["requests"] == len(oreqs), ov[mode]
+        assert ov[mode]["preemptions"] >= 1, ov[mode]
+    assert ov["swap"]["swap_out_bytes"] > 0
+    assert ov["swap"]["swap_out_bytes"] == ov["swap"]["swap_in_bytes"], (
+        "swapped bytes must round-trip completely", ov["swap"])
+    assert ov["recompute"]["swap_out_bytes"] == 0
+
     report = {
         "bench": "serving_fused_vs_alternating",
         "model": cfg.name,
@@ -241,6 +311,15 @@ def main() -> None:
             "ttft_p50_ratio": (sp_on["ttft_p50_s"] or 0) / max(
                 sp_off["ttft_p50_s"] or 1e-9, 1e-9),
         },
+        "preemption": {
+            "trace": {**overload, "slots": slots, "max_tokens": max_tokens,
+                      "block_tokens": overload_bt},
+            "num_blocks": pool,
+            "num_blocks_full": slots * (-(-max_tokens // overload_bt)),
+            "baseline": ov_base,
+            "swap": ov["swap"],
+            "recompute": ov["recompute"],
+        },
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps({k: report[k] for k in
@@ -254,6 +333,14 @@ def main() -> None:
           f"{sp_off['blocks_allocated']} baseline, ttft p50 "
           f"{sp_on['ttft_p50_s']:.3f}s vs {sp_off['ttft_p50_s']:.3f}s, "
           f"{sp_on['cow_copies']} COW copies")
+    for mode in ("swap", "recompute"):
+        o = ov[mode]
+        print(f"overload/{mode}: {o['preemptions']} preemptions "
+              f"({pool}/{report['preemption']['num_blocks_full']} blocks), "
+              f"{o['swap_out_bytes']} B swapped, ttft p50 "
+              f"{o['ttft_p50_s']:.3f}s (base {ov_base['ttft_p50_s']:.3f}s), "
+              f"tpot p99 {o['tpot_p99_s'] or 0:.4f}s "
+              f"(base {ov_base['tpot_p99_s'] or 0:.4f}s)")
     print(f"wrote {args.out}")
 
 

@@ -1,14 +1,17 @@
 """Batched serving examples: continuous batching over an AsymKV 2/1-bit
 cache (gemma3-1b family, reduced size for CPU).
 
-Two variants:
+Three variants:
 
 * plain — independent random prompts through the fused paged engine;
 * shared prefix — every request carries the same 48-token system prompt
   and the engine runs with the ref-counted prefix cache on
   (``--shared-prefix``): admissions after the first map the system
   prompt's committed blocks instead of recomputing them (copy-on-write
-  protects the shared tail block).
+  protects the shared tail block);
+* overload — the block pool deliberately undersized (``--num-blocks``)
+  with ``--preemption swap``: long requests are paused to host memory
+  under pressure and resumed bit-identically instead of failing.
 
     PYTHONPATH=src python examples/serve_requests.py
 """
@@ -37,6 +40,21 @@ def main():
     assert stats["requests"] == 8
     assert stats["prefix_hits"] > 0, "expected prefix-cache hits"
     assert stats["prefix_tokens_shared"] > 0
+
+    # Overload variant: a pool far below the trace's working set, swap
+    # preemption on — every request still completes (paused + resumed
+    # rather than truncated), and the stats expose the swap traffic.
+    stats = serve_main([
+        "--arch", "gemma3-1b", "--reduced",
+        "--requests", "6", "--slots", "2",
+        "--prompt-len", "48", "--max-new", "12",
+        "--lk", "3", "--lv", "0",
+        "--block-tokens", "8", "--num-blocks", "10",
+        "--preemption", "swap",
+    ])
+    assert stats["requests"] == 6
+    assert stats["preempt_preemptions"] >= 1, "expected memory pressure"
+    assert stats["preempt_swap_out_bytes"] == stats["preempt_swap_in_bytes"]
 
 
 if __name__ == "__main__":

@@ -73,6 +73,20 @@ Mutation entry points (all jit-safe, fixed shapes):
   lengths that are multiples of ``G`` (the engine's chunk cadence
   guarantees this); the final partial chunk may have any ``n_valid``.
 
+* **Preemption / host swap** — under memory pressure the serving engine
+  can *pause* a running request instead of stalling or failing admission:
+  :meth:`PagedKVCache.swap_out_blocks` gathers the slot's pool rows
+  (packed K/V codes, scales/zeros, or fp stores) **and** its fp residual
+  ring to host numpy buffers, the engine parks them in a :class:`SwapPool`
+  keyed by request id, and the slot's blocks are released (refcount-aware:
+  a shared block just drops this holder).  Resume allocates fresh blocks
+  (:meth:`BlockAllocator.restore`) and scatters the bytes back with
+  :meth:`PagedKVCache.swap_in_blocks` — committed groups are immutable, so
+  the round trip is bit-exact and the resumed stream is indistinguishable
+  from one that was never paused.  With AsymKV's 1-bit K / asymmetric V
+  packing a swapped block is ~8–16x smaller than its fp16 equivalent,
+  which is what makes host swap cheap enough to prefer over recompute.
+
 Read paths live in :mod:`repro.core.attention_quant`
 (``paged_decode_attend`` / ``paged_chunk_attend``) and the unified Pallas
 kernel ``repro.kernels.paged_attn.paged_asym_attn`` whose BlockSpecs index
@@ -94,7 +108,14 @@ import numpy as np
 
 from repro.core.quant import QuantSpec, QuantArray, quantize, dequantize
 
-__all__ = ["PagedKVCache", "BlockAllocator", "PrefixCache", "PrefixNode"]
+__all__ = ["PagedKVCache", "BlockAllocator", "PrefixCache", "PrefixNode",
+           "SwapPool"]
+
+# Pool leaves (one row per block) vs per-slot fp-ring leaves — the two
+# families swap_out_blocks/swap_in_blocks move between device and host.
+_POOL_LEAVES = ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
+                "v_zero", "k_fp", "v_fp")
+_RING_LEAVES = ("resid_k", "resid_v")
 
 
 def _cl(lengths: jax.Array, residual: int, group: int) -> jax.Array:
@@ -512,13 +533,17 @@ class PagedKVCache:
 
         ``src/dst [P] int32`` — pairs may be padded with ``(0, 0)`` (scratch
         onto itself, a no-op) so one compiled shape serves any COW count.
-        The engine calls this *before* a step whose commit frontier would
-        write into a block with refcount > 1: the writer gets a private
-        copy, every other holder keeps reading the original.
+
+        This is the device half of the read-only invariant (allocator
+        invariant 3): a block with refcount > 1 must never be committed
+        into, so the engine calls this *before* a step whose commit
+        frontier would write into one — the writer gets a private copy
+        (fresh refcount-1 block from :meth:`BlockAllocator.cow`), every
+        other holder keeps reading the original.  Committed groups are
+        immutable, so the copy is bit-exact by construction.
         """
         upd = {}
-        for name in ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale",
-                     "v_zero", "k_fp", "v_fp"):
+        for name in _POOL_LEAVES:
             a = getattr(self, name)
             if a is not None:
                 # block axis: 0 for a single layer, 1 for the engine's
@@ -527,6 +552,67 @@ class PagedKVCache:
                 ax = a.ndim - 4
                 idx = (slice(None),) * ax + (dst,)
                 upd[name] = a.at[idx].set(jnp.take(a, src, axis=ax))
+        return dataclasses.replace(self, **upd)
+
+    def swap_out_blocks(self, blocks, slot: Optional[int] = None) -> dict:
+        """Device → host gather for preemption swap-out.
+
+        ``blocks`` — pool block ids (any int sequence) whose rows to copy
+        out; returns ``{leaf_name: np.ndarray}`` with the block axis packed
+        in the order given.  When ``slot`` is passed the slot's fp residual
+        ring rows (``resid_k``/``resid_v``) are included too — together
+        with the host-tracked ``lengths``/``commit_base`` this is the
+        entire per-request cache state, so a swap-out → swap-in round trip
+        is bit-exact (committed groups are immutable; the ring holds the
+        only mutable fp window).  Works on a single-layer cache and on the
+        engine's layer-stacked leaves alike (block/slot axis ``ndim − 4``,
+        as in :meth:`copy_blocks`).
+        """
+        blk = jnp.asarray(np.asarray(blocks, np.int32))
+        out = {}
+        for name in _POOL_LEAVES:
+            a = getattr(self, name)
+            if a is not None:
+                out[name] = np.asarray(jnp.take(a, blk, axis=a.ndim - 4))
+        if slot is not None:
+            sl = jnp.asarray([slot], jnp.int32)
+            for name in _RING_LEAVES:
+                a = getattr(self, name)
+                if a is not None:
+                    out[name] = np.asarray(jnp.take(a, sl, axis=a.ndim - 4))
+        return out
+
+    def swap_in_blocks(self, data: dict, blocks,
+                       slot: Optional[int] = None) -> "PagedKVCache":
+        """Host → device scatter for preemption swap-in.
+
+        ``data`` — a :meth:`swap_out_blocks` payload; ``blocks`` — the
+        *destination* pool block ids (usually fresh ones from
+        :meth:`BlockAllocator.restore` — the originals were freed at
+        swap-out), positionally matching the swapped-out order; ``slot`` —
+        the slot whose ring rows to restore (may differ from the swapped-
+        out slot).  Returns the updated cache; rows not named are
+        untouched.
+
+        Trace-safe: the engine jits this with the cache donated (like its
+        COW ``copy_blocks`` wrapper) so resume scatters in place instead
+        of copying every pool leaf — it pads ``blocks`` to a fixed width
+        with scratch-0 entries (duplicate scatters into the scratch row
+        are harmless by construction) so one compilation per stage shape
+        serves any swap size.
+        """
+        blk = jnp.asarray(blocks, jnp.int32)
+        sl = (None if slot is None
+              else jnp.asarray(slot, jnp.int32).reshape(1))
+        upd = {}
+        for name, arr in data.items():
+            a = getattr(self, name)
+            idx = sl if name in _RING_LEAVES else blk
+            if idx is None:
+                continue
+            ax = a.ndim - 4
+            at = (slice(None),) * ax + (idx,)
+            upd[name] = a.at[at].set(jnp.asarray(arr, a.dtype))
         return dataclasses.replace(self, **upd)
 
     def nbytes(self) -> int:
@@ -591,14 +677,26 @@ class BlockAllocator:
         return int(self._refs[block])
 
     def acquire(self, block: int) -> None:
-        """Adds a holder to a live block (sharing admission / trie pin)."""
+        """Adds a holder to a live block (sharing admission / trie pin).
+
+        Only *live* blocks can gain holders (invariant 4: refcount zero
+        means free-listed — a dead block id may already name another
+        request's data).  Raising the count above 1 makes the block
+        read-only for every holder (invariant 3); the engine must COW
+        before any commit would touch it.
+        """
         if not (0 < block <= self.num_blocks) or self._refs[block] <= 0:
             raise ValueError(f"acquire of dead block {block}")
         self._refs[block] += 1
 
     def release_block(self, block: int) -> bool:
         """Drops one holder; frees the block at refcount zero.  Returns
-        True when the block actually returned to the free list."""
+        True when the block actually returned to the free list.
+
+        This is the only path back to the free list (invariant 4):
+        ``release``/``free_below``/preemption swap-out all funnel through
+        it, so a block mapped by several slots (or pinned by the prefix
+        trie) can never be reallocated while any holder remains."""
         if self._refs[block] <= 0:
             raise ValueError(f"release of dead block {block}")
         self._refs[block] -= 1
@@ -617,7 +715,11 @@ class BlockAllocator:
 
     def share(self, slot: int, idx: int, block: int) -> None:
         """Maps an already-live block into a slot's page table (prefix
-        sharing at admission), taking a reference on it."""
+        sharing at admission), taking a reference on it.
+
+        The target row must be unmapped (a slot never double-maps an
+        index), and the resulting refcount > 1 makes the block read-only
+        for everyone (invariant 3) until the sharer COWs or releases."""
         if self.page_table[slot, idx] != 0:
             raise ValueError(f"slot {slot} idx {idx} already mapped")
         self.acquire(block)
@@ -636,6 +738,33 @@ class BlockAllocator:
         self.page_table[slot, idx] = dst
         self.release_block(src)
         return src, dst
+
+    def restore(self, slot: int, indices, length: int,
+                min_block: int = 0) -> list[int]:
+        """Re-maps a swapped-in slot: a fresh refcount-1 block at every
+        page-table index in ``indices`` (the set the slot held at
+        swap-out — windowed mappings may have holes below their freeing
+        frontier), per-slot ``lengths`` restored to ``length`` and the
+        frontier to ``min_block``.  Returns the new block ids positionally
+        matching ``indices`` — the caller scatters the swapped-out pool
+        rows into them (:meth:`PagedKVCache.swap_in_blocks`).  Raises
+        ``RuntimeError`` when the pool can't cover the mapping (the engine
+        checks ``free_blocks`` first and retries the resume later)."""
+        indices = [int(i) for i in indices]
+        if len(indices) > self.free_blocks:
+            raise RuntimeError(
+                f"swap-in of slot {slot} needs {len(indices)} blocks, "
+                f"{self.free_blocks} free")
+        row = self.page_table[slot]
+        if row.any():
+            raise ValueError(f"restore into non-empty slot {slot}")
+        newly = []
+        for i in indices:
+            row[i] = self._alloc()
+            newly.append(int(row[i]))
+        self.lengths[slot] = length
+        self._min_block[slot] = min_block
+        return newly
 
     def blocks_of(self, slot: int) -> list[int]:
         return [int(b) for b in self.page_table[slot] if b > 0]
@@ -674,7 +803,10 @@ class BlockAllocator:
         (sliding-window layers: positions < ``length − window`` are never
         read again, so block ``i`` is reclaimable once ``(i+1)·BT ≤ lo``).
         Advances the slot's freeing frontier so ``ensure`` never remaps the
-        released range.  Returns how many blocks were freed."""
+        released range.  Returns how many blocks actually freed — a block
+        the prefix trie (or another slot) still holds only loses this
+        slot's reference (invariant 4) and is unmapped from the row, not
+        free-listed."""
         nb = min(max(0, lo_token // self.block_tokens), self.max_blocks)
         row = self.page_table[slot]
         freed = 0
@@ -825,3 +957,65 @@ class PrefixCache:
         best.parent = None
         self._count -= 1
         return best
+
+
+class SwapPool:
+    """Host-side parking lot for swapped-out request state.
+
+    One record per preempted request id: a nested dict ``{stage_key:
+    {leaf_name: np.ndarray}}`` as produced by
+    :meth:`PagedKVCache.swap_out_blocks` per engine stage (the engine adds
+    its own host bookkeeping — lengths, offsets, ``commit_base``, mapped
+    page-table indices — in a separate record).  Nothing here is traced or
+    device-resident: the whole point is that the bytes left the
+    accelerator, and with AsymKV packing a swapped block is ``~bits/16``
+    of its fp16 size, so host RAM amortizes far more paused context than
+    the device pool holds live.
+
+    Byte accounting: ``bytes_out``/``bytes_in`` are cumulative transfer
+    totals (the serving benchmark's swap-traffic metric);
+    ``resident_bytes`` is the currently parked footprint;
+    ``peak_resident_bytes`` its high-water mark.
+    """
+
+    def __init__(self):
+        self._records: dict[int, dict] = {}
+        self._sizes: dict[int, int] = {}
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._records
+
+    @staticmethod
+    def _nbytes(payload: dict) -> int:
+        return sum(int(a.nbytes) for stage in payload.values()
+                   for a in stage.values())
+
+    def put(self, rid: int, payload: dict) -> int:
+        """Parks a swap-out payload; returns its size in bytes.  One
+        record per request id — a double put is a bug (the engine must
+        pop before re-preempting the same request)."""
+        if rid in self._records:
+            raise ValueError(f"request {rid} already swapped out")
+        n = self._nbytes(payload)
+        self._records[rid] = payload
+        self._sizes[rid] = n
+        self.bytes_out += n
+        self.resident_bytes += n
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+        return n
+
+    def pop(self, rid: int) -> dict:
+        """Removes and returns a parked payload (swap-in)."""
+        payload = self._records.pop(rid)
+        n = self._sizes.pop(rid)
+        self.bytes_in += n
+        self.resident_bytes -= n
+        return payload

@@ -45,6 +45,19 @@ def main(argv=None):
                          "cache (copy-on-write) enabled")
     ap.add_argument("--block-tokens", type=int, default=0,
                     help="paged pool block size (0 = engine default)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="block pool size (0 = fully backed: slots × "
+                         "ceil(max_tokens / block_tokens)).  Undersize it "
+                         "to run under memory pressure — pair with "
+                         "--preemption so long requests pause instead of "
+                         "finishing early at capacity")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "swap", "recompute"],
+                    help="under block pressure, pause the LRU victim and "
+                         "resume it later: 'swap' round-trips its pool "
+                         "rows + fp ring through host memory, 'recompute' "
+                         "re-prefills prompt + generated tokens (both "
+                         "bit-identical to an unpressured run)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -69,12 +82,16 @@ def main(argv=None):
                       enc_len_hint=args.prompt_len)
         params = model.init(jax.random.PRNGKey(args.seed))
         shared = args.shared_prefix > 0
+        preemption = (args.preemption if args.preemption != "off"
+                      and model.supports_paged() else None)
         engine = ServingEngine(model, params, slots=args.slots,
                                max_tokens=args.max_tokens,
                                prompt_len=args.prompt_len,
                                dtype=jnp.float32,
                                block_tokens=args.block_tokens or None,
-                               prefix_cache=shared and model.supports_paged())
+                               num_blocks=args.num_blocks or None,
+                               prefix_cache=shared and model.supports_paged(),
+                               preemption_mode=preemption)
         rng = np.random.default_rng(args.seed)
         system = (rng.integers(0, cfg.vocab, size=args.shared_prefix,
                                dtype=np.int32) if shared else None)
@@ -90,6 +107,9 @@ def main(argv=None):
         if shared and engine.paged:
             stats.update({f"prefix_{k}": v
                           for k, v in engine.prefix_stats().items()})
+        if preemption:
+            stats.update({f"preempt_{k}": v
+                          for k, v in engine.preempt_stats().items()})
     # cache memory accounting (the paper's Fig. 4 quantity)
     if n:
         q_bytes = policy.cache_bytes_per_token(

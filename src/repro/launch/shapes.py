@@ -23,10 +23,13 @@ class ShapeCell:
     # Paged serving cells (variable-length continuous batching): ``layout``
     # selects the PagedKVCache store; ``chunk`` is the chunked-prefill step
     # width (kind="chunk"; 0 → residual+group); ``block_tokens`` the paged
-    # block size (0 → engine default).
+    # block size (0 → engine default); ``pool_frac`` scales the block pool
+    # below the fully-backed ``slots × ceil(seq / BT)`` default — < 1.0
+    # models memory pressure (the preemption/swap regime).
     layout: str = "contiguous"  # contiguous | paged
     chunk: int = 0
     block_tokens: int = 0
+    pool_frac: float = 1.0
 
 
 SHAPES = {
@@ -58,6 +61,17 @@ SHAPES = {
     "serve_shared_prefix": ShapeCell("serve_shared_prefix", "serve", 8192,
                                      64, layout="paged", chunk=256,
                                      block_tokens=256),
+    # Overload serving: the block pool deliberately undersized (~60% of the
+    # fully-backed working set) so the engine runs in its memory-pressure
+    # regime — prefix-LRU eviction first, then preemption with host block
+    # swap (or chunked re-prefill).  Device-side this is the SAME compiled
+    # serve_step as serve_mixed_8k (preemption is host bookkeeping + a
+    # pool-row gather/scatter between ticks); the cell exists so the
+    # undersized-pool cache shapes are dry-runnable/addressable on the
+    # grid like every other serving configuration.
+    "serve_overload_8k": ShapeCell("serve_overload_8k", "serve", 8192, 64,
+                                   layout="paged", chunk=256,
+                                   block_tokens=256, pool_frac=0.6),
 }
 
 # Sub-quadratic archs that run the 500k-context decode cell.

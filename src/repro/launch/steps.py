@@ -119,9 +119,13 @@ def cache_structs(model: Model, cell: ShapeCell, dtype=jnp.bfloat16):
 
 def paged_cache_structs(model: Model, cell: ShapeCell, dtype=jnp.bfloat16):
     """ShapeDtypeStructs of the *paged* serving caches (no allocation).
-    The pool is fully backed by default: ``slots × ceil(seq / BT)``."""
+    The pool is fully backed by default: ``slots × ceil(seq / BT)``;
+    overload cells scale it down by ``cell.pool_frac`` (< 1.0 means
+    requests can outgrow the pool — the engine's preemption/swap regime;
+    at least one block per slot is kept so admission stays possible)."""
     BT = cell.block_tokens or PagedKVCache.default_block_tokens(model.group)
-    num_blocks = cell.batch * (-(-cell.seq // BT))
+    num_blocks = max(cell.batch,
+                     int(cell.batch * (-(-cell.seq // BT)) * cell.pool_frac))
     return jax.eval_shape(
         lambda: model.init_paged_caches(
             cell.batch, cell.seq, num_blocks=num_blocks,

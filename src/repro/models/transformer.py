@@ -705,12 +705,22 @@ class Model:
         partial final chunk passes ``< C``).  One compiled shape serves
         every prompt length — the engine pads the final chunk instead of
         recompiling.  Row positions derive from each slot's cache
-        ``lengths``, so prefill may start **mid-prompt**: a slot admitted
-        onto a shared prefix (prefix cache) begins at ``lengths =
-        commit_base = F`` and its first chunk rows sit at positions
-        ``F, F+1, …`` attending to the shared committed blocks below
-        ``F``.  Returns (per-slot logits at each slot's last valid chunk
-        row ``[S, V]``, caches).
+        ``lengths``, so prefill may start or **resume at any offset**:
+
+        * a slot admitted onto a shared prefix (prefix cache) begins at
+          ``lengths = commit_base = F`` and its first chunk rows sit at
+          positions ``F, F+1, …`` attending to the shared committed
+          blocks below ``F``;
+        * a swap-resumed slot (preemption) continues exactly where its
+          restored ``lengths`` left off, mid-prompt or mid-decode;
+        * a recompute-resumed slot re-prefills its prompt **plus** the
+          tokens it already generated — the commit schedule is
+          write-order independent and greedy decoding deterministic, so
+          the rebuilt cache is bit-identical and the logits at the last
+          chunk row continue the stream exactly where preemption cut it.
+
+        Returns (per-slot logits at each slot's last valid chunk row
+        ``[S, V]``, caches).
         """
         cfg = self.cfg
         dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
@@ -745,9 +755,10 @@ class Model:
         advances every prefilling slot by a chunk AND every decoding slot
         by a token — decoding slots never stall behind another request's
         prefill, and one compilation serves every mix.  Chunk rows start
-        at each slot's cache length, so shared-prefix admissions (prefill
-        resuming mid-prompt past the mapped span) reuse this same
-        compilation.  Returns per-slot logits at each slot's live row
+        at each slot's cache length, so shared-prefix admissions and
+        preemption resumes (prefill starting or resuming mid-prompt past
+        the mapped/restored span — see :meth:`prefill_chunk`) reuse this
+        same compilation.  Returns per-slot logits at each slot's live row
         (chunk row ``n_valid − 1`` or the decode row) ``[S, V]`` and the
         updated caches.
         """

@@ -42,6 +42,24 @@ Three modes, one API:
     streams are bit-identical to the unshared engine
     (``tests/test_prefix_sharing.py``).
 
+  - *preemption* (``preemption_mode="swap"|"recompute"``): when admission
+    or mid-flight block mapping (``_ensure``) can't get blocks even after
+    prefix-cache eviction, the engine **pauses** a victim instead of
+    stalling or failing: LRU-by-last-activity among running slots, never a
+    slot whose blocks are all shared (releasing those frees nothing).
+    ``swap`` round-trips the victim's pool rows + fp ring through a
+    host-side :class:`~repro.core.paged.SwapPool` (cheap — AsymKV blocks
+    are ``~bits/16`` of fp16) and resumes by re-mapping fresh blocks and
+    scattering the bytes back; ``recompute`` discards the cache and
+    resumes by chunked re-prefill of ``prompt + generated-so-far`` through
+    the ordinary prefill path (a prefix-cache hit can shortcut it).
+    Resumed streams are bit-identical to an unpressured run
+    (``tests/test_preemption.py``); ``_reserve_decode`` self-preempts a
+    slot that can't grow (instead of finishing it early at capacity) so
+    overload never truncates a stream while other slots can make room.
+    Resume has priority over fresh admissions, and fresh admissions never
+    preempt while a paused request is waiting — no preemption cascades.
+
 * **Alternating paged** (``fused=False``) — the PR-1 baseline: prefill-
   chunk steps and decode ticks alternate (decoding slots wait whenever any
   slot is mid-prompt).  Kept as the differential/benchmark baseline.
@@ -71,10 +89,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged import BlockAllocator, PagedKVCache, PrefixCache
+from repro.core.paged import (BlockAllocator, PagedKVCache, PrefixCache,
+                              SwapPool)
 from repro.models.transformer import Model
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "Preempted"]
 
 # Mapping key of the block mapping shared by every non-windowed stage
 # (windowed stages use their ``run{i}_stage{j}`` cache key instead).
@@ -95,6 +114,33 @@ class Request:
     t_done: float = 0.0
 
 
+@dataclasses.dataclass
+class Preempted:
+    """Host bookkeeping of one paused request (the device bytes, for swap
+    mode, live in the engine's :class:`SwapPool` keyed by ``request.rid``).
+
+    ``eff_prompt`` is the *effective* prompt the resumed slot prefills
+    from: for ``recompute`` it is the original prompt plus every token
+    generated so far (greedy decoding is deterministic, so re-prefilling
+    the concatenation reproduces the cache bit-for-bit and the next
+    sampled token continues the stream); for ``swap`` it just carries a
+    previous recompute-resume's prompt, if any.  ``indices`` records, per
+    block mapping, exactly which page-table rows were mapped at swap-out
+    (windowed mappings can have holes below their freeing frontier) —
+    resume re-maps fresh blocks at the same rows.
+    """
+    request: Request
+    mode: str                       # "swap" | "recompute"
+    eff_prompt: Optional[np.ndarray]
+    off: int = 0                    # prompt tokens consumed (swap)
+    next_tok: int = 0
+    commit_base: int = 0
+    reg_done: int = 0
+    length: int = 0
+    indices: dict = dataclasses.field(default_factory=dict)
+    min_block: dict = dataclasses.field(default_factory=dict)
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, *, slots: int,
                  max_tokens: int, prompt_len: Optional[int] = None,
@@ -104,7 +150,8 @@ class ServingEngine:
                  num_blocks: Optional[int] = None,
                  fused: Optional[bool] = None,
                  use_pallas: bool = False,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 preemption_mode: Optional[str] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -197,11 +244,38 @@ class ServingEngine:
             self._copy_fn = jax.jit(
                 lambda c, src, dst: c.copy_blocks(src, dst),
                 donate_argnums=(0,))
+            # swap-in mirrors the COW wrapper: donated, so resume scatters
+            # pool rows in place instead of copying every leaf (the same
+            # in-place constraint the tick donation note above covers)
+            self._swap_in_fn = jax.jit(
+                lambda c, data, blocks, slot:
+                    c.swap_in_blocks(data, blocks, slot),
+                donate_argnums=(0,))
+            # -- preemption / host swap -----------------------------------
+            if preemption_mode not in (None, "swap", "recompute"):
+                raise ValueError(
+                    f"preemption_mode {preemption_mode!r} not in "
+                    "(None, 'swap', 'recompute')")
+            self.preemption_mode = preemption_mode
+            self.swap = SwapPool()
+            self.preempted: deque[Preempted] = deque()
+            # effective prompt per slot: None = the request's own prompt;
+            # a recompute-resumed slot re-prefills prompt + generated
+            self._eff_prompt: list[Optional[np.ndarray]] = [None] * slots
+            self._last_active = np.zeros(slots, np.int64)  # LRU victim clock
+            self.preemptions = 0
+            self.swap_resumes = 0
+            self.recompute_resumes = 0
         else:
             if prefix_cache:
                 raise ValueError(
                     "prefix_cache requires the paged engine (block-level "
                     "sharing has no meaning in the static legacy path)")
+            if preemption_mode:
+                raise ValueError(
+                    "preemption_mode requires the paged engine (the static "
+                    "legacy path has no blocks to swap)")
+            self.preemption_mode = None
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
             self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
@@ -213,23 +287,49 @@ class ServingEngine:
         req.t_admit = time.time()
         self.queue.append(req)
 
+    def _reset_slot(self, i: int):
+        """Clears every per-slot host field so no state leaks between the
+        slot's occupants (called at admission, finish, preemption, and
+        recompute resume — swap resume overwrites with its record
+        instead).  ``_next_tok`` included: an empty prompt decodes from 0,
+        never from the previous occupant's last token."""
+        self._off[i] = 0
+        self._next_tok[i] = 0
+        self._commit_base[i] = 0
+        self._reg_done[i] = 0
+        self._eff_prompt[i] = None
+
+    def _finish_out_of_band(self, req: Request):
+        """Marks a request done outside the stepping path (admission
+        rejections, resume capacity-finishes); ``run`` hands it back with
+        the drain via ``self.rejected``."""
+        req.done = True
+        req.t_done = time.time()
+        self.rejected.append(req)
+
     def _admit(self):
         newly = []
+        if self.paged and self.preemption_mode:
+            self._resume_preempted()  # paused requests outrank the queue
         free = [i for i, r in enumerate(self.active) if r is None]
         while free and self.queue:
             req = self.queue[0]
             chain, F = [], 0
             if self.paged:
-                # Reject requests whose PROMPT can never fit the per-slot
-                # page table (crashing mid-run would abandon every other
-                # in-flight request); max_new_tokens overruns are fine —
-                # they finish at capacity instead.
+                # Reject requests whose PROMPT can never be served: wider
+                # than the per-slot page table, or needing more blocks
+                # than the whole pool HAS (sharing can't help — shared
+                # blocks are pool blocks too).  The pool check must happen
+                # up front: with preemption on, the wait-for-free path
+                # below would otherwise preempt victims for a request that
+                # can never fit and livelock the resume/preempt cycle.
+                # max_new_tokens overruns are fine — they finish at
+                # capacity instead.
                 need = self.alloc.blocks_for_len(len(req.prompt) + 2)
-                if need > self.alloc.max_blocks:
+                if need > self.alloc.max_blocks \
+                        or need > self.alloc.num_blocks:
                     self.queue.popleft()
-                    req.done = True
-                    req.t_done = time.time()
-                    self.rejected.append(req)
+                    self._finish_out_of_band(req)
                     continue
                 # Prefix-cache hit: fully shared blocks need no fresh
                 # allocation (the partial tail block COWs later, which the
@@ -239,25 +339,35 @@ class ServingEngine:
                 if need_new > self.alloc.free_blocks:
                     self._evict_prefixes(
                         need_new - self.alloc.free_blocks, protect=chain)
+                # Preemption: pause LRU victims to make room — as many as
+                # this admission needs in ONE pass (pausing one per tick
+                # would round-trip a victim's whole cache through host per
+                # tick while the admission makes no progress).  Never
+                # preempt while an earlier victim is still waiting to
+                # resume: a fresh admission must not cascade paused
+                # requests (checked before the first pause, so this pass's
+                # own victims don't stop it mid-way).
+                if (need_new > self.alloc.free_blocks
+                        and self.preemption_mode and not self.preempted):
+                    while (need_new > self.alloc.free_blocks
+                           and self._preempt_one()):
+                        pass
+                free = [i for i, r in enumerate(self.active) if r is None]
                 if need_new > self.alloc.free_blocks:
-                    if any(r is not None for r in self.active):
+                    if any(r is not None for r in self.active) or \
+                            (self.preemption_mode and self.preempted):
                         break  # blocks free up as in-flight requests end
                     # pool is as free as it will ever get — waiting can't
                     # help, reject instead of deadlocking the queue
                     self.queue.popleft()
-                    req.done = True
-                    req.t_done = time.time()
-                    self.rejected.append(req)
+                    self._finish_out_of_band(req)
                     continue
             i = free.pop(0)
             self.queue.popleft()
             self.active[i] = req
             if self.paged:
-                self._off[i] = 0
-                self._next_tok[i] = 0  # don't inherit the previous
-                # occupant's last token (empty prompts decode from 0)
-                self._commit_base[i] = 0
-                self._reg_done[i] = 0
+                self._reset_slot(i)
+                self._last_active[i] = self.ticks
                 if self.trie is not None:
                     self.prefix_lookups += 1
                     self._map_shared(i, chain, F)
@@ -441,13 +551,21 @@ class ServingEngine:
                 self._apply_cow(key, pairs)
 
     def _cow_one(self, alloc: BlockAllocator, i: int, bi: int):
+        """One COW remap, with the same exhausted-pool escalation as
+        ``_ensure``: evict cached prefixes, then (preemption on) pause a
+        victim — never slot ``i``, whose COW this is — before giving up.
+        Without the preemption rung a COW landing on a drained pool would
+        crash the whole drain."""
         while True:
             try:
                 pair = alloc.cow(i, bi)
                 break
             except RuntimeError:
-                if not self._evict_some():
-                    raise
+                if self._evict_some():
+                    continue
+                if self.preemption_mode and self._preempt_one(exclude=(i,)):
+                    continue
+                raise
         self.cow_copies += 1
         return pair
 
@@ -480,14 +598,224 @@ class ServingEngine:
             "blocks_allocated": self.alloc.allocated_total,
         }
 
+    # ------------------------------------------- preemption / host swapping
+
+    def _prompt_of(self, i: int) -> np.ndarray:
+        """Effective prompt of slot ``i``: the request's own prompt, or —
+        for a recompute-resumed slot — prompt + everything generated before
+        the preemption (re-prefilling the concatenation rebuilds the cache
+        bit-for-bit, and the chunk row at its last token produces exactly
+        the logits the next decode row would have)."""
+        p = self._eff_prompt[i]
+        return p if p is not None else self.active[i].prompt
+
+    def _pick_victim(self, exclude=()) -> Optional[int]:
+        """LRU-by-last-activity victim among running slots.  A slot whose
+        blocks are all shared (refcount > 1 in every mapping — held by the
+        trie or other slots) is never picked: releasing it frees nothing
+        now, so pausing it would cost a resume without relieving any
+        pressure."""
+        cands = []
+        for i, r in enumerate(self.active):
+            if r is None or i in exclude:
+                continue
+            if any(alloc.ref(int(b)) == 1
+                   for _, alloc in self._mappings()
+                   for b in alloc.page_table[i] if b > 0):
+                cands.append(i)
+        if not cands:
+            return None
+        return min(cands, key=lambda i: int(self._last_active[i]))
+
+    def _preempt_one(self, exclude=()) -> bool:
+        """Pauses one victim (policy above); False when no slot qualifies."""
+        victim = self._pick_victim(exclude)
+        if victim is None:
+            return False
+        self._preempt_slot(victim)
+        return True
+
+    def _preempt_slot(self, i: int):
+        """Pauses slot ``i``: snapshots its host state (and, in swap mode,
+        its pool rows + fp ring into the :class:`SwapPool`), releases its
+        blocks in every mapping (refcount-aware — a shared block just
+        drops this holder), and parks a :class:`Preempted` record for
+        ``_resume_preempted``.  The resumed stream is bit-identical to an
+        uninterrupted one: swap restores the exact bytes; recompute
+        re-derives them deterministically from the tokens."""
+        r = self.active[i]
+        mode = self.preemption_mode
+        indices = {key: [int(j) for j in np.nonzero(alloc.page_table[i])[0]]
+                   for key, alloc in self._mappings()}
+        if mode == "recompute":
+            eff = (np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(r.output, np.int32)])
+                   if r.output else None)
+        else:
+            eff = self._eff_prompt[i]
+            payload = {}
+            for key, c in self.caches.items():
+                if not isinstance(c, PagedKVCache):
+                    continue
+                mk = key if key in self.wallocs else GLOBAL_MAPPING
+                alloc = self.wallocs[mk] if mk in self.wallocs else self.alloc
+                blks = [int(alloc.page_table[i, j]) for j in indices[mk]]
+                payload[key] = c.swap_out_blocks(blks, slot=i)
+            self.swap.put(r.rid, payload)
+        rec = Preempted(
+            request=r, mode=mode, eff_prompt=eff,
+            off=int(self._off[i]), next_tok=int(self._next_tok[i]),
+            commit_base=int(self._commit_base[i]),
+            reg_done=int(self._reg_done[i]),
+            length=int(self.alloc.lengths[i]),
+            indices=indices,
+            min_block={key: int(alloc._min_block[i])
+                       for key, alloc in self._mappings()})
+        for _, alloc in self._mappings():
+            alloc.release(i)
+        self.active[i] = None
+        self._reset_slot(i)
+        self.preempted.append(rec)
+        self.preemptions += 1
+
+    def _resume_preempted(self):
+        """Resumes paused requests FIFO (head-of-line — deterministic and
+        starvation-free) into free slots while blocks allow.  Swap resume
+        re-maps fresh blocks at the recorded page-table rows and scatters
+        the parked bytes back; recompute resume walks the ordinary
+        admission path over the effective prompt (a prefix-cache hit
+        shortcuts the re-prefill).  A resume that cannot fit waits for
+        running requests to finish; once nothing is running the pool is
+        as free as it will ever get, so a recompute record whose grown
+        context outgrew the whole pool finishes with what it generated
+        (the legacy capacity-finish degradation) rather than hanging or
+        crashing the drain — a swap record always fits by then (it held
+        its blocks simultaneously before; trie pins evict first)."""
+        while self.preempted:
+            free = [i for i, r in enumerate(self.active) if r is None]
+            if not free:
+                return
+            rec = self.preempted[0]
+            r = rec.request
+            eff = rec.eff_prompt if rec.eff_prompt is not None else r.prompt
+
+            def _running():
+                return any(x is not None for x in self.active)
+
+            if rec.mode == "swap":
+                # Decode-phase records want one spare block beyond their
+                # mapping: a slot that was paused BECAUSE decode growth
+                # couldn't map a block would otherwise resume into the
+                # same wall and immediately round-trip its whole cache
+                # again.  With nothing else running the spare is waived —
+                # a growth failure then degrades to capacity-finish.
+                spare = 1 if rec.off >= len(eff) else 0
+
+                def can(extra):
+                    return all(len(rec.indices.get(key, ())) + extra
+                               <= alloc.free_blocks
+                               for key, alloc in self._mappings())
+                while not can(spare) and self._evict_some():
+                    pass
+                if not can(spare):
+                    if _running():
+                        return
+                    if not can(0):
+                        raise RuntimeError(
+                            f"cannot swap request {r.rid} back in: pool "
+                            "too small for its "
+                            f"{len(rec.indices[GLOBAL_MAPPING])} blocks "
+                            "even with nothing running")
+                self.preempted.popleft()
+                i = free[0]
+                payload = self.swap.pop(r.rid)
+                new_ids = {key: alloc.restore(
+                               i, rec.indices.get(key, ()), rec.length,
+                               min_block=rec.min_block.get(key, 0))
+                           for key, alloc in self._mappings()}
+                # pad every mapping's rows to the page-table width so one
+                # compiled swap-in shape serves any swap size (pad rows
+                # scatter into scratch block 0, a masked-write target)
+                W = self.alloc.max_blocks
+                for sk in self.caches:
+                    if sk not in payload:
+                        continue
+                    mk = sk if sk in self.wallocs else GLOBAL_MAPPING
+                    ids = np.zeros(W, np.int32)
+                    ids[:len(new_ids[mk])] = new_ids[mk]
+                    data = {}
+                    for name, arr in payload[sk].items():
+                        if name not in ("resid_k", "resid_v"):
+                            ax = arr.ndim - 4
+                            if arr.shape[ax] < W:
+                                widths = [(0, 0)] * arr.ndim
+                                widths[ax] = (0, W - arr.shape[ax])
+                                arr = np.pad(arr, widths)
+                        data[name] = jnp.asarray(arr)
+                    self.caches[sk] = self._swap_in_fn(
+                        self.caches[sk], data, jnp.asarray(ids),
+                        jnp.asarray(i, jnp.int32))
+                self.active[i] = r
+                self._eff_prompt[i] = rec.eff_prompt
+                self._off[i] = rec.off
+                self._next_tok[i] = rec.next_tok
+                self._commit_base[i] = rec.commit_base
+                self._reg_done[i] = rec.reg_done
+                self.swap_resumes += 1
+            else:
+                chain, F = self._match_prefix(eff)
+                need = self.alloc.blocks_for_len(len(eff) + 2)
+                need_new = max(0, need - F // self.block_tokens)
+                if need_new > self.alloc.free_blocks:
+                    self._evict_prefixes(
+                        need_new - self.alloc.free_blocks, protect=chain)
+                if need_new > self.alloc.free_blocks:
+                    if _running():
+                        return
+                    # The pool is as free as it will ever get and still
+                    # can't hold this request's grown context (prompt +
+                    # generated): finish it with what it has — the same
+                    # capacity-finish degradation the non-preemptive path
+                    # uses — instead of crashing the whole drain.
+                    self.preempted.popleft()
+                    self._finish_out_of_band(r)
+                    continue
+                self.preempted.popleft()
+                i = free[0]
+                self.active[i] = r
+                self._reset_slot(i)
+                self._eff_prompt[i] = rec.eff_prompt
+                if self.trie is not None:
+                    self.prefix_lookups += 1
+                    self._map_shared(i, chain, F)
+                self._ensure(i, len(eff) + 2)
+                self.recompute_resumes += 1
+            self._last_active[i] = self.ticks
+
+    def preempt_stats(self) -> dict:
+        """Preemption/swap counters (the overload benchmark reads these)."""
+        if not (self.paged and self.preemption_mode):
+            return {"mode": None, "preemptions": 0}
+        return {
+            "mode": self.preemption_mode,
+            "preemptions": self.preemptions,
+            "swap_resumes": self.swap_resumes,
+            "recompute_resumes": self.recompute_resumes,
+            "waiting": len(self.preempted),
+            "swap_out_bytes": self.swap.bytes_out,
+            "swap_in_bytes": self.swap.bytes_in,
+            "swap_peak_resident_bytes": self.swap.peak_resident_bytes,
+        }
+
     # ------------------------------------------------------ paged plumbing
 
     def _ensure(self, i: int, new_len: int):
         """Maps blocks up to ``new_len`` in every block mapping (global +
         per-windowed-stage; a windowed mapping can never exhaust before the
         global one — it only ever frees extra).  An exhausted pool evicts
-        cached prefixes one LRU batch at a time before giving up — the
-        warm trie survives transient pressure (retry is idempotent —
+        cached prefixes one LRU batch at a time, then — with preemption on
+        — pauses LRU victims (never slot ``i`` itself), before giving up;
+        the warm trie survives transient pressure (retry is idempotent —
         already-mapped rows are skipped)."""
         while True:
             try:
@@ -496,14 +824,18 @@ class ServingEngine:
                     w.ensure(i, new_len)
                 return
             except RuntimeError:
-                if not self._evict_some():
-                    raise
+                if self._evict_some():
+                    continue
+                if self.preemption_mode and self._preempt_one(exclude=(i,)):
+                    continue
+                raise
 
     def _advance(self, i: int, n_tokens: int):
         """Advances a slot's length everywhere; newly completed prompt
         blocks are published to the prefix trie *before* windowed stages
         release blocks that fell wholly below their window."""
         self.alloc.advance(i, n_tokens)
+        self._last_active[i] = self.ticks
         length = int(self.alloc.lengths[i])
         if self.trie is not None and self.active[i] is not None:
             self._register_prefix(i, length)
@@ -541,9 +873,7 @@ class ServingEngine:
         self.alloc.release(i)
         for w in self.wallocs.values():
             w.release(i)
-        self._off[i] = 0
-        self._commit_base[i] = 0
-        self._reg_done[i] = 0
+        self._reset_slot(i)
 
     def jit_stats(self) -> dict:
         """Compilation counts of the step functions — the serving test
@@ -561,31 +891,44 @@ class ServingEngine:
 
     def _prefilling(self) -> list[int]:
         return [i for i, r in enumerate(self.active)
-                if r is not None and self._off[i] < len(r.prompt)]
+                if r is not None and self._off[i] < len(self._prompt_of(i))]
 
     def _decoding(self) -> list[int]:
         return [i for i, r in enumerate(self.active)
-                if r is not None and self._off[i] >= len(r.prompt)]
+                if r is not None and self._off[i] >= len(self._prompt_of(i))]
 
     def _reserve_decode(self) -> tuple[list[int], list[Request]]:
-        """Maps the next block for every decode-ready slot; slots that hit
-        an exhausted pool finish at capacity (no preemption yet — ROADMAP)
-        so the drain keeps going."""
+        """Maps the next block for every decode-ready slot.  A slot that
+        hits an exhausted pool (after prefix eviction and victim
+        preemption inside ``_ensure``) is **self-preempted** when
+        preemption is on and anything else is running — it resumes intact
+        once pressure clears, so overload never truncates its stream.
+        With preemption off (or nothing else running that could ever free
+        a block) it finishes at capacity, as before."""
         ready, done = [], []
         for i in self._decoding():
+            if self.active[i] is None:
+                continue  # paused by an earlier slot's _ensure this pass
             try:
                 self._ensure(i, int(self.alloc.lengths[i]) + 2)
                 ready.append(i)
             except RuntimeError:
-                r = self.active[i]
-                self._finish(i, time.time())
-                done.append(r)
-        return ready, done
+                if self.preemption_mode and any(
+                        r is not None for j, r in enumerate(self.active)
+                        if j != i):
+                    self._preempt_slot(i)
+                else:
+                    r = self.active[i]
+                    self._finish(i, time.time())
+                    done.append(r)
+        return [i for i in ready if self.active[i] is not None], done
 
     def _postprocess_decode(self, idxs: list[int], nxt: np.ndarray,
                             now: float) -> list[Request]:
         done: list[Request] = []
         for i in idxs:
+            if self.active[i] is None:
+                continue  # paused mid-tick; its step row was masked out
             self._advance(i, 1)
             r = self.active[i]
             tok = int(nxt[i])
@@ -602,20 +945,29 @@ class ServingEngine:
 
     def _postprocess_chunk(self, nv: np.ndarray, nxt: np.ndarray,
                            now: float) -> list[Request]:
-        """Advances prefill offsets; slots completing their prompt get
-        their first token (and finish right away if max_new_tokens == 1)."""
+        """Advances prefill offsets; slots completing their prompt get a
+        generated token — subject to the SAME finish conditions as a
+        decode-row token (EOS, token budget, capacity).  That parity is
+        load-bearing for preemption: a recompute resume emits its next
+        mid-stream token from a chunk row where the unpressured run used a
+        decode row, and an EOS landing exactly there must truncate both
+        runs identically."""
         done: list[Request] = []
         for i in range(self.slots):
-            if nv[i] == 0:
+            if nv[i] == 0 or self.active[i] is None:
                 continue
             self._off[i] += int(nv[i])
             self._advance(i, int(nv[i]))
             r = self.active[i]
-            if self._off[i] >= len(r.prompt):  # prefill complete
-                r.t_first = now
-                r.output.append(int(nxt[i]))
-                self._next_tok[i] = nxt[i]
-                if len(r.output) >= r.max_new_tokens:
+            if self._off[i] >= len(self._prompt_of(i)):  # prefill complete
+                if not r.output:  # a recompute re-prefill keeps its TTFT
+                    r.t_first = now
+                tok = int(nxt[i])
+                r.output.append(tok)
+                self._next_tok[i] = tok
+                if (r.eos is not None and tok == r.eos) or \
+                        len(r.output) >= r.max_new_tokens or \
+                        int(self.alloc.lengths[i]) >= self.max_tokens - 1:
                     self._finish(i, now)
                     done.append(r)
         return done
@@ -628,17 +980,29 @@ class ServingEngine:
         toks = np.zeros((self.slots, C), np.int32)
         nv = np.zeros(self.slots, np.int32)
         for i in self._prefilling():
-            r = self.active[i]
-            part = r.prompt[self._off[i]:self._off[i] + C]
+            part = self._prompt_of(i)[self._off[i]:self._off[i] + C]
             toks[i, :len(part)] = part
             nv[i] = len(part)
             self._ensure(i, int(self.alloc.lengths[i]) + len(part))
         dec, done = self._reserve_decode()
-        dec_act = np.zeros(self.slots, bool)
-        dec_act[dec] = True
+        # an _ensure above may have preempted a slot that already staged a
+        # chunk this tick — drop its rows before the step sees them
+        for i in range(self.slots):
+            if nv[i] and self.active[i] is None:
+                nv[i] = 0
+                toks[i] = 0
         planned = {i: int(nv[i]) for i in range(self.slots) if nv[i]}
         planned.update({i: 1 for i in dec})
         self._cow_pass(planned)
+        # ...and again: a COW hitting a drained pool may itself have had
+        # to pause a victim whose rows were staged above
+        for i in range(self.slots):
+            if nv[i] and self.active[i] is None:
+                nv[i] = 0
+                toks[i] = 0
+        dec = [i for i in dec if self.active[i] is not None]
+        dec_act = np.zeros(self.slots, bool)
+        dec_act[dec] = True
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._serve(
@@ -659,12 +1023,19 @@ class ServingEngine:
         toks = np.zeros((self.slots, C), np.int32)
         nv = np.zeros(self.slots, np.int32)
         for i in self._prefilling():
-            r = self.active[i]
-            part = r.prompt[self._off[i]:self._off[i] + C]
+            part = self._prompt_of(i)[self._off[i]:self._off[i] + C]
             toks[i, :len(part)] = part
             nv[i] = len(part)
             self._ensure(i, int(self.alloc.lengths[i]) + len(part))
+        for i in range(self.slots):  # drop rows of a slot paused mid-pass
+            if nv[i] and self.active[i] is None:
+                nv[i] = 0
+                toks[i] = 0
         self._cow_pass({i: int(nv[i]) for i in range(self.slots) if nv[i]})
+        for i in range(self.slots):  # ...or paused by the COW pass itself
+            if nv[i] and self.active[i] is None:
+                nv[i] = 0
+                toks[i] = 0
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._chunk_fn(
@@ -679,9 +1050,10 @@ class ServingEngine:
         dec, done = self._reserve_decode()
         if not dec:
             return done
+        self._cow_pass({i: 1 for i in dec})
+        dec = [i for i in dec if self.active[i] is not None]
         active = np.zeros(self.slots, bool)
         active[dec] = True
-        self._cow_pass({i: 1 for i in dec})
         self._sync_caches()
         pos = jnp.asarray(self.alloc.lengths, jnp.int32)
         t0 = time.perf_counter()
@@ -700,7 +1072,8 @@ class ServingEngine:
         ``decode_step``."""
         finished: list[Request] = []
         start_ticks = self.ticks
-        while self.queue or any(r is not None for r in self.active):
+        while (self.queue or self.preempted
+               or any(r is not None for r in self.active)):
             self._admit()
             if self._prefilling():
                 finished.extend(self._step_serve())
@@ -717,7 +1090,8 @@ class ServingEngine:
         slots stall whenever any slot is mid-prompt."""
         finished: list[Request] = []
         start_ticks = self.ticks
-        while self.queue or any(r is not None for r in self.active):
+        while (self.queue or self.preempted
+               or any(r is not None for r in self.active)):
             self._admit()
             while self._prefilling():
                 finished.extend(self._step_prefill_chunk())
@@ -805,6 +1179,11 @@ class ServingEngine:
             return {}
         ttft = [r.t_first - r.t_admit for r in reqs if r.t_first]
         lat = [r.t_done - r.t_admit for r in reqs if r.t_done]
+        # time-per-output-token: decode cadence after the first token —
+        # the metric preemption stalls show up in (TTFT only sees prefill)
+        tpot = [(r.t_done - r.t_first) / (len(r.output) - 1)
+                for r in reqs if r.t_done and r.t_first
+                and len(r.output) > 1]
         toks = sum(len(r.output) for r in reqs)
         span = max(r.t_done for r in reqs) - min(r.t_admit for r in reqs)
         return {
@@ -812,5 +1191,8 @@ class ServingEngine:
             "tokens": toks,
             "throughput_tok_s": toks / max(span, 1e-9),
             "ttft_p50_s": float(np.median(ttft)) if ttft else None,
+            "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else None,
+            "tpot_p50_s": float(np.median(tpot)) if tpot else None,
+            "tpot_p99_s": float(np.percentile(tpot, 99)) if tpot else None,
             "latency_p50_s": float(np.median(lat)) if lat else None,
         }

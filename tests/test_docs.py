@@ -1,0 +1,40 @@
+"""Docs integrity: every intra-repo markdown link in README.md and
+docs/*.md must point at a file that exists (CI's ``docs-check`` job runs
+this, so moved/renamed files can't silently rot the docs).
+
+External links (http/https/mailto) and pure in-page anchors are skipped;
+``path#anchor`` links are checked for the file part only.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+# [text](target) — excluding images' srcsets etc.; good enough for our docs
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _intra_repo_links(md: Path):
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+@pytest.mark.parametrize("md", DOCS, ids=[str(p.relative_to(ROOT))
+                                          for p in DOCS])
+def test_intra_repo_markdown_links_resolve(md):
+    missing = [t for t in _intra_repo_links(md)
+               if not (md.parent / t).exists()]
+    assert not missing, (
+        f"{md.relative_to(ROOT)} links to missing files: {missing}")
+
+
+def test_docs_exist():
+    for p in (ROOT / "README.md", ROOT / "docs" / "architecture.md",
+              ROOT / "docs" / "serving.md"):
+        assert p.exists(), p

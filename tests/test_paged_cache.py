@@ -19,7 +19,7 @@ from repro.core.attention_quant import (decode_attend_dense,
                                         paged_chunk_attend,
                                         paged_decode_attend)
 from repro.core.kvcache import LayerKVCache
-from repro.core.paged import BlockAllocator, PagedKVCache
+from repro.core.paged import BlockAllocator, PagedKVCache, SwapPool
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -534,6 +534,130 @@ def test_copy_blocks_pool_rows_bit_exact():
     other = alloc.blocks_of(1)[0]
     np.testing.assert_array_equal(np.asarray(out.k_codes[other]),
                                   np.asarray(cache.k_codes[other]))
+
+
+def test_swap_roundtrip_bit_exact():
+    """swap_out_blocks → (blocks freed + reused by another request) →
+    swap_in_blocks into FRESH pool rows restores byte-identical committed
+    stores + fp ring, and the resumed slot's reads match the oracle — the
+    cache-level core of swap preemption."""
+    rng = np.random.default_rng(41)
+    kb, vb, group, residual, BT = 2, 1, 16, 16, 16
+    S, H, D, T = 2, 2, 32, 128
+    L = 80
+    cache, alloc = _mk_paged(S, H, D, T, BT=BT, kb=kb, vb=vb,
+                             group=group, residual=residual, blocks=8)
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache = _append_all(cache, alloc, k, v, [L, 40])
+
+    # swap slot 0 out: gather its pool rows + ring, then free its blocks
+    indices = [int(j) for j in np.nonzero(alloc.page_table[0])[0]]
+    old_ids = [int(alloc.page_table[0, j]) for j in indices]
+    payload = cache.swap_out_blocks(old_ids, slot=0)
+    assert set(payload) >= {"k_codes", "k_scale", "v_codes", "resid_k"}
+    alloc.release(0)
+    lens = np.asarray(cache.lengths).copy()
+    lens[0] = 0
+    cache = cache.with_pages(alloc.page_table, lens)
+
+    # another request churns through the freed rows (stale-data hazard)
+    k2 = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v2 = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    cache = _append_all(cache, alloc, k2, v2, [64, 0])
+    alloc.release(0)
+    lens = np.asarray(cache.lengths).copy()
+    lens[0] = 0
+    cache = cache.with_pages(alloc.page_table, lens)
+
+    # swap back in at fresh rows (ids may differ; data must not)
+    new_ids = alloc.restore(0, indices, L)
+    cache = cache.swap_in_blocks(payload, new_ids, slot=0)
+    lens = np.asarray(cache.lengths).copy()
+    lens[0] = L
+    cache = cache.with_pages(alloc.page_table, lens)
+
+    for o, nw in zip(old_ids, new_ids):
+        np.testing.assert_array_equal(np.asarray(cache.k_codes[nw]),
+                                      payload["k_codes"][old_ids.index(o)])
+    oracle = _oracle(k[0:1], v[0:1], L, T=T, kb=kb, vb=vb,
+                     group=group, residual=residual)
+    q = jnp.asarray(rng.normal(size=(S, 4, 1, D)).astype(np.float32))
+    out = np.asarray(paged_decode_attend(q, cache), np.float32)
+    ref = np.asarray(decode_attend_dense(q[0:1], oracle), np.float32)
+    np.testing.assert_allclose(out[0:1], ref, atol=ATOL)
+
+
+def test_swap_roundtrip_stacked_layer_axis():
+    """The engine's layer-stacked leaves ([L, N, ...]) round-trip through
+    the same swap methods (block/slot axis = ndim − 4)."""
+    rng = np.random.default_rng(43)
+    cache, alloc = _mk_paged(2, 2, 32, 128, BT=16, kb=2, vb=1,
+                             group=16, residual=16)
+    k = jnp.asarray(rng.normal(size=(2, 2, 64, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 2, 64, 32)).astype(np.float32))
+    cache = _append_all(cache, alloc, k, v, [48, 0])
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), cache)
+    blks = alloc.blocks_of(0)
+    payload = stacked.swap_out_blocks(blks, slot=0)
+    assert payload["k_codes"].shape[:2] == (2, len(blks))
+    zeroed = jax.tree.map(jnp.zeros_like, stacked)
+    back = zeroed.swap_in_blocks(payload, blks, slot=0)
+    for b in blks:
+        np.testing.assert_array_equal(np.asarray(back.k_codes[:, b]),
+                                      np.asarray(stacked.k_codes[:, b]))
+    np.testing.assert_array_equal(np.asarray(back.resid_k[:, 0]),
+                                  np.asarray(stacked.resid_k[:, 0]))
+
+
+def test_swap_pool_accounting():
+    """SwapPool byte accounting: cumulative out/in, resident high-water,
+    one record per request id."""
+    pool = SwapPool()
+    a = {"stage": {"k_codes": np.zeros((4, 8), np.uint8),
+                   "resid_k": np.zeros((2, 2), np.float32)}}
+    n = pool.put(7, a)
+    assert n == 32 + 16
+    assert len(pool) == 1 and 7 in pool
+    assert pool.bytes_out == n and pool.resident_bytes == n
+    with pytest.raises(ValueError):
+        pool.put(7, a)  # double swap-out of one rid is a bug
+    pool.put(8, {"stage": {"x": np.zeros(4, np.uint8)}})
+    assert pool.peak_resident_bytes == n + 4
+    got = pool.pop(7)
+    assert got is a  # the exact payload object comes back
+    assert pool.bytes_in == n and pool.resident_bytes == 4
+    assert 7 not in pool
+    with pytest.raises(KeyError):
+        pool.pop(7)
+
+
+def test_allocator_restore_after_release():
+    """restore() re-maps fresh refcount-1 blocks at the recorded indices
+    (holes preserved), restores lengths + the freeing frontier, and
+    refuses both an over-subscribed pool and a non-empty slot."""
+    alloc = BlockAllocator(2, num_blocks=6, max_blocks=8, block_tokens=16,
+                           residual=16, group=16)
+    alloc.ensure(0, 100)                      # commit 80 → 5 blocks
+    alloc.advance(0, 100)
+    alloc.free_below(0, 40)                   # windowed hole: rows 0, 1
+    indices = [int(j) for j in np.nonzero(alloc.page_table[0])[0]]
+    assert indices == [2, 3, 4]
+    alloc.release(0)
+    assert alloc.free_blocks == 6
+
+    alloc.ensure(1, 60)                       # soak 3 blocks elsewhere
+    new_ids = alloc.restore(0, indices, 100, min_block=2)
+    assert [int(j) for j in np.nonzero(alloc.page_table[0])[0]] == indices
+    assert all(alloc.ref(b) == 1 for b in new_ids)
+    assert int(alloc.lengths[0]) == 100
+    alloc.ensure(0, 100)                      # frontier: rows 0,1 stay holes
+    assert list(alloc.page_table[0][:2]) == [0, 0]
+    with pytest.raises(ValueError):
+        alloc.restore(0, [5], 10)             # non-empty slot
+    alloc.release(0)
+    with pytest.raises(RuntimeError):
+        alloc.restore(0, list(range(7)), 10)  # pool too small
 
 
 def test_commit_base_floor_matches_unshared_schedule():

@@ -1,0 +1,271 @@
+"""Preemption + host block-swap under memory pressure: differential suite.
+
+The load-bearing property (mirrors the prefix-sharing and fused-vs-
+alternating suites): an engine whose block pool is too small for its
+working set pauses and resumes requests — swap mode round-trips pool rows
++ fp ring through the host SwapPool, recompute mode re-prefills prompt +
+generated tokens — and every decoded stream is **bit-identical** to the
+unpressured engine's.  Covered here:
+
+* identical streams under pressure for both preemption modes, with ≥ 1
+  preemption actually firing, on plain, windowed (L-stage), and
+  shared-prefix (prefix-cache victim) engines;
+* full pool/slot/SwapPool reclaim once the overloaded trace drains;
+* swap-bytes accounting round-trips exactly (bytes out == bytes in);
+* victim policy: slots whose blocks are all shared are never preempted;
+* the legacy static engine rejects the knob.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_model(arch="llama2-7b", seed=0):
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, high_bits=2,
+                       low_bits=1, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _mk_model()
+
+
+def _drive(model, params, reqs, *, num_blocks=None, mode=None,
+           prefix=False, slots=2, max_tokens=128, block_tokens=8):
+    eng = ServingEngine(model, params, slots=slots, max_tokens=max_tokens,
+                        dtype=jnp.float32, block_tokens=block_tokens,
+                        num_blocks=num_blocks, prefix_cache=prefix,
+                        preemption_mode=mode)
+    for rid, prompt, max_new in reqs:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    done = eng.run()
+    return eng, {r.rid: r.output for r in done}
+
+
+def _mixed_reqs(cfg, lengths, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rid, rng.integers(0, cfg.vocab, L, dtype=np.int32), n)
+            for rid, (L, n) in enumerate(zip(lengths, max_new))]
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_overloaded_streams_identical(small_model, mode):
+    """A pool at ~60% of the working set forces ≥ 1 preemption; every
+    stream matches the unpressured engine token for token, every request
+    completes, and the pool/SwapPool fully reclaim at drain end."""
+    cfg, model, params = small_model
+    reqs = _mixed_reqs(cfg, [48, 40, 56, 48], [12, 10, 8, 12], seed=1)
+    _, base = _drive(model, params, reqs)
+    eng, got = _drive(model, params, reqs, num_blocks=9, mode=mode)
+    assert got == base, mode
+    assert len(got) == len(reqs)
+    assert eng.preemptions >= 1
+    st = eng.preempt_stats()
+    assert st["mode"] == mode and st["waiting"] == 0
+    if mode == "swap":
+        assert st["swap_resumes"] >= 1
+        assert st["swap_out_bytes"] > 0
+        assert st["swap_out_bytes"] == st["swap_in_bytes"]
+        assert len(eng.swap) == 0
+    else:
+        assert st["recompute_resumes"] >= 1
+        assert st["swap_out_bytes"] == 0
+    # everything reclaimed: slots, deque, every mapping's pool
+    assert all(r is None for r in eng.active) and not eng.preempted
+    for alloc in [eng.alloc, *eng.wallocs.values()]:
+        assert alloc.free_blocks == alloc.num_blocks
+        assert (alloc.page_table == 0).all()
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_windowed_victim_streams_identical(mode):
+    """Gemma-style local (L) stages: a victim's windowed mappings have
+    holes below the freeing frontier; swap-out records them per mapping
+    and resume restores frontier + holes — streams stay identical."""
+    cfg, model, params = _mk_model(arch="gemma3-1b", seed=2)
+    assert cfg.window == 16
+    reqs = _mixed_reqs(cfg, [48, 40, 56], [10, 10, 8], seed=17)
+    _, base = _drive(model, params, reqs)
+    eng, got = _drive(model, params, reqs, num_blocks=9, mode=mode)
+    assert got == base, mode
+    assert eng.preemptions >= 1
+    assert eng.wallocs, "gemma should have windowed block mappings"
+    for alloc in [eng.alloc, *eng.wallocs.values()]:
+        assert alloc.free_blocks == alloc.num_blocks
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_shared_prefix_victim_streams_identical(small_model, mode):
+    """Preemption composes with the prefix cache: victims holding shared
+    (trie-pinned) blocks release only their own references, eviction runs
+    before preemption, and the streams still match the plain engine."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    system = rng.integers(0, cfg.vocab, 32, dtype=np.int32)
+    reqs = [(rid, np.concatenate(
+                [system, rng.integers(0, cfg.vocab, 16, dtype=np.int32)]),
+             10) for rid in range(4)]
+    _, base = _drive(model, params, reqs)
+    eng, got = _drive(model, params, reqs, num_blocks=10, mode=mode,
+                      prefix=True)
+    assert got == base, mode
+    assert eng.preemptions >= 1
+    assert eng.prefix_stats()["hits"] >= 1
+    assert all(r is None for r in eng.active) and not eng.preempted
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_eos_truncation_identical_under_pressure(small_model, mode):
+    """An EOS token truncates identically whether it is emitted from a
+    decode row (unpressured run) or from the chunk row a recompute resume
+    completes on — the chunk-row finish checks mirror the decode row's."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(0, cfg.vocab, L, dtype=np.int32)
+               for L in (48, 40, 56)]
+    # probe: what does request 0 emit freely?
+    eng = ServingEngine(model, params, slots=1, max_tokens=128,
+                        dtype=jnp.float32, block_tokens=8)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12))
+    (probe,) = eng.run()
+
+    # chunk-row EOS is honored even with no pressure: a request whose
+    # FIRST generated token is its EOS stops at one token
+    eng = ServingEngine(model, params, slots=1, max_tokens=128,
+                        dtype=jnp.float32, block_tokens=8)
+    eng.submit(Request(rid=9, prompt=prompts[0], max_new_tokens=12,
+                       eos=probe.output[0]))
+    (first,) = eng.run()
+    assert first.output == probe.output[:1]
+
+    def drive(num_blocks=None, pmode=None):
+        e = ServingEngine(model, params, slots=2, max_tokens=128,
+                          dtype=jnp.float32, block_tokens=8,
+                          num_blocks=num_blocks, preemption_mode=pmode)
+        e.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12,
+                         eos=probe.output[5]))
+        for rid in (1, 2):
+            e.submit(Request(rid=rid, prompt=prompts[rid],
+                             max_new_tokens=10))
+        return e, {r.rid: r.output for r in e.run()}
+
+    _, base = drive()
+    eng_o, got = drive(num_blocks=9, pmode=mode)
+    assert got == base, mode
+    assert eng_o.preemptions >= 1
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_pool_smaller_than_one_request_degrades_gracefully(small_model,
+                                                           mode):
+    """A pool that cannot hold even ONE request's full grown context can
+    never preserve that stream — but it must degrade exactly like the
+    non-preemptive path (the request finishes truncated at capacity),
+    never crash or hang the drain, and every other request's stream stays
+    bit-identical."""
+    cfg, model, params = small_model
+    # rid 0 grows to 56 + 24 tokens → 10 blocks; the pool has 8
+    reqs = _mixed_reqs(cfg, [56, 24, 24], [24, 6, 6], seed=31)
+    _, base = _drive(model, params, reqs)
+    eng, got = _drive(model, params, reqs, num_blocks=8, mode=mode)
+    assert len(got) == len(reqs)
+    assert got[1] == base[1] and got[2] == base[2]
+    assert 1 <= len(got[0]) <= len(base[0])
+    assert all(r is None for r in eng.active) and not eng.preempted
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_prompt_larger_than_pool_rejected_not_livelocked(small_model, mode):
+    """A queued PROMPT needing more blocks than the whole pool has can
+    never be admitted; it must be rejected up front — with preemption on,
+    waiting for it would otherwise preempt victims forever (resume ↔
+    re-preempt ping-pong with no tick progress)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(37)
+    # 120-token prompt → 14 blocks; pool has 10 (page table fits 16)
+    reqs = [(0, rng.integers(0, cfg.vocab, 24, dtype=np.int32), 6),
+            (1, rng.integers(0, cfg.vocab, 120, dtype=np.int32), 6)]
+    eng, got = _drive(model, params, reqs, num_blocks=10, mode=mode,
+                      slots=2, max_tokens=256)
+    assert len(got) == 2
+    assert len(got[0]) == 6          # the servable request completes
+    assert got[1] == []              # the impossible one is rejected
+    assert all(r is None for r in eng.active) and not eng.preempted
+
+
+def test_victim_policy_skips_all_shared_slots(small_model):
+    """A slot whose blocks are all shared is never picked: preempting it
+    frees nothing (its blocks' other holders survive)."""
+    cfg, model, params = small_model
+    eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                        dtype=jnp.float32, block_tokens=8,
+                        prefix_cache=True, preemption_mode="swap")
+    # run one donor so the trie holds its prompt blocks
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, 40, dtype=np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    eng.run()
+    # a consumer mapping ONLY shared blocks is not a candidate
+    eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=8))
+    eng.run(max_ticks=1)
+    (i,) = [j for j, r in enumerate(eng.active) if r is not None]
+    blocks = eng.alloc.blocks_of(i)
+    if all(eng.alloc.ref(b) > 1 for b in blocks):
+        assert eng._pick_victim() is None
+    # once it owns any private block it becomes preemptible
+    eng.run()
+    assert eng.preemptions == 0  # no pressure in this test
+
+
+def test_preemption_requires_paged_engine():
+    """The legacy static path has no blocks to swap."""
+    cfg = reduced(get_config("mamba2-370m"))
+    model = Model(cfg)
+    assert not model.supports_paged()
+    params = model.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="preemption_mode"):
+        ServingEngine(model, params, slots=1, max_tokens=64,
+                      prompt_len=16, dtype=jnp.float32,
+                      preemption_mode="swap")
+    with pytest.raises(ValueError, match="preemption_mode"):
+        _mk = _mk_model()
+        ServingEngine(_mk[1], _mk[2], slots=1, max_tokens=64,
+                      dtype=jnp.float32, preemption_mode="bogus")
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_alternating_engine_preemption(small_model, mode):
+    """The alternating (fused=False) baseline supports the same knob and
+    produces the same streams under pressure."""
+    cfg, model, params = small_model
+    reqs = _mixed_reqs(cfg, [48, 40, 56], [10, 8, 10], seed=23)
+
+    def drive(**kw):
+        eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                            dtype=jnp.float32, block_tokens=8,
+                            fused=False, **kw)
+        for rid, prompt, max_new in reqs:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new))
+        return eng, {r.rid: r.output for r in eng.run()}
+
+    _, base = drive()
+    eng, got = drive(num_blocks=9, preemption_mode=mode)
+    assert got == base, mode
+    assert eng.preemptions >= 1
