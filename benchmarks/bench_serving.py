@@ -126,16 +126,21 @@ def _drain(eng, reqs):
         eng.submit(r)
     t0 = time.perf_counter()
     ticks0, n_tick_times = eng.ticks, len(eng.tick_times)
+    n_ht = len(getattr(eng, "tick_host_times", ()))
+    n_cg = len(getattr(eng, "tick_commit_groups", ()))
     done = eng.run()
     wall = time.perf_counter() - t0
-    return done, wall, eng.ticks - ticks0, eng.tick_times[n_tick_times:]
+    return (done, wall, eng.ticks - ticks0, eng.tick_times[n_tick_times:],
+            list(getattr(eng, "tick_host_times", []))[n_ht:],
+            list(getattr(eng, "tick_commit_groups", []))[n_cg:])
 
 
 def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                  max_tokens: int, repeats: int = 3,
                  prefix_cache: bool = False,
                  block_tokens=None, num_blocks=None,
-                 preemption=None) -> dict:
+                 preemption=None, fused_commit: bool = False,
+                 swap_ahead: bool = False) -> dict:
     import jax.numpy as jnp
     from repro.serving.engine import ServingEngine
 
@@ -143,7 +148,8 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                         dtype=jnp.float32, fused=fused,
                         prefix_cache=prefix_cache,
                         block_tokens=block_tokens, num_blocks=num_blocks,
-                        preemption_mode=preemption)
+                        preemption_mode=preemption,
+                        fused_commit=fused_commit, swap_ahead=swap_ahead)
     _drain(eng, reqs)   # warmup drain: pays compiles (and, with the prefix
     # cache on, populates the trie — timed drains measure the warm cache)
     # best-of-N timed drains: wall time on a shared host is noisy, the
@@ -170,10 +176,11 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
             s1 = eng.preempt_stats()
             extra |= {k: s1[k] - s0[k] for k in
                       ("preemptions", "swap_resumes", "recompute_resumes",
-                       "swap_out_bytes", "swap_in_bytes")}
+                       "swap_out_bytes", "swap_in_bytes",
+                       "prefetched_resumes", "resume_stall_ticks")}
         if best is None or res[1] < best[0][1]:
             best = (res, extra)
-    (done, wall, ticks, tick_times), extra = best
+    (done, wall, ticks, tick_times, host_times, commit_groups), extra = best
     gen = sum(len(r.output) for r in done)
     dec = sum(max(0, len(r.output) - 1) for r in done)
     ttft = [r.t_first - r.t_admit for r in done if r.t_first]
@@ -181,10 +188,15 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
     # summarize() so bench and engine can never disagree on definitions
     summ = ServingEngine.summarize(done)
     streams = {r.rid: list(r.output) for r in done}
+    mode = (f"fused+preemption:{preemption}" if preemption
+            else "fused+prefix_cache" if prefix_cache
+            else "fused" if fused else "alternating")
+    if fused_commit:
+        mode += "+fused_commit"
+    if swap_ahead:
+        mode += "+swap_ahead"
     return {
-        "mode": (f"fused+preemption:{preemption}" if preemption
-                 else "fused+prefix_cache" if prefix_cache
-                 else "fused" if fused else "alternating"),
+        "mode": mode,
         "requests": len(done),
         "gen_tokens": gen,
         "decode_tokens": dec,
@@ -200,9 +212,64 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
         "tick_wall_mean_s": float(np.mean(tick_times)) if tick_times else None,
         "tick_wall_p50_s": float(np.median(tick_times)) if tick_times else None,
         "tick_wall_max_s": float(np.max(tick_times)) if tick_times else None,
+        # per-tick phase breakdown: device = the jit'd step through logits;
+        # host = the rest of the tick (admission, staging, COW, swaps)
+        "tick_device_s": float(np.sum(tick_times)) if tick_times else None,
+        "tick_host_s": float(np.sum(host_times)) if host_times else None,
+        "commit_groups": int(np.sum(commit_groups)) if commit_groups else 0,
         "jit_stats": eng.jit_stats(),
         **extra,
     }, streams
+
+
+def _commit_microbench(*, fused: bool, iters: int = 20) -> dict:
+    """Times the cache commit in isolation: one jit'd ``write_chunk`` at a
+    steady-state length, so every call quantizes + scatters the same number
+    of groups.  Reports µs per committed group — the factor that turns the
+    engine's per-tick ``commit_groups`` counts into a commit-time estimate.
+    (On CPU the fused kernel runs in Pallas interpret mode; compiled-TPU
+    ratios will differ — see docs/architecture.md, "Commit path".)"""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.paged import BlockAllocator, PagedKVCache
+
+    S, H, D, BT, G, R, T = 4, 4, 64, 16, 8, 8, 128
+    kb, vb = 2, 1          # the benchmark model's mixed-policy bit widths
+    rng = np.random.default_rng(0)
+    alloc = BlockAllocator(S, S * (T // BT), T // BT, block_tokens=BT,
+                           residual=R, group=G)
+    cache = PagedKVCache.init(
+        S, H, D, num_blocks=S * (T // BT), block_tokens=BT, max_tokens=T,
+        k_bits=kb, v_bits=vb, group=G, residual=R,
+        dtype=jnp.float32, scale_dtype=jnp.float32)
+    C = R + G
+    wc = jax.jit(lambda c, kc, vc, n: c.write_chunk(kc, vc, n, fused=fused))
+    kc = [jnp.asarray(rng.normal(size=(S, H, C, D)).astype(np.float32))
+          for _ in range(2)]
+    vc = [jnp.asarray(rng.normal(size=(S, H, C, D)).astype(np.float32))
+          for _ in range(2)]
+    nv = jnp.full((S,), C, jnp.int32)
+    for s in range(S):
+        alloc.ensure(s, 2 * C)
+    cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+    cache = jax.block_until_ready(wc(cache, kc[0], vc[0], nv))
+    # steady state: every timed call advances length C -> 2C, committing
+    # C/G whole groups per slot
+    groups = S * (C // G)
+    jax.block_until_ready(wc(cache, kc[1], vc[1], nv))   # compile warmup
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(wc(cache, kc[1], vc[1], nv))
+        times.append(time.perf_counter() - t0)
+    best = float(np.min(times))
+    return {
+        "mode": "fused" if fused else "jnp",
+        "groups_per_call": groups,
+        "call_us_best": best * 1e6,
+        "us_per_group": best * 1e6 / groups,
+        "iters": iters,
+    }
 
 
 def main() -> None:
@@ -249,6 +316,14 @@ def main() -> None:
                             repeats=args.repeats)
     assert s_f == s_a, "fused and alternating token streams diverged"
 
+    # --- commit fusion: fused-commit engine + isolated µs/group ----------
+    fusedc, s_fc = bench_engine(model, params, reqs, fused=True,
+                                slots=slots, max_tokens=max_tokens,
+                                repeats=args.repeats, fused_commit=True)
+    assert s_fc == s_f, "fused-commit token streams diverged"
+    micro_jnp = _commit_microbench(fused=False)
+    micro_fused = _commit_microbench(fused=True)
+
     # --- shared-prefix trace: prefix cache vs the plain fused engine -----
     sreqs = _shared_trace(cfg, **shared)
     sp_on, ss_on = bench_engine(model, params, sreqs, fused=True,
@@ -288,6 +363,23 @@ def main() -> None:
         "swapped bytes must round-trip completely", ov["swap"])
     assert ov["recompute"]["swap_out_bytes"] == 0
 
+    # --- swap-ahead: same overload trace, resume copies prefetched -------
+    ov_sa, so_sa = bench_engine(
+        model, params, oreqs, fused=True, slots=slots,
+        max_tokens=max_tokens, repeats=args.repeats,
+        block_tokens=overload_bt, num_blocks=pool, preemption="swap",
+        swap_ahead=True)
+    assert so_sa == so_base, (
+        "swap-ahead token streams diverged from the no-pressure baseline")
+    assert ov_sa["requests"] == len(oreqs), ov_sa
+    # without swap-ahead every swap resume blocks on its H2D copy; with it
+    # the FIFO-head payload is staged during the prior tick's compute
+    assert ov["swap"]["resume_stall_ticks"] == ov["swap"]["swap_resumes"]
+    if ov_sa["swap_resumes"]:
+        assert ov_sa["prefetched_resumes"] >= 1, ov_sa
+        assert (ov_sa["resume_stall_ticks"]
+                < ov["swap"]["resume_stall_ticks"]), (ov_sa, ov["swap"])
+
     report = {
         "bench": "serving_fused_vs_alternating",
         "model": cfg.name,
@@ -320,6 +412,38 @@ def main() -> None:
             "swap": ov["swap"],
             "recompute": ov["recompute"],
         },
+        "commit_fusion": {
+            # CPU caveat: the fused kernel runs in Pallas interpret mode
+            # here, so µs/group ratios are NOT what a compiled TPU run
+            # gives; resume-stall ticks are schedule-determined and carry
+            # over (docs/architecture.md, "Commit path")
+            "backend": "cpu-interpret",
+            "mixed": {
+                "jnp_commit": {k: fused[k] for k in
+                               ("ticks", "tick_wall_mean_s", "tick_device_s",
+                                "tick_host_s", "commit_groups")},
+                "fused_commit": {k: fusedc[k] for k in
+                                 ("ticks", "tick_wall_mean_s",
+                                  "tick_device_s", "tick_host_s",
+                                  "commit_groups")},
+                "tick_device_ratio": fusedc["tick_device_s"] / max(
+                    fused["tick_device_s"] or 1e-9, 1e-9),
+            },
+            "microbench": {
+                "jnp": micro_jnp,
+                "fused": micro_fused,
+                "us_per_group_ratio": micro_fused["us_per_group"] / max(
+                    micro_jnp["us_per_group"], 1e-9),
+            },
+            "swap_ahead": {
+                "off": {k: ov["swap"][k] for k in
+                        ("swap_resumes", "resume_stall_ticks",
+                         "prefetched_resumes", "ttft_p50_s", "tpot_p99_s")},
+                "on": {k: ov_sa[k] for k in
+                       ("swap_resumes", "resume_stall_ticks",
+                        "prefetched_resumes", "ttft_p50_s", "tpot_p99_s")},
+            },
+        },
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps({k: report[k] for k in
@@ -341,6 +465,16 @@ def main() -> None:
               f"{o['ttft_p50_s']:.3f}s (base {ov_base['ttft_p50_s']:.3f}s), "
               f"tpot p99 {o['tpot_p99_s'] or 0:.4f}s "
               f"(base {ov_base['tpot_p99_s'] or 0:.4f}s)")
+    cf = report["commit_fusion"]
+    print(f"commit: {micro_jnp['us_per_group']:.1f} µs/group jnp vs "
+          f"{micro_fused['us_per_group']:.1f} µs/group fused "
+          f"({cf['backend']}); mixed tick device "
+          f"{fused['tick_device_s']:.3f}s jnp-commit vs "
+          f"{fusedc['tick_device_s']:.3f}s fused-commit")
+    print(f"swap-ahead: resume stalls "
+          f"{cf['swap_ahead']['off']['resume_stall_ticks']} -> "
+          f"{cf['swap_ahead']['on']['resume_stall_ticks']} "
+          f"({cf['swap_ahead']['on']['prefetched_resumes']} prefetched)")
     print(f"wrote {args.out}")
 
 

@@ -19,7 +19,11 @@ All softmax math runs in fp32; matmuls accumulate in fp32 via
 
 On TPU the same call sites dispatch to the Pallas kernels in
 ``repro.kernels`` (``use_pallas=True``); this module is the CPU/dry-run and
-oracle path.
+oracle path.  The *write* side has the analogous split: group commits run
+either through the jnp scatter chain (``PagedKVCache._commit_groups``, the
+reference) or the fused Pallas quantize-commit kernel
+(``fused_commit=True`` on the model/engine) — both produce bit-identical
+pool state, so every read path here is oblivious to which one ran.
 
 The paged read paths treat committed pool blocks as **immutable**: every
 read masks positions against ``PagedKVCache.commit_lengths()`` (which

@@ -206,6 +206,19 @@ class PagedKVCache:
             raise ValueError(f"residual {residual} % group {group} != 0")
         if max_tokens <= 0:
             raise ValueError("max_tokens (per-slot capacity) required")
+        # Sub-byte packing constraints, checked here rather than failing
+        # with an opaque reshape error at first commit: K packs each token
+        # group into whole bytes, V packs each head row along channels.
+        if k_bits and group % (8 // k_bits):
+            raise ValueError(
+                f"group {group} not divisible by the K pack factor "
+                f"{8 // k_bits} (= 8 // {k_bits} bits); token groups must "
+                "pack into whole bytes")
+        if v_slice_offset < 0 and v_bits and head_dim % (8 // v_bits):
+            raise ValueError(
+                f"head_dim {head_dim} not divisible by the V pack factor "
+                f"{8 // v_bits} (= 8 // {v_bits} bits); channel rows must "
+                "pack into whole bytes")
         max_blocks = -(-max_tokens // block_tokens)
         cap = residual + group
         S, H, BT, D = slots, kv_heads, block_tokens, head_dim
@@ -415,15 +428,39 @@ class PagedKVCache:
                     jnp.swapaxes(v_grp.astype(self.dtype), 1, 2))
         return dataclasses.replace(cache, **upd)
 
+    def _fused_commit(self, cache: "PagedKVCache", g0: jax.Array,
+                      mask: jax.Array, src_k: jax.Array,
+                      src_v: Optional[jax.Array],
+                      start: jax.Array) -> "PagedKVCache":
+        """Fused-kernel twin of :meth:`_commit_groups`: one Pallas launch
+        quantizes + packs + scatters every ``(slot, group)`` lane of
+        ``g0/mask [S, NG]`` directly into the pool rows
+        (``repro.kernels.quant_commit``).  Sources are selected in-kernel
+        from (pre-scatter ring ∪ chunk) — ``self`` still holds the old
+        ring; ``cache`` carries the post-scatter ring and the scatter
+        targets.  Bit-identical to the jnp chain by construction (same f32
+        op order, same pack layout); ``tests/test_quant_commit.py`` pins
+        it across bit mixes, partial chunks, shared-prefix floors, and the
+        latent layout."""
+        from repro.kernels.quant_commit import fused_commit_groups
+        upd = fused_commit_groups(
+            cache, self.resid_k,
+            self.resid_v if self.v_slice_offset < 0 else None,
+            src_k, src_v, g0, mask, start)
+        return dataclasses.replace(cache, **upd)
+
     def append(self, k_t: jax.Array, v_t: Optional[jax.Array] = None,
-               active: Optional[jax.Array] = None) -> "PagedKVCache":
+               active: Optional[jax.Array] = None, *,
+               fused: bool = False) -> "PagedKVCache":
         """Appends one decode token per active slot.
 
         ``k_t/v_t [S, H, 1, D]``; ``active [S] bool`` (None → all).  Slots
         with ``active`` False are untouched (length, ring, pools).  Commits
         one group per slot whenever that slot's fp window overflows
         ``residual`` — the same cadence as ``LayerKVCache.append``, but
-        per-slot.
+        per-slot.  ``fused`` routes the commit through the Pallas
+        quantize-commit kernel instead of the jnp scatter chain (identical
+        bytes either way).
         """
         G = self.group
         cap = self.resid_cap
@@ -444,10 +481,19 @@ class PagedKVCache:
                             self.commit_base)
         new_c = jnp.maximum(_cl(new_len, self.residual, G),
                             self.commit_base)
-        return self._commit_groups(cache, old_c, active & (new_c > old_c))
+        commit = active & (new_c > old_c)
+        if fused:
+            # the appended token is the only position the pre-scatter ring
+            # can lack, and the in-kernel (ring ∪ chunk) select sources it
+            # from the 1-token chunk at start = the slot's old length
+            return self._fused_commit(
+                cache, old_c[:, None], commit[:, None], k_t, v_t,
+                self.lengths)
+        return self._commit_groups(cache, old_c, commit)
 
     def write_chunk(self, k: jax.Array, v: Optional[jax.Array] = None,
-                    n_valid: Optional[jax.Array] = None) -> "PagedKVCache":
+                    n_valid: Optional[jax.Array] = None, *,
+                    fused: bool = False) -> "PagedKVCache":
         """Chunked-prefill bulk write: ``C`` tokens per slot at each slot's
         current length.
 
@@ -457,7 +503,10 @@ class PagedKVCache:
         ``0 < n_valid < C``).  Per-slot starting lengths must be multiples
         of ``G`` (the chunk cadence: 0, C, 2C, …).  Commits every completed
         group in ``[commit(len), commit(len + n_valid))`` — at most ``C/G``
-        per call, handled as a static loop of masked vector commits.
+        per call: a static loop of masked vector commits on the jnp path,
+        or — ``fused=True`` — a single Pallas quantize-commit launch over
+        all ``(slot, group)`` lanes that performs the same (old ring ∪
+        chunk) source select in-kernel and writes identical bytes.
         """
         S, H, C, D = k.shape
         G = self.group
@@ -478,7 +527,8 @@ class PagedKVCache:
         # Pre-gather commit-group sources from (old ring ∪ chunk) BEFORE the
         # ring scatter: a full chunk may overwrite ring entries whose tokens
         # this very call commits (the un-committed span can exceed the ring
-        # capacity mid-call).
+        # capacity mid-call).  The fused path defers this exact select into
+        # the kernel instead (it reads the pre-scatter ring directly).
         def group_src(buf_old, chunk, g0):
             pos = g0[:, None] + jnp.arange(G, dtype=jnp.int32)[None]  # [S,G]
             ring_vals = self._ring_gather(buf_old, jnp.mod(pos, cap))
@@ -490,12 +540,13 @@ class PagedKVCache:
             return jnp.where(from_chunk, chunk_vals, ring_vals)
 
         srcs = []
-        for i in range(C // G):
-            g0 = old_c + i * G
-            k_grp = group_src(self.resid_k, k, g0)
-            v_grp = (group_src(self.resid_v, v, g0)
-                     if self.v_slice_offset < 0 else None)
-            srcs.append((g0, k_grp, v_grp))
+        if not fused:
+            for i in range(C // G):
+                g0 = old_c + i * G
+                k_grp = group_src(self.resid_k, k, g0)
+                v_grp = (group_src(self.resid_v, v, g0)
+                         if self.v_slice_offset < 0 else None)
+                srcs.append((g0, k_grp, v_grp))
 
         cols = jnp.mod(start[:, None] + jnp.arange(C, dtype=jnp.int32)[None],
                        cap)                                     # [S, C]
@@ -507,6 +558,11 @@ class PagedKVCache:
         cache = dataclasses.replace(
             self, resid_k=resid_k, resid_v=resid_v, lengths=start + n_valid)
 
+        if fused:
+            g0s = (old_c[:, None]
+                   + jnp.arange(C // G, dtype=jnp.int32)[None] * G)
+            return self._fused_commit(cache, g0s, g0s < new_c[:, None],
+                                      k, v, start)
         for g0, k_grp, v_grp in srcs:
             cache = self._commit_groups(cache, g0, g0 < new_c,
                                         k_grp, v_grp)
@@ -1011,6 +1067,13 @@ class SwapPool:
         self.peak_resident_bytes = max(self.peak_resident_bytes,
                                        self.resident_bytes)
         return n
+
+    def peek(self, rid: int) -> dict:
+        """Returns a parked payload without removing it (no accounting —
+        the engine's swap-ahead prefetch stages the host→device copy
+        early; the bytes count as transferred when ``pop`` commits the
+        resume)."""
+        return self._records[rid]
 
     def pop(self, rid: int) -> dict:
         """Removes and returns a parked payload (swap-in)."""

@@ -82,6 +82,17 @@ class QuantSpec:
             raise ValueError(f"group must be positive, got {self.group}")
         if self.mode not in ("per_channel", "per_token"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        # Packed bytes must not straddle group boundaries: the commit path
+        # packs each group independently ([G//factor, factor] reshape), so
+        # a 1-bit spec needs groups in multiples of 8, 2-bit of 4, etc.
+        # Catch it here — the late failure is an opaque reshape error deep
+        # inside pack_bits.
+        factor = 8 // self.bits
+        if self.group % factor:
+            raise ValueError(
+                f"group {self.group} must be a multiple of the pack factor "
+                f"{factor} (= 8 // {self.bits} bits); packed bytes would "
+                "straddle group boundaries")
 
     @property
     def levels(self) -> int:

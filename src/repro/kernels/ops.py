@@ -8,6 +8,11 @@ decode hot path**.  Both match their pure-jnp oracles
 (``attention_quant.decode_attend`` / ``paged_decode_attend`` /
 ``paged_chunk_attend``) to ≤1e-5, sliding-window layers included.
 
+``fused_commit_groups`` is the write-path counterpart: one Pallas kernel
+quantizes, packs, and scatters committed token groups into the paged pool
+(``PagedKVCache.append/write_chunk`` with ``fused=True``), bit-identical
+to the jnp ``_commit_groups`` scatter chain it replaces.
+
 On CPU the kernels run in interpret mode (``interpret=None`` resolves to
 ``True`` off-TPU); on TPU pass ``interpret=False`` or rely on the default.
 """
@@ -26,11 +31,12 @@ from repro.kernels.asym_decode_attn import (asym_decode_attn,
                                             asym_decode_attn_fused)
 from repro.kernels.flash_prefill import flash_prefill_kernel
 from repro.kernels.paged_attn import paged_asym_attn
+from repro.kernels.quant_commit import fused_commit_groups
 from repro.kernels.rtn_pack import rtn_pack
 
 __all__ = ["asym_decode_attention", "paged_asym_attention",
            "paged_asym_decode_attention", "kernel_supported",
-           "rtn_pack", "flash_prefill_kernel"]
+           "rtn_pack", "flash_prefill_kernel", "fused_commit_groups"]
 
 
 def _resolve_interpret(interpret: Optional[bool]) -> bool:

@@ -1,0 +1,310 @@
+"""Fused quantize-commit kernel: the paged cache's write path in one pass.
+
+``PagedKVCache._commit_groups`` — the jnp reference — quantizes each
+committed group with :func:`repro.core.quant.quantize` and scatters the
+results through ~9 separate ``.at[].set`` updates per group (codes, scale,
+zero for K and V, or fp rows).  Every one of those is a full-pool
+gather/scatter in XLA, and they run on the host-visible side of the serve
+tick.  This module collapses the whole chain into **one Pallas kernel
+launch** per write:
+
+* grid ``(S, NG, H)`` — one step per (slot, committed group, KV head);
+* the kernel *reads the source tokens from (ring ∪ chunk)*: positions
+  ``pos ∈ [g0, g0+G)`` below the chunk start come from the pre-scatter fp
+  residual ring (``pos mod cap``), positions at/after it from the incoming
+  chunk (``pos − start``) — the same select
+  :meth:`PagedKVCache.write_chunk`'s ``group_src`` performs, expressed as
+  two one-hot matmuls so it lowers on TPU (no dynamic gathers);
+* asymmetric scale/zero are computed in f32 with exactly the op order of
+  :func:`repro.core.quant.quantize` (min/max → ``(hi−lo)/levels`` →
+  guarded divide → ``round`` → ``clip``), so committed codes and params
+  are **bit-identical** to the jnp path;
+* sub-byte {1, 2, 4, 8}-bit codes are packed in-register (shift-and-sum
+  over the pack factor, little-endian — the :func:`pack_bits` layout);
+* packed codes + scale + zero (or fp rows for 0-bit sides, or nothing on
+  the V side of a ``v_slice_offset`` latent cache) land **directly in the
+  destination pool rows**: every output BlockSpec resolves its pool row
+  through the scalar-prefetched ``(block, group-offset)`` targets, and
+  ``input_output_aliases`` gives the write scatter semantics — rows the
+  grid never touches keep their bytes.  Masked lanes (inactive slots,
+  unmapped page-table entries) target scratch block 0, exactly like the
+  jnp path's masked scatters.
+
+The public entry :func:`fused_commit_groups` returns the updated pool
+leaves as a dict (the cache dataclass is rebuilt by the caller,
+:meth:`PagedKVCache.append` / :meth:`~PagedKVCache.write_chunk` under
+their ``fused=True`` flag).  Off-TPU the kernel runs in interpret mode —
+the grid unrolls into plain XLA ops under jit, which keeps the CPU test
+matrix honest; see ``docs/architecture.md`` ("Commit path") for the
+interpret-vs-compiled performance caveats.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_commit_groups", "quant_commit_kernel_call"]
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _quantize_rows(x: jax.Array, axis_is_tokens: bool, group: int,
+                   levels: int):
+    """In-kernel RTN over ``x [G, D]`` — K (per-channel over the G tokens,
+    ``axis_is_tokens=True``) or V (per-token over channel groups).  Returns
+    (codes f32 in [0, levels], scale f32, zero f32) with reduction layout
+    matching :func:`repro.core.quant.quantize`'s f32 op order exactly."""
+    if axis_is_tokens:
+        # per-channel: one group of `group` tokens per channel
+        lo = jnp.min(x, axis=0, keepdims=True)          # [1, D]
+        hi = jnp.max(x, axis=0, keepdims=True)
+        scale = (hi - lo) / levels
+        safe = jnp.where(scale <= 0, 1.0, scale)
+        codes = jnp.clip(jnp.round((x - lo) / safe), 0, levels)
+        return codes, scale, lo
+    G, D = x.shape
+    xg = x.reshape(G, D // group, group)                # channel groups
+    lo = jnp.min(xg, axis=-1)                           # [G, D/vg]
+    hi = jnp.max(xg, axis=-1)
+    scale = (hi - lo) / levels
+    safe = jnp.where(scale <= 0, 1.0, scale)
+    codes = jnp.clip(jnp.round((xg - lo[..., None]) / safe[..., None]),
+                     0, levels)
+    return codes.reshape(G, D), scale, lo
+
+
+def _pack_tokens(codes: jax.Array, bits: int) -> jax.Array:
+    """[G, D] codes → [G·bits/8, D] uint8, token-packed little-endian
+    (element i of a pack group at bits [i·bits, (i+1)·bits) — the
+    :func:`pack_bits` layout on the token axis)."""
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    f = 8 // bits
+    G, D = codes.shape
+    c = codes.astype(jnp.uint32).reshape(G // f, f, D)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, f, 1), 1) * bits
+    return jnp.sum(c << shifts, axis=1).astype(jnp.uint8)
+
+
+def _pack_channels(codes: jax.Array, bits: int) -> jax.Array:
+    """[G, D] codes → [G, D·bits/8] uint8, channel-packed little-endian."""
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    f = 8 // bits
+    G, D = codes.shape
+    c = codes.astype(jnp.uint32).reshape(G, D // f, f)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, f), 2) * bits
+    return jnp.sum(c << shifts, axis=2).astype(jnp.uint8)
+
+
+def _gather_sources(pos, start, ring, chunk, cap, C):
+    """Select each group position's source row: ring (pre-scatter fp ring,
+    ``pos mod cap``) below the chunk start, chunk (``pos − start``) at or
+    after it.  One-hot matmuls — exact for one-hot f32 weights and free of
+    dynamic gathers, so the same code path compiles on TPU."""
+    G = pos.shape[0]
+    cols = jnp.mod(pos, cap)                            # [G, 1]
+    from_chunk = pos >= start                           # [G, 1]
+    i_r = jax.lax.broadcasted_iota(jnp.int32, (G, cap), 1)
+    oh_r = ((i_r == cols) & ~from_chunk).astype(jnp.float32)
+    ci = jnp.clip(pos - start, 0, C - 1)
+    i_c = jax.lax.broadcasted_iota(jnp.int32, (G, C), 1)
+    oh_c = ((i_c == ci) & from_chunk).astype(jnp.float32)
+    return (jnp.dot(oh_r, ring.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+            + jnp.dot(oh_c, chunk.astype(jnp.float32),
+                      preferred_element_type=jnp.float32))
+
+
+def _make_kernel(*, G, cap, C, k_bits, v_bits, v_group, has_v, dtype,
+                 scale_dtype, out_names):
+    """Builds the kernel body for one static cache configuration.  Ref
+    order: 4 scalar-prefetch refs, ring/src inputs, the aliased pool
+    inputs (ignored — aliasing only), then one output ref per entry of
+    ``out_names``."""
+    k_levels = (1 << k_bits) - 1
+    v_levels = (1 << v_bits) - 1
+    n_in = 2 + (2 if has_v else 0)
+
+    def kernel(blk_ref, goff_ref, g0_ref, start_ref, *refs):
+        s = pl.program_id(0)
+        g = pl.program_id(1)
+        del blk_ref, goff_ref  # consumed by the out-spec index maps
+        ring_k = refs[0][0, 0]                           # [cap, D]
+        src_k = refs[1][0, 0]                            # [C, D]
+        outs = dict(zip(out_names, refs[n_in + len(out_names):]))
+
+        pos = (g0_ref[s, g]
+               + jax.lax.broadcasted_iota(jnp.int32, (G, 1), 0))
+        start = start_ref[s]
+        k_grp = _gather_sources(pos, start, ring_k, src_k, cap, C)
+
+        if k_bits > 0:
+            codes, scale, zero = _quantize_rows(k_grp, True, G, k_levels)
+            outs["k_codes"][0, 0] = _pack_tokens(codes, k_bits)
+            outs["k_scale"][0, 0] = scale.astype(scale_dtype)
+            outs["k_zero"][0, 0] = zero.astype(scale_dtype)
+        else:
+            outs["k_fp"][0, 0] = k_grp.astype(dtype)
+
+        if has_v:
+            ring_v = refs[2][0, 0]
+            src_v = refs[3][0, 0]
+            v_grp = _gather_sources(pos, start, ring_v, src_v, cap, C)
+            if v_bits > 0:
+                codes, scale, zero = _quantize_rows(
+                    v_grp, False, v_group, v_levels)
+                outs["v_codes"][0, 0] = _pack_channels(codes, v_bits)
+                outs["v_scale"][0, 0] = scale.astype(scale_dtype)
+                outs["v_zero"][0, 0] = zero.astype(scale_dtype)
+            else:
+                outs["v_fp"][0, 0] = v_grp.astype(dtype)
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=(
+    "G", "cap", "C", "k_bits", "v_bits", "v_group", "interpret"))
+def quant_commit_kernel_call(
+    blk: jax.Array,          # [S, NG] destination pool block (0 = masked)
+    goff: jax.Array,         # [S, NG] group index within the block
+    g0: jax.Array,           # [S, NG] absolute group start token
+    start: jax.Array,        # [S]     chunk start (ring below, chunk at/after)
+    ring_k: jax.Array,       # [S, H, cap, D] pre-scatter fp ring
+    src_k: jax.Array,        # [S, H, C, D]   incoming chunk (ring dtype)
+    ring_v: Optional[jax.Array],
+    src_v: Optional[jax.Array],
+    pools: dict,             # name → pool array (the scatter targets)
+    *,
+    G: int, cap: int, C: int, k_bits: int, v_bits: int, v_group: int,
+    interpret: bool,
+) -> dict:
+    """One fused quantize-commit launch; returns the updated pool dict.
+
+    Grid ``(S, NG, H)``; every output BlockSpec resolves its pool row via
+    the scalar-prefetched ``blk``/``goff`` targets and is aliased to the
+    matching input, so unwritten rows keep their bytes (scatter
+    semantics).  All shapes static — jit-safe inside the serve step.
+    """
+    S, H, _, D = ring_k.shape
+    NG = blk.shape[1]
+    has_v = ring_v is not None
+    out_names = list(pools)
+
+    def row_spec(shape):
+        # pool row (blk, h) at group offset goff — block-index units
+        return pl.BlockSpec(
+            (1, 1) + shape,
+            lambda s, g2, h, b, o, *_: (b[s, g2], h, o[s, g2], 0))
+
+    pool_specs = {
+        "k_codes": row_spec((G * k_bits // 8, D)) if k_bits else None,
+        "k_scale": row_spec((1, D)) if k_bits else None,
+        "k_zero": row_spec((1, D)) if k_bits else None,
+        "k_fp": None if k_bits else row_spec((G, D)),
+    }
+    if has_v:
+        Dv = ring_v.shape[-1]
+        pool_specs |= {
+            "v_codes": row_spec((G, Dv * v_bits // 8)) if v_bits else None,
+            "v_scale": row_spec((G, Dv // v_group)) if v_bits else None,
+            "v_zero": row_spec((G, Dv // v_group)) if v_bits else None,
+            "v_fp": None if v_bits else row_spec((G, Dv)),
+        }
+
+    def slot_spec(L, W):
+        return pl.BlockSpec((1, 1, L, W),
+                            lambda s, g2, h, *_: (s, h, 0, 0))
+
+    in_arrays = [ring_k, src_k]
+    in_specs = [slot_spec(cap, D), slot_spec(C, D)]
+    if has_v:
+        Dv = ring_v.shape[-1]
+        in_arrays += [ring_v, src_v]
+        in_specs += [slot_spec(cap, Dv), slot_spec(C, Dv)]
+    # the aliased pool inputs ride along with the same specs as the outputs
+    n_lead = len(in_arrays)
+    for name in out_names:
+        in_arrays.append(pools[name])
+        in_specs.append(pool_specs[name])
+    # flat input indices include the 4 scalar-prefetch args
+    aliases = {4 + n_lead + j: j for j in range(len(out_names))}
+
+    kernel = _make_kernel(
+        G=G, cap=cap, C=C, k_bits=k_bits, v_bits=v_bits, v_group=v_group,
+        has_v=has_v, dtype=ring_k.dtype,
+        scale_dtype=(pools["k_scale"].dtype if k_bits
+                     else pools.get("v_scale").dtype if has_v and v_bits
+                     else ring_k.dtype),
+        out_names=out_names)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(S, NG, H),
+        in_specs=in_specs,
+        out_specs=[pool_specs[name] for name in out_names],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(pools[n].shape, pools[n].dtype)
+                   for n in out_names],
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(blk.astype(jnp.int32), goff.astype(jnp.int32),
+      g0.astype(jnp.int32), start.astype(jnp.int32), *in_arrays)
+    return dict(zip(out_names, out))
+
+
+def fused_commit_groups(cache, ring_k, ring_v, src_k, src_v,
+                        g0: jax.Array, mask: jax.Array, start: jax.Array,
+                        interpret: Optional[bool] = None) -> dict:
+    """Commit up to ``NG`` groups per slot through the fused kernel.
+
+    ``cache`` — the :class:`~repro.core.paged.PagedKVCache` whose pool
+    leaves are the scatter targets (its ring may already hold the
+    post-scatter state; sources come from ``ring_k/ring_v``, the
+    *pre-scatter* ring, plus the ``src_k/src_v`` chunk).  ``g0 [S, NG]``
+    group starts, ``mask [S, NG]`` which lanes commit, ``start [S]`` the
+    chunk's first absolute position.  Returns the updated pool leaves as
+    ``{name: array}`` — drop into ``dataclasses.replace``.
+    """
+    BT, G = cache.block_tokens, cache.group
+    S = ring_k.shape[0]
+    blk_idx = jnp.clip(g0 // BT, 0, cache.max_blocks - 1)
+    pt = jnp.take_along_axis(cache.page_table, blk_idx, axis=1)
+    blk = jnp.where(mask & (pt > 0), pt, 0)
+    off = jnp.mod(g0, BT)
+    pools = {}
+    if cache.k_bits > 0:
+        pools |= {"k_codes": cache.k_codes, "k_scale": cache.k_scale,
+                  "k_zero": cache.k_zero}
+    else:
+        pools["k_fp"] = cache.k_fp
+    has_v = cache.v_slice_offset < 0
+    if has_v:
+        if cache.v_bits > 0:
+            pools |= {"v_codes": cache.v_codes, "v_scale": cache.v_scale,
+                      "v_zero": cache.v_zero}
+        else:
+            pools["v_fp"] = cache.v_fp
+    rd = ring_k.dtype
+    return quant_commit_kernel_call(
+        blk, off // G, g0, start,
+        ring_k, src_k.astype(rd),
+        ring_v if has_v else None,
+        src_v.astype(rd) if has_v else None,
+        pools,
+        G=G, cap=cache.resid_cap, C=src_k.shape[2],
+        k_bits=cache.k_bits, v_bits=cache.v_bits, v_group=cache.v_group,
+        interpret=_resolve_interpret(interpret))

@@ -58,6 +58,17 @@ def main(argv=None):
                          "rows + fp ring through host memory, 'recompute' "
                          "re-prefills prompt + generated tokens (both "
                          "bit-identical to an unpressured run)")
+    ap.add_argument("--fused-commit", action="store_true",
+                    help="commit quantized groups with the fused Pallas "
+                         "quantize-commit kernel (interpret mode off-TPU) "
+                         "instead of the jnp scatter chain — bit-identical "
+                         "either way")
+    ap.add_argument("--swap-ahead", action="store_true",
+                    help="with --preemption swap: prefetch the FIFO-head "
+                         "resume candidate's host->device copies during "
+                         "the previous tick's compute, so resume consumes "
+                         "a landed copy instead of stalling on the "
+                         "transfer")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -91,7 +102,11 @@ def main(argv=None):
                                block_tokens=args.block_tokens or None,
                                num_blocks=args.num_blocks or None,
                                prefix_cache=shared and model.supports_paged(),
-                               preemption_mode=preemption)
+                               preemption_mode=preemption,
+                               fused_commit=(args.fused_commit
+                                             and model.supports_paged()),
+                               swap_ahead=(args.swap_ahead
+                                           and preemption == "swap"))
         rng = np.random.default_rng(args.seed)
         system = (rng.integers(0, cfg.vocab, size=args.shared_prefix,
                                dtype=np.int32) if shared else None)
@@ -103,7 +118,10 @@ def main(argv=None):
             engine.submit(Request(rid=rid, prompt=prompt,
                                   max_new_tokens=args.max_new))
         done = engine.run()
-        stats = ServingEngine.summarize(done)
+        stats = ServingEngine.summarize(done, engine)
+        if "phases" in stats:
+            stats.update({f"phase_{k}": v
+                          for k, v in stats.pop("phases").items()})
         if shared and engine.paged:
             stats.update({f"prefix_{k}": v
                           for k, v in engine.prefix_stats().items()})

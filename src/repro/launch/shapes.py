@@ -48,7 +48,10 @@ SHAPES = {
                                  layout="paged", block_tokens=256),
     # Fused mixed prefill+decode tick (Sarathi-style piggybacking): one
     # compiled ``model.serve_step`` advances every mid-prompt slot by a
-    # chunk AND every decoding slot by a token.
+    # chunk AND every decoding slot by a token.  The commit-path knobs
+    # (``--fused-commit`` routes group commits through the Pallas
+    # quantize-commit kernel instead of the jnp scatter chain) change the
+    # step's *implementation*, not its shapes — this cell covers both.
     "serve_mixed_8k": ShapeCell("serve_mixed_8k", "serve", 8192, 64,
                                 layout="paged", chunk=256,
                                 block_tokens=256),
@@ -68,7 +71,10 @@ SHAPES = {
     # serve_step as serve_mixed_8k (preemption is host bookkeeping + a
     # pool-row gather/scatter between ticks); the cell exists so the
     # undersized-pool cache shapes are dry-runnable/addressable on the
-    # grid like every other serving configuration.
+    # grid like every other serving configuration.  ``--swap-ahead``
+    # (resume-candidate H2D prefetch) and ``--fused-commit`` are likewise
+    # shape-invariant: both reuse this cell's compiled step and swap-in
+    # shapes.
     "serve_overload_8k": ShapeCell("serve_overload_8k", "serve", 8192, 64,
                                    layout="paged", chunk=256,
                                    block_tokens=256, pool_frac=0.6),

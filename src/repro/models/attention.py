@@ -215,6 +215,7 @@ def attention_fwd(
     valid: Optional[jax.Array] = None,  # [S] — paged decode/chunk validity
     decode_active: Optional[jax.Array] = None,  # [S] — serve decode rows
     use_pallas: bool = False,
+    fused_commit: bool = False,
 ):
     """Returns (out [B,S,d], updated cache or None).
 
@@ -231,8 +232,10 @@ def attention_fwd(
         assert isinstance(cache, PagedKVCache)
         C = q.shape[2] - 1
         start = cache.lengths
-        cache = cache.write_chunk(k[:, :, :C], v[:, :, :C], valid)
-        cache = cache.append(k[:, :, C:], v[:, :, C:], decode_active)
+        cache = cache.write_chunk(k[:, :, :C], v[:, :, :C], valid,
+                                  fused=fused_commit)
+        cache = cache.append(k[:, :, C:], v[:, :, C:], decode_active,
+                             fused=fused_commit)
         # chunk row i sits at start + i; the decode row's token was
         # appended at position start (its pre-append length)
         q_pos = jnp.concatenate(
@@ -243,12 +246,12 @@ def attention_fwd(
     elif mode == "chunk":
         assert isinstance(cache, PagedKVCache)
         q_start = cache.lengths
-        cache = cache.write_chunk(k, v, valid)
+        cache = cache.write_chunk(k, v, valid, fused=fused_commit)
         out = _paged_attend(q, cache, q_start=q_start, window=window,
                             use_pallas=use_pallas)
     elif mode == "decode" and isinstance(cache, PagedKVCache):
         active = None if valid is None else valid > 0
-        cache = cache.append(k, v, active)
+        cache = cache.append(k, v, active, fused=fused_commit)
         out = _paged_attend(q, cache, window=window, use_pallas=use_pallas)
     elif mode == "decode":
         assert cache is not None and q.shape[2] == 1

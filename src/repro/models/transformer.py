@@ -167,6 +167,11 @@ class Model:
         # reads through the unified Pallas kernel (interpret mode off-TPU);
         # False keeps the pure-jnp oracle paths.
         self.use_pallas: bool = False
+        # Paged commit (write) backend: True replaces the jnp scatter chain
+        # of PagedKVCache._commit_groups with the fused quantize-commit
+        # Pallas kernel (repro.kernels.quant_commit) — identical bytes,
+        # one launch per write.  Pinned per engine like use_pallas.
+        self.fused_commit: bool = False
         self.spec = self._param_specs()
 
     def _constrain(self, x):
@@ -372,7 +377,8 @@ class Model:
                 seqpar_axes=self.seqpar_axes,
                 seqpar_min=self.seqpar_min_tokens, valid=valid,
                 decode_active=decode_active,
-                use_pallas=self.use_pallas)
+                use_pallas=self.use_pallas,
+                fused_commit=self.fused_commit)
         if cfg.sandwich_norm:
             a_out = _apply_norm(cfg, p["post_attn_norm"], a_out)
         x = x + a_out

@@ -150,8 +150,10 @@ class ServingEngine:
                  num_blocks: Optional[int] = None,
                  fused: Optional[bool] = None,
                  use_pallas: bool = False,
+                 fused_commit: bool = False,
                  prefix_cache: bool = False,
-                 preemption_mode: Optional[str] = None):
+                 preemption_mode: Optional[str] = None,
+                 swap_ahead: bool = False):
         self.model = model
         self.params = params
         self.slots = slots
@@ -176,6 +178,7 @@ class ServingEngine:
             self.chunk = prefill_chunk or (R + G)
             self.fused = True if fused is None else fused
             self.use_pallas = use_pallas
+            self.fused_commit = fused_commit
             if self.chunk % G or self.chunk > R + G:
                 raise ValueError(
                     f"prefill_chunk {self.chunk} must be a multiple of "
@@ -203,18 +206,19 @@ class ServingEngine:
             # must update in place, not copy per tick (mirrors steps.py's
             # bundles; a no-op on CPU, load-bearing on TPU)
 
-            def _with_backend(fn, flag=use_pallas):
-                # Pin THIS engine's attention backend at trace time: the
-                # flag lives on the shared Model, so without the pin a
-                # second engine on the same model would silently retarget
-                # the first engine's not-yet-traced step functions.
+            def _with_backend(fn, flag=use_pallas, commit=fused_commit):
+                # Pin THIS engine's attention + commit backends at trace
+                # time: the flags live on the shared Model, so without the
+                # pin a second engine on the same model would silently
+                # retarget the first engine's not-yet-traced step
+                # functions.
                 def wrapped(*args):
-                    prev = model.use_pallas
-                    model.use_pallas = flag
+                    prev = (model.use_pallas, model.fused_commit)
+                    model.use_pallas, model.fused_commit = flag, commit
                     try:
                         return fn(*args)
                     finally:
-                        model.use_pallas = prev
+                        model.use_pallas, model.fused_commit = prev
                 return wrapped
 
             self._serve = jax.jit(_with_backend(model.serve_step),
@@ -266,6 +270,29 @@ class ServingEngine:
             self.preemptions = 0
             self.swap_resumes = 0
             self.recompute_resumes = 0
+            # -- swap-ahead prefetch --------------------------------------
+            # The resume candidate is always the FIFO head of `preempted`,
+            # so its host→device pool-row copies can be dispatched while
+            # the current tick computes; resume then consumes the landed
+            # arrays instead of blocking on a synchronous transfer.
+            if swap_ahead and preemption_mode != "swap":
+                raise ValueError(
+                    "swap_ahead requires preemption_mode='swap' (there is "
+                    "no host payload to prefetch under recompute)")
+            self.swap_ahead = bool(swap_ahead)
+            self._prefetch: dict[int, dict] = {}   # rid -> staged arrays
+            self.prefetched_resumes = 0
+            self.resume_stalls = 0
+            # -- per-tick phase accounting --------------------------------
+            # One jit'd call can't be split into commit/attend on-device,
+            # so the engine tracks host-side time (admission, staging,
+            # COW, swaps) vs device time (the step call through logits
+            # materialization) plus the number of quantized groups each
+            # tick commits; bench_serving's standalone commit microbench
+            # supplies the µs/group that turns counts into a commit-time
+            # estimate.
+            self.tick_host_times: list[float] = []
+            self.tick_commit_groups: list[int] = []
         else:
             if prefix_cache:
                 raise ValueError(
@@ -275,6 +302,10 @@ class ServingEngine:
                 raise ValueError(
                     "preemption_mode requires the paged engine (the static "
                     "legacy path has no blocks to swap)")
+            if swap_ahead:
+                raise ValueError(
+                    "swap_ahead requires the paged engine with "
+                    "preemption_mode='swap'")
             self.preemption_mode = None
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
@@ -729,13 +760,19 @@ class ServingEngine:
                 self.preempted.popleft()
                 i = free[0]
                 payload = self.swap.pop(r.rid)
+                # Swap-ahead hit: the step that just ran already dispatched
+                # this rid's padded host→device copies; consume the landed
+                # device arrays.  Miss (or swap_ahead off): pad + transfer
+                # synchronously and count the stall.
+                staged = self._prefetch.pop(r.rid, None)
+                if staged is None:
+                    self.resume_stalls += 1
+                else:
+                    self.prefetched_resumes += 1
                 new_ids = {key: alloc.restore(
                                i, rec.indices.get(key, ()), rec.length,
                                min_block=rec.min_block.get(key, 0))
                            for key, alloc in self._mappings()}
-                # pad every mapping's rows to the page-table width so one
-                # compiled swap-in shape serves any swap size (pad rows
-                # scatter into scratch block 0, a masked-write target)
                 W = self.alloc.max_blocks
                 for sk in self.caches:
                     if sk not in payload:
@@ -743,15 +780,8 @@ class ServingEngine:
                     mk = sk if sk in self.wallocs else GLOBAL_MAPPING
                     ids = np.zeros(W, np.int32)
                     ids[:len(new_ids[mk])] = new_ids[mk]
-                    data = {}
-                    for name, arr in payload[sk].items():
-                        if name not in ("resid_k", "resid_v"):
-                            ax = arr.ndim - 4
-                            if arr.shape[ax] < W:
-                                widths = [(0, 0)] * arr.ndim
-                                widths[ax] = (0, W - arr.shape[ax])
-                                arr = np.pad(arr, widths)
-                        data[name] = jnp.asarray(arr)
+                    data = (staged[sk] if staged is not None
+                            else self._pad_swap_stage(payload[sk], W))
                     self.caches[sk] = self._swap_in_fn(
                         self.caches[sk], data, jnp.asarray(ids),
                         jnp.asarray(i, jnp.int32))
@@ -792,6 +822,57 @@ class ServingEngine:
                 self.recompute_resumes += 1
             self._last_active[i] = self.ticks
 
+    @staticmethod
+    def _pad_swap_stage(leaves: dict, W: int) -> dict:
+        """Pads one stage's parked pool rows to the page-table width so one
+        compiled swap-in shape serves any swap size (pad rows scatter into
+        scratch block 0, a masked-write target) and moves them on-device."""
+        data = {}
+        for name, arr in leaves.items():
+            if name not in ("resid_k", "resid_v"):
+                ax = arr.ndim - 4
+                if arr.shape[ax] < W:
+                    widths = [(0, 0)] * arr.ndim
+                    widths[ax] = (0, W - arr.shape[ax])
+                    arr = np.pad(arr, widths)
+            data[name] = jnp.asarray(arr)
+        return data
+
+    def _prefetch_resume(self):
+        """Swap-ahead: dispatches the FIFO-head swap payload's host→device
+        copies while the current tick's step is still computing on device.
+        Staged arrays are keyed by rid and consumed by
+        ``_resume_preempted``; a parked payload is immutable and a parked
+        rid cannot re-preempt, so entries never go stale.  ``peek`` leaves
+        the pool's byte accounting to the ``pop`` at resume time."""
+        if not (self.swap_ahead and self.preempted):
+            return
+        rec = self.preempted[0]
+        rid = rec.request.rid
+        if rec.mode != "swap" or rid in self._prefetch:
+            return
+        payload = self.swap.peek(rid)
+        W = self.alloc.max_blocks
+        self._prefetch[rid] = {
+            sk: self._pad_swap_stage(leaves, W)
+            for sk, leaves in payload.items()}
+
+    def _count_commit_groups(self, planned: dict) -> int:
+        """Token groups the coming tick will quantize+scatter, summed over
+        slots (multiply by layer count for kernel launches).  Mirrors the
+        cache's commit cadence: committed length floors at the slot's
+        shared-prefix ``commit_base`` and advances in whole groups once
+        the fp residual ring is past capacity."""
+        G, R = self.model.group, self.model.residual
+        total = 0
+        for i, add in planned.items():
+            old = int(self.alloc.lengths[i])
+            lo = max(max(0, (old - R) // G * G), int(self._commit_base[i]))
+            hi = max(0, (old + add - R) // G * G)
+            if hi > lo:
+                total += (hi - lo) // G
+        return total
+
     def preempt_stats(self) -> dict:
         """Preemption/swap counters (the overload benchmark reads these)."""
         if not (self.paged and self.preemption_mode):
@@ -805,6 +886,28 @@ class ServingEngine:
             "swap_out_bytes": self.swap.bytes_out,
             "swap_in_bytes": self.swap.bytes_in,
             "swap_peak_resident_bytes": self.swap.peak_resident_bytes,
+            "swap_ahead": self.swap_ahead,
+            "prefetched_resumes": self.prefetched_resumes,
+            "resume_stall_ticks": self.resume_stalls,
+        }
+
+    def phase_stats(self) -> dict:
+        """Per-tick phase breakdown (paged engines only).  ``device_s`` is
+        the jit'd step through logits materialization; ``host_s`` is the
+        rest of the tick (admission, staging, COW, swap bookkeeping).
+        One jit'd call cannot be split on-device, so commit time is
+        reported as a group count — ``commit_groups`` × the standalone
+        commit microbench's µs/group (bench_serving's ``commit_fusion``
+        entry) estimates it; attend is the device remainder."""
+        if not self.paged:
+            return {}
+        return {
+            "ticks": self.ticks,
+            "device_s": float(sum(self.tick_times)),
+            "host_s": float(sum(self.tick_host_times)),
+            "commit_groups": int(sum(self.tick_commit_groups)),
+            "commit_groups_per_tick": (
+                float(sum(self.tick_commit_groups)) / max(1, self.ticks)),
         }
 
     # ------------------------------------------------------ paged plumbing
@@ -976,6 +1079,7 @@ class ServingEngine:
         """One fused tick: every mid-prompt slot consumes its next chunk
         AND every decode-ready slot emits a token, in a single jit'd
         ``model.serve_step`` call."""
+        h0 = time.perf_counter()
         C = self.chunk
         toks = np.zeros((self.slots, C), np.int32)
         nv = np.zeros(self.slots, np.int32)
@@ -1003,22 +1107,32 @@ class ServingEngine:
         dec = [i for i in dec if self.active[i] is not None]
         dec_act = np.zeros(self.slots, bool)
         dec_act[dec] = True
+        committed = {i: int(nv[i]) for i in range(self.slots) if nv[i]}
+        committed.update({i: 1 for i in dec})
+        self.tick_commit_groups.append(self._count_commit_groups(committed))
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._serve(
             self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv),
             jnp.asarray(self._next_tok), jnp.asarray(dec_act))
+        # overlap: dispatch the resume candidate's host→device copies
+        # before blocking on this tick's logits
+        self._prefetch_resume()
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        self.tick_times.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.tick_times.append(t1 - t0)
         self.ticks += 1
         now = time.time()
         done += self._postprocess_chunk(nv, nxt, now)
         done += self._postprocess_decode(dec, nxt, now)
+        self.tick_host_times.append(
+            (t0 - h0) + (time.perf_counter() - t1))
         return done
 
     def _step_prefill_chunk(self) -> list[Request]:
         """All mid-prompt slots consume their next chunk in one fused call
         (the alternating baseline's prefill tick)."""
+        h0 = time.perf_counter()
         C = self.chunk
         toks = np.zeros((self.slots, C), np.int32)
         nv = np.zeros(self.slots, np.int32)
@@ -1036,17 +1150,25 @@ class ServingEngine:
             if nv[i] and self.active[i] is None:
                 nv[i] = 0
                 toks[i] = 0
+        self.tick_commit_groups.append(self._count_commit_groups(
+            {i: int(nv[i]) for i in range(self.slots) if nv[i]}))
         self._sync_caches()
         t0 = time.perf_counter()
         logits, self.caches = self._chunk_fn(
             self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv))
+        self._prefetch_resume()
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        self.tick_times.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.tick_times.append(t1 - t0)
         self.ticks += 1
-        return self._postprocess_chunk(nv, nxt, time.time())
+        done = self._postprocess_chunk(nv, nxt, time.time())
+        self.tick_host_times.append(
+            (t0 - h0) + (time.perf_counter() - t1))
+        return done
 
     def _step_decode(self) -> list[Request]:
         """One decode tick for every slot with a completed prefill."""
+        h0 = time.perf_counter()
         dec, done = self._reserve_decode()
         if not dec:
             return done
@@ -1054,16 +1176,23 @@ class ServingEngine:
         dec = [i for i in dec if self.active[i] is not None]
         active = np.zeros(self.slots, bool)
         active[dec] = True
+        self.tick_commit_groups.append(
+            self._count_commit_groups({i: 1 for i in dec}))
         self._sync_caches()
         pos = jnp.asarray(self.alloc.lengths, jnp.int32)
         t0 = time.perf_counter()
         logits, self.caches = self._decode(
             self.params, jnp.asarray(self._next_tok), self.caches, pos,
             jnp.asarray(active))
+        self._prefetch_resume()
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        self.tick_times.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.tick_times.append(t1 - t0)
         self.ticks += 1
-        return done + self._postprocess_decode(dec, nxt, time.time())
+        done = done + self._postprocess_decode(dec, nxt, time.time())
+        self.tick_host_times.append(
+            (t0 - h0) + (time.perf_counter() - t1))
+        return done
 
     def _run_paged(self, max_ticks: int) -> list[Request]:
         """Fused stepping: one jit'd call per tick.  Ticks with any
@@ -1174,7 +1303,8 @@ class ServingEngine:
     # ----------------------------------------------------------- metrics
 
     @staticmethod
-    def summarize(reqs: list[Request]) -> dict:
+    def summarize(reqs: list[Request],
+                  engine: Optional["ServingEngine"] = None) -> dict:
         if not reqs:
             return {}
         ttft = [r.t_first - r.t_admit for r in reqs if r.t_first]
@@ -1186,7 +1316,7 @@ class ServingEngine:
                 and len(r.output) > 1]
         toks = sum(len(r.output) for r in reqs)
         span = max(r.t_done for r in reqs) - min(r.t_admit for r in reqs)
-        return {
+        out = {
             "requests": len(reqs),
             "tokens": toks,
             "throughput_tok_s": toks / max(span, 1e-9),
@@ -1196,3 +1326,8 @@ class ServingEngine:
             "tpot_p99_s": float(np.percentile(tpot, 99)) if tpot else None,
             "latency_p50_s": float(np.median(lat)) if lat else None,
         }
+        # pass the engine to fold in its per-tick phase breakdown (host vs
+        # device time, committed group counts) — see ``phase_stats``
+        if engine is not None:
+            out["phases"] = engine.phase_stats()
+        return out

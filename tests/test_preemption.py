@@ -269,3 +269,79 @@ def test_alternating_engine_preemption(small_model, mode):
     eng, got = drive(num_blocks=9, preemption_mode=mode)
     assert got == base, mode
     assert eng.preemptions >= 1
+
+
+def test_swap_ahead_streams_identical(small_model):
+    """Swap-ahead resume (FIFO-head H2D prefetch during the prior tick's
+    compute) is pure scheduling: streams stay bit-identical to both the
+    unpressured engine and the synchronous-swap engine, ≥ 1 resume
+    consumes a prefetched payload, and stall ticks drop accordingly."""
+    cfg, model, params = small_model
+    reqs = _mixed_reqs(cfg, [48, 40, 56, 48], [12, 10, 8, 12], seed=1)
+    _, base = _drive(model, params, reqs)
+    sync_eng, sync = _drive(model, params, reqs, num_blocks=9, mode="swap")
+    eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                        dtype=jnp.float32, block_tokens=8, num_blocks=9,
+                        preemption_mode="swap", swap_ahead=True)
+    for rid, prompt, max_new in reqs:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    got = {r.rid: r.output for r in eng.run()}
+    assert got == base and sync == base
+    st = eng.preempt_stats()
+    assert st["swap_ahead"] and st["swap_resumes"] >= 1
+    # every synchronous resume stalls; prefetch hits convert stalls
+    sync_st = sync_eng.preempt_stats()
+    assert sync_st["resume_stall_ticks"] == sync_st["swap_resumes"]
+    assert sync_st["prefetched_resumes"] == 0
+    assert st["prefetched_resumes"] >= 1
+    assert (st["prefetched_resumes"] + st["resume_stall_ticks"]
+            == st["swap_resumes"])
+    assert st["resume_stall_ticks"] < sync_st["resume_stall_ticks"] or (
+        sync_st["swap_resumes"] <= st["prefetched_resumes"])
+    # accounting still round-trips through pop (peek must not touch it)
+    assert st["swap_out_bytes"] == st["swap_in_bytes"] > 0
+    assert len(eng.swap) == 0 and not eng._prefetch
+    assert all(r is None for r in eng.active) and not eng.preempted
+
+
+def test_swap_ahead_requires_swap_mode(small_model):
+    """Prefetch needs a parked host payload: recompute mode has none, and
+    the legacy static engine has no pool at all."""
+    cfg, model, params = small_model
+    with pytest.raises(ValueError, match="swap_ahead"):
+        ServingEngine(model, params, slots=1, max_tokens=64,
+                      dtype=jnp.float32, preemption_mode="recompute",
+                      swap_ahead=True)
+    with pytest.raises(ValueError, match="swap_ahead"):
+        ServingEngine(model, params, slots=1, max_tokens=64,
+                      dtype=jnp.float32, swap_ahead=True)
+    mcfg = reduced(get_config("mamba2-370m"))
+    mmodel = Model(mcfg)
+    mparams = mmodel.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="swap_ahead"):
+        ServingEngine(mmodel, mparams, slots=1, max_tokens=64,
+                      prompt_len=16, dtype=jnp.float32, swap_ahead=True)
+
+
+def test_fused_commit_engine_streams_identical(small_model):
+    """The fused quantize-commit kernel on the serving write path: streams
+    bit-identical to the jnp-commit engine, including under swap pressure
+    with swap-ahead on (kernel + prefetch compose)."""
+    cfg, model, params = small_model
+    reqs = _mixed_reqs(cfg, [48, 40, 56], [10, 8, 10], seed=11)
+
+    def drive(**kw):
+        eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                            dtype=jnp.float32, block_tokens=8, **kw)
+        for rid, prompt, max_new in reqs:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new))
+        return eng, {r.rid: r.output for r in eng.run()}
+
+    _, base = drive()
+    _, fc = drive(fused_commit=True)
+    assert fc == base
+    eng, fc_press = drive(fused_commit=True, num_blocks=9,
+                          preemption_mode="swap", swap_ahead=True)
+    assert fc_press == base
+    assert eng.preemptions >= 1

@@ -100,3 +100,48 @@ def test_quantize_shapes_per_channel():
     q = quantize(x, QuantSpec(bits=1, group=32, mode="per_token"))
     assert q.codes.shape == (2, 4, 128, 8)     # 64 ch · 1/8
     assert q.scale.shape == (2, 4, 128, 2)     # 64/32 groups
+
+
+@pytest.mark.parametrize("bits,bad_group", [(1, 4), (1, 12), (2, 2), (4, 1)])
+def test_spec_rejects_group_pack_misalignment(bits, bad_group):
+    """Groups must pack into whole bytes: a 1-bit group of 4 would leave
+    packed bytes straddling group boundaries.  Must fail at spec
+    construction with a clear message, not deep inside a reshape."""
+    with pytest.raises(ValueError, match="pack factor"):
+        QuantSpec(bits=bits, group=bad_group)
+
+
+@pytest.mark.parametrize("bits,group", [(1, 8), (1, 16), (2, 2), (4, 1),
+                                        (8, 1), (2, 6)])
+def test_spec_accepts_pack_aligned_groups(bits, group):
+    if group % (8 // bits):
+        pytest.skip("misaligned combo covered by the rejection test")
+    spec = QuantSpec(bits=bits, group=group)
+    assert spec.pack_factor == 8 // bits
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_pack_bits_misaligned_axis_raises(bits):
+    factor = 8 // bits
+    codes = jnp.zeros((3, factor + 1), jnp.uint8)
+    with pytest.raises(ValueError, match="pack factor"):
+        pack_bits(codes, bits, axis=-1)
+
+
+@pytest.mark.parametrize("bits,group", [(1, 8), (1, 24), (2, 4), (4, 2)])
+def test_minimal_group_roundtrip(bits, group):
+    """Round-trips at the smallest pack-aligned group sizes — the 1-bit
+    edge the commit kernel packs one byte row per group from."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1, 2, group * 3, 16)).astype(np.float32))
+    spec = QuantSpec(bits=bits, group=group, mode="per_channel")
+    q = quantize(x, spec)
+    assert q.codes.shape[-2] == group * 3 * bits // 8
+    codes = unpack_bits(q.codes, bits, axis=-2)
+    repacked = pack_bits(codes, bits, axis=-2)
+    np.testing.assert_array_equal(np.asarray(repacked), np.asarray(q.codes))
+    xh = dequantize(q, jnp.float32)
+    assert xh.shape == x.shape
+    # requantize fixed point at the tight group size
+    q2 = quantize(xh, spec)
+    np.testing.assert_array_equal(np.asarray(q2.codes), np.asarray(q.codes))

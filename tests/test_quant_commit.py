@@ -1,0 +1,162 @@
+"""Differential suite: fused quantize-commit kernel vs the jnp scatter chain.
+
+Every test drives one PagedKVCache schedule twice — ``fused=False`` (the
+reference jnp commit in ``_commit_groups``) and ``fused=True`` (the Pallas
+``quant_commit`` kernel, interpret mode on CPU) — and asserts every
+committed pool leaf, residual ring, and length vector is **bit-identical**
+(``assert_array_equal``, no tolerance).  The fused path must change where
+the commit runs, never a single packed bit.
+
+Covers: all {1,2,4,8}² K/V bit mixes, fp (0-bit) sides, GQA head counts,
+partial final chunks (0 < n_valid < C), commit_base-floored shared-prefix
+slots, and the ``v_slice_offset`` latent (MLA) layout.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paged import BlockAllocator, PagedKVCache
+
+jax.config.update("jax_platform_name", "cpu")
+
+LEAVES = ("k_codes", "k_scale", "k_zero", "v_codes", "v_scale", "v_zero",
+          "k_fp", "v_fp", "resid_k", "resid_v", "lengths", "commit_base")
+
+
+def _drive(fused, *, kb, vb, group=8, residual=16, BT=16, T=128, H=2, D=16,
+           lens=(40, 23, 57), vso=-1, appends=True, commit_base=None,
+           seed=0):
+    """Chunked prefill (to the group-floored prefix of each length), then —
+    optionally — token-by-token appends for the remainder.  Exercises both
+    ``write_chunk`` and ``append`` commit paths under mixed per-slot
+    schedules, exactly as the serving engine drives them."""
+    rng = np.random.default_rng(seed)
+    S = len(lens)
+    k = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, H, T, D)).astype(np.float32))
+    alloc = BlockAllocator(S, num_blocks=S * (T // BT), max_blocks=T // BT,
+                           block_tokens=BT, residual=residual, group=group)
+    cache = PagedKVCache.init(S, H, D, num_blocks=S * (T // BT),
+                              block_tokens=BT, max_tokens=T, k_bits=kb,
+                              v_bits=vb, group=group, residual=residual,
+                              dtype=jnp.float32, scale_dtype=jnp.float32,
+                              v_slice_offset=vso)
+    cb = np.zeros(S, np.int32) if commit_base is None \
+        else np.asarray(commit_base, np.int32)
+    C = residual + group
+    wc = jax.jit(lambda c, kc, vc, n: c.write_chunk(kc, vc, n, fused=fused))
+    ap = jax.jit(lambda c, kt, vt, a: c.append(kt, vt, a, fused=fused))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, C), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, C), (0, 0)))
+    pre = [max(0, (L - 8) // group * group) for L in lens] if appends \
+        else list(lens)
+    for i in range(-(-max(pre) // C)):
+        nv = np.array([min(max(L - i * C, 0), C) for L in pre], np.int32)
+        for s in range(S):
+            if nv[s]:
+                alloc.ensure(s, i * C + int(nv[s]))
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths),
+                                 commit_base=cb)
+        cache = wc(cache, kp[:, :, i * C:(i + 1) * C],
+                   vp[:, :, i * C:(i + 1) * C], jnp.asarray(nv))
+    if appends:
+        for t in range(max(L - p for L, p in zip(lens, pre))):
+            active = np.array([pre[s] + t < lens[s] for s in range(S)])
+            for s in range(S):
+                if active[s]:
+                    alloc.ensure(s, pre[s] + t + 2)
+            cache = cache.with_pages(alloc.page_table,
+                                     np.asarray(cache.lengths),
+                                     commit_base=cb)
+            pos = [min(pre[s] + t, T - 1) for s in range(S)]
+            kt = jnp.stack([k[s, :, pos[s]:pos[s] + 1] for s in range(S)])
+            vt = jnp.stack([v[s, :, pos[s]:pos[s] + 1] for s in range(S)])
+            cache = ap(cache, kt, vt, jnp.asarray(active))
+    return cache
+
+
+def _assert_identical(ref, got, label=""):
+    for name in LEAVES:
+        x, y = getattr(ref, name), getattr(got, name)
+        if x is None:
+            assert y is None, f"{label} {name}: fused grew a leaf"
+            continue
+        xa, ya = np.asarray(x), np.asarray(y)
+        if name in ("resid_k", "resid_v", "lengths", "commit_base"):
+            np.testing.assert_array_equal(xa, ya, err_msg=f"{label} {name}")
+        else:
+            # pool leaves: skip the reserved scratch block 0 — it is a
+            # masked-write dumping ground, not committed state
+            np.testing.assert_array_equal(xa[1:], ya[1:],
+                                          err_msg=f"{label} {name}")
+
+
+BIT_MIXES = list(itertools.product((1, 2, 4, 8), (1, 2, 4, 8)))
+
+
+@pytest.mark.parametrize("kb,vb", BIT_MIXES)
+def test_bit_mix_parity(kb, vb):
+    """All 16 asymmetric K/V bit mixes, mixed chunk+append schedule."""
+    ref = _drive(False, kb=kb, vb=vb)
+    got = _drive(True, kb=kb, vb=vb)
+    _assert_identical(ref, got, f"kb={kb} vb={vb}")
+
+
+@pytest.mark.parametrize("kb,vb", [(0, 0), (2, 0), (0, 4), (0, 1)])
+def test_fp_side_parity(kb, vb):
+    """0-bit sides store fp rows: the kernel must pass them through
+    unquantized, byte-for-byte."""
+    ref = _drive(False, kb=kb, vb=vb)
+    got = _drive(True, kb=kb, vb=vb)
+    _assert_identical(ref, got, f"kb={kb} vb={vb}")
+
+
+@pytest.mark.parametrize("H", [1, 4])
+def test_gqa_head_counts(H):
+    """KV head counts from MQA (1) to grouped (4) — the kernel grid's head
+    dimension."""
+    ref = _drive(False, kb=2, vb=1, H=H)
+    got = _drive(True, kb=2, vb=1, H=H)
+    _assert_identical(ref, got, f"H={H}")
+
+
+def test_partial_final_chunks():
+    """Prompt lengths that leave 0 < n_valid < C in the last chunk: the
+    masked tail must neither commit garbage nor skip real groups."""
+    for lens in [(25, 1, 47), (24, 30, 5)]:
+        ref = _drive(False, kb=1, vb=2, lens=lens, appends=False)
+        got = _drive(True, kb=1, vb=2, lens=lens, appends=False)
+        _assert_identical(ref, got, f"lens={lens}")
+
+
+def test_commit_base_floor():
+    """Shared-prefix slots: commits below the slot's ``commit_base`` floor
+    must not rewrite shared blocks on either path."""
+    cb = [16, 0, 24]
+    ref = _drive(False, kb=2, vb=2, commit_base=cb)
+    got = _drive(True, kb=2, vb=2, commit_base=cb)
+    _assert_identical(ref, got, f"commit_base={cb}")
+
+
+@pytest.mark.parametrize("kb", [1, 2])
+def test_v_slice_offset_latent(kb):
+    """MLA latent layout: V lives inside the K store past the slice offset
+    (no V pools, no V ring) — the kernel sees a K-only commit."""
+    ref = _drive(False, kb=kb, vb=kb, vso=8)
+    got = _drive(True, kb=kb, vb=kb, vso=8)
+    _assert_identical(ref, got, f"vso=8 kb={kb}")
+
+
+def test_one_bit_single_byte_groups():
+    """group == pack factor at 1 bit: each group packs to exactly one byte
+    row — the tightest sub-byte layout the kernel supports."""
+    ref = _drive(False, kb=1, vb=1, group=8, residual=8, BT=8, T=64,
+                 lens=(20, 33))
+    got = _drive(True, kb=1, vb=1, group=8, residual=8, BT=8, T=64,
+                 lens=(20, 33))
+    _assert_identical(ref, got, "1-bit tight")
