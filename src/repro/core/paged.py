@@ -63,6 +63,13 @@ Allocator invariants:
 4. ``release``/``free_below`` drop references and zero page-table rows;
    a block is free-listed exactly when its count reaches zero.
 
+All four (plus swap byte conservation and commit-frontier monotonicity)
+are runtime-checkable: ``ServingEngine(debug=True)`` (or
+``ASYMKV_DEBUG=1``) installs :class:`repro.core.sanitizer.CacheSanitizer`,
+which mirrors every allocator/swap transition into a shadow model and
+raises a structured ``SanitizerError`` on the first divergence — see
+``docs/static_analysis.md``.
+
 Mutation entry points (all jit-safe, fixed shapes):
 
 * :meth:`PagedKVCache.append` — one decode token per *active* slot, with

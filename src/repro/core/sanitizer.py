@@ -1,0 +1,523 @@
+"""Shadow-state sanitizer for the paged serving stack.
+
+``CacheSanitizer`` is the runtime counterpart of ``tools/asymlint``: where
+the linter checks jit-boundary contracts statically, the sanitizer checks
+the **block state machine** (docs/serving.md) dynamically.  Enabled via
+``ServingEngine(debug=True)`` or ``ASYMKV_DEBUG=1``, it wraps every
+mutating method of the engine's :class:`~repro.core.paged.BlockAllocator`
+instances and its :class:`~repro.core.paged.SwapPool`, mirrors each
+transition into a pure-Python shadow model, and asserts after every call
+that the real structures still agree with the model and with each other:
+
+* **refcount conservation** — for every block, holders across slot page
+  tables plus prefix-trie pins equal ``_refs[block]``;
+* **page-table validity** — entries only reference live (refcount > 0)
+  non-free blocks; the scratch block 0 is never mapped and never
+  allocated;
+* **COW read-only invariant** — no commit write this tick targets a
+  refcount > 1 block (checked against the engine's ``planned`` dict right
+  after ``_cow_pass``, so a skipped or broken pass is caught *before* the
+  corrupting device write launches);
+* **commit monotonicity** — ``commit_base <= commit_length <= length``
+  per occupied slot, and a slot's committed frontier never moves
+  backwards while it serves the same request;
+* **swap conservation** — ``resident_bytes`` equals the independently
+  recomputed sum of parked payloads, and
+  ``bytes_out − bytes_in == resident_bytes`` across park/peek/pop;
+* **restore placement** — swap-in maps fresh refcount-1 blocks at exactly
+  the page-table indices recorded at swap-out, nowhere else.
+
+Violations raise :class:`SanitizerError` naming the block, slot, and
+transition — the paged-cache analogue of a heap sanitizer report.  The
+checker's cost is tracked (``transitions``, ``overhead_s``) and surfaced
+through ``ServingEngine.phase_stats()["sanitizer"]``.
+
+The shadow is deliberately *semantic*, not a copy of the allocator's
+code: each wrapper re-derives the expected post-state from the documented
+transition contract, so a direct corruption of ``_refs``/``page_table``/
+``_free`` (or an implementation bug that diverges from the contract) is
+caught at the next transition or tick audit — see
+``tests/test_sanitizer.py`` for the fault-injection matrix.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["SanitizerError", "CacheSanitizer"]
+
+
+class SanitizerError(AssertionError):
+    """A block-state-machine invariant violation.
+
+    Structured fields: ``transition`` (the allocator/swap call or audit
+    that exposed it), ``block``, ``slot``, ``mapping`` (the block mapping
+    key — ``"global"`` or a windowed stage key), and ``detail``.
+    """
+
+    def __init__(self, transition: str, detail: str, *,
+                 block: Optional[int] = None, slot: Optional[int] = None,
+                 mapping: Optional[str] = None):
+        self.transition = transition
+        self.block = block
+        self.slot = slot
+        self.mapping = mapping
+        self.detail = detail
+        loc = []
+        if mapping is not None:
+            loc.append(f"mapping={mapping!r}")
+        if slot is not None:
+            loc.append(f"slot={slot}")
+        if block is not None:
+            loc.append(f"block={block}")
+        where = (" [" + ", ".join(loc) + "]") if loc else ""
+        super().__init__(f"sanitizer: transition={transition!r}{where}: "
+                         f"{detail}")
+
+
+class _ShadowAlloc:
+    """Pure-Python model of one BlockAllocator's state."""
+
+    def __init__(self, alloc):
+        self.free = deque(int(b) for b in alloc._free)
+        self.refs = np.array(alloc._refs, np.int64)
+        self.table = np.array(alloc.page_table, np.int64)
+        self.lengths = np.array(alloc.lengths, np.int64)
+        self.min_block = np.array(alloc._min_block, np.int64)
+
+
+class CacheSanitizer:
+    """Instruments a paged ``ServingEngine``; see the module docstring."""
+
+    def __init__(self, engine):
+        if not getattr(engine, "paged", False):
+            raise ValueError("CacheSanitizer requires a paged engine")
+        self.engine = engine
+        self.transitions = 0
+        self.ticks_audited = 0
+        self.overhead_s = 0.0
+        self._shadows: Dict[str, _ShadowAlloc] = {}
+        # re-entrancy depth: cow/ensure/free_below/release call the
+        # (wrapped) _alloc/release_block internally — inner audits run
+        # mid-transition, so they check refcounts and the free list only;
+        # the outer call audits the full state once it completes.
+        self._depth = 0
+        # ordered ids handed out by _alloc, so an ensure() that dies
+        # mid-loop (pool exhausted) can replay its partial table writes
+        # into the shadow before the engine's eviction/retry path runs.
+        self._alloc_log: list = []
+        self._swap_sizes: Dict[int, int] = {}
+        self._swap_out = 0
+        self._swap_in = 0
+        # committed-frontier monotonicity: slot -> (request id, frontier)
+        self._commit_marks: Dict[int, tuple] = {}
+        for key, alloc in engine._mappings():
+            self._shadows[key] = _ShadowAlloc(alloc)
+            self._wrap_alloc(key, alloc)
+        self._wrap_swap(engine.swap)
+
+    # ------------------------------------------------------------ helpers
+
+    def _fail(self, transition, detail, **loc):
+        raise SanitizerError(transition, detail, **loc)
+
+    def stats(self) -> dict:
+        return {"transitions": self.transitions,
+                "ticks_audited": self.ticks_audited,
+                "overhead_s": round(self.overhead_s, 6)}
+
+    # --------------------------------------------------- allocator shadow
+
+    def _wrap_alloc(self, key: str, alloc):
+        sh = self._shadows[key]
+        san = self
+
+        def wrap(name, post, on_error=None):
+            orig = getattr(alloc, name)
+
+            def wrapped(*args, **kwargs):
+                mark = len(san._alloc_log)
+                san._depth += 1
+                try:
+                    out = orig(*args, **kwargs)
+                except BaseException:
+                    san._depth -= 1
+                    if on_error is not None:
+                        on_error(san._alloc_log[mark:], *args, **kwargs)
+                    raise
+                san._depth -= 1
+                t0 = time.perf_counter()
+                post(out, *args, **kwargs)
+                san._audit_alloc(name, key, alloc, sh)
+                san.transitions += 1
+                san.overhead_s += time.perf_counter() - t0
+                return out
+
+            wrapped.__name__ = f"sanitized_{name}"
+            setattr(alloc, name, wrapped)
+
+        def post_alloc(out):
+            if not sh.free:
+                san._fail("_alloc", "allocation from an empty shadow free "
+                          "list", mapping=key, block=out)
+            expect = sh.free.popleft()
+            if out != expect:
+                san._fail("_alloc", f"allocator handed out block {out} "
+                          f"but the free-list head is {expect}",
+                          mapping=key, block=out)
+            if out == 0:
+                san._fail("_alloc", "scratch block 0 must never be "
+                          "allocated", mapping=key, block=0)
+            if sh.refs[out] != 0:
+                san._fail("_alloc", f"freshly allocated block {out} had "
+                          f"shadow refcount {int(sh.refs[out])} (expected "
+                          f"0: free means no holders)", mapping=key,
+                          block=out)
+            sh.refs[out] = 1
+            san._alloc_log.append(int(out))
+
+        def post_acquire(_, block):
+            if sh.refs[block] <= 0:
+                san._fail("acquire", f"acquire of block {block} with "
+                          f"shadow refcount {int(sh.refs[block])}",
+                          mapping=key, block=int(block))
+            sh.refs[block] += 1
+
+        def post_release_block(freed, block):
+            sh.refs[block] -= 1
+            if sh.refs[block] < 0:
+                san._fail("release_block", f"refcount of block {block} "
+                          f"went negative", mapping=key, block=int(block))
+            if (sh.refs[block] == 0) != bool(freed):
+                san._fail("release_block", f"block {block} freed={freed} "
+                          f"but shadow refcount is {int(sh.refs[block])}",
+                          mapping=key, block=int(block))
+            if sh.refs[block] == 0:
+                sh.free.append(int(block))
+
+        def post_share(_, slot, idx, block):
+            if sh.table[slot, idx] != 0:
+                san._fail("share", f"slot {slot} idx {idx} was already "
+                          f"mapped to {int(sh.table[slot, idx])}",
+                          mapping=key, slot=slot, block=int(block))
+            sh.table[slot, idx] = block   # acquire already bumped refs
+
+        def post_cow(out, slot, idx):
+            src, dst = out
+            if sh.table[slot, idx] != dst:
+                # _alloc/release_block wrappers ran inside cow; the table
+                # write is cow's own effect
+                sh.table[slot, idx] = dst
+            if sh.refs[dst] != 1:
+                san._fail("cow", f"COW destination {dst} has shadow "
+                          f"refcount {int(sh.refs[dst])} (must be a "
+                          f"private refcount-1 block)", mapping=key,
+                          slot=slot, block=dst)
+
+        def post_restore(newly, slot, indices, length, min_block=0):
+            indices = [int(i) for i in indices]
+            row = np.zeros_like(sh.table[slot])
+            for i, b in zip(indices, newly):
+                row[i] = b
+            real = np.asarray(alloc.page_table[slot], np.int64)
+            if not np.array_equal(real, row):
+                bad = int(np.nonzero(real != row)[0][0])
+                san._fail("restore", f"swap-in of slot {slot} mapped "
+                          f"block {int(real[bad])} at page-table index "
+                          f"{bad}, but the recorded swap-out indices "
+                          f"{indices} require {int(row[bad])} there",
+                          mapping=key, slot=slot, block=int(real[bad]))
+            sh.table[slot] = row
+            sh.lengths[slot] = length
+            sh.min_block[slot] = min_block
+
+        def _replay_ensure(ids, slot, new_len):
+            # ensure() fills unmapped rows frontier→need in order; replay
+            # the same walk with the ids _alloc actually handed out (on
+            # the success path ids == the returned `newly`; on a
+            # pool-exhausted exception it is the partial prefix, keeping
+            # the shadow aligned for the engine's evict-and-retry).
+            it = iter(ids)
+            need = alloc.blocks_for_len(new_len)
+            for i in range(int(sh.min_block[slot]), need):
+                if sh.table[slot, i] == 0:
+                    b = next(it, None)
+                    if b is None:
+                        break
+                    sh.table[slot, i] = b
+
+        def post_ensure(newly, slot, new_len):
+            _replay_ensure(newly, slot, new_len)
+
+        def post_advance(_, slot, n_tokens):
+            sh.lengths[slot] += n_tokens
+
+        def post_free_below(_, slot, lo_token):
+            nb = min(max(0, lo_token // alloc.block_tokens),
+                     alloc.max_blocks)
+            sh.table[slot, int(sh.min_block[slot]):nb] = 0
+            sh.min_block[slot] = max(int(sh.min_block[slot]), nb)
+
+        def post_release(_, slot):
+            sh.table[slot] = 0
+            sh.lengths[slot] = 0
+            sh.min_block[slot] = 0
+
+        wrap("_alloc", post_alloc)
+        wrap("acquire", post_acquire)
+        wrap("release_block", post_release_block)
+        wrap("share", post_share)
+        wrap("cow", post_cow)
+        wrap("restore", post_restore)
+        wrap("ensure", post_ensure, on_error=_replay_ensure)
+        wrap("advance", post_advance)
+        wrap("free_below", post_free_below)
+        wrap("release", post_release)
+
+    def _audit_alloc(self, transition: str, key: str, alloc, sh) -> None:
+        """Shadow-vs-real comparison plus structural invariants.
+
+        Mid-transition (``_depth > 0``: an inner ``_alloc``/
+        ``release_block`` inside cow/ensure/free_below/release) only the
+        refcounts and the free list are compared — the outer call's table
+        writes are legitimately half-applied until it returns."""
+        refs = np.asarray(alloc._refs, np.int64)
+        if not np.array_equal(refs, sh.refs):
+            b = int(np.nonzero(refs != sh.refs)[0][0])
+            self._fail(transition, f"refcount of block {b} is "
+                       f"{int(refs[b])} but the shadow model says "
+                       f"{int(sh.refs[b])}", mapping=key, block=b)
+        if list(alloc._free) != list(sh.free):
+            self._fail(transition, f"free list diverged from the shadow "
+                       f"model ({len(alloc._free)} vs {len(sh.free)} "
+                       f"entries)", mapping=key)
+        if self._depth > 0:
+            return
+        table = np.asarray(alloc.page_table, np.int64)
+        if not np.array_equal(table, sh.table):
+            s, i = (int(x[0]) for x in np.nonzero(table != sh.table))
+            self._fail(transition, f"page-table entry [{s}, {i}] is "
+                       f"{int(table[s, i])} but the shadow model says "
+                       f"{int(sh.table[s, i])}", mapping=key, slot=s,
+                       block=int(table[s, i]))
+        if not np.array_equal(np.asarray(alloc.lengths, np.int64),
+                              sh.lengths):
+            s = int(np.nonzero(
+                np.asarray(alloc.lengths, np.int64) != sh.lengths)[0][0])
+            self._fail(transition, f"lengths[{s}] is "
+                       f"{int(alloc.lengths[s])} but the shadow model "
+                       f"says {int(sh.lengths[s])}", mapping=key, slot=s)
+        if not np.array_equal(np.asarray(alloc._min_block, np.int64),
+                              sh.min_block):
+            s = int(np.nonzero(np.asarray(alloc._min_block, np.int64)
+                               != sh.min_block)[0][0])
+            self._fail(transition, f"windowed freeing frontier of slot "
+                       f"{s} is {int(alloc._min_block[s])} but the "
+                       f"shadow model says {int(sh.min_block[s])}",
+                       mapping=key, slot=s)
+        # structural invariants on the (now verified) state
+        if refs[0] != 0:
+            self._fail(transition, "scratch block 0 has a nonzero "
+                       "refcount", mapping=key, block=0)
+        if 0 in sh.free:
+            self._fail(transition, "scratch block 0 entered the free "
+                       "list", mapping=key, block=0)
+        live = set(np.nonzero(refs > 0)[0].tolist())
+        free = set(sh.free)
+        if live & free:
+            b = sorted(live & free)[0]
+            self._fail(transition, f"block {b} is simultaneously live "
+                       f"(refcount {int(refs[b])}) and free-listed",
+                       mapping=key, block=b)
+        mapped = set(int(b) for b in table.ravel() if b > 0)
+        dead = mapped - live
+        if dead:
+            b = sorted(dead)[0]
+            s = int(np.nonzero((table == b).any(axis=1))[0][0])
+            self._fail(transition, f"page table references block {b} "
+                       f"with refcount 0 (free/unallocated)", mapping=key,
+                       slot=s, block=b)
+
+    # --------------------------------------------------------- swap shadow
+
+    def _wrap_swap(self, pool):
+        san = self
+
+        def wrap(name, post):
+            orig = getattr(pool, name)
+
+            def wrapped(*args, **kwargs):
+                out = orig(*args, **kwargs)
+                t0 = time.perf_counter()
+                post(out, *args, **kwargs)
+                san._audit_swap(name, pool)
+                san.transitions += 1
+                san.overhead_s += time.perf_counter() - t0
+                return out
+
+            wrapped.__name__ = f"sanitized_{name}"
+            setattr(pool, name, wrapped)
+
+        def nbytes(payload):
+            return sum(int(a.nbytes) for stage in payload.values()
+                       for a in stage.values())
+
+        def post_put(n, rid, payload):
+            expect = nbytes(payload)
+            if n != expect:
+                san._fail("swap.put", f"request {rid} parked {n} bytes "
+                          f"but the payload holds {expect}")
+            san._swap_sizes[rid] = expect
+            san._swap_out += expect
+
+        def post_peek(out, rid):
+            if rid not in san._swap_sizes:
+                san._fail("swap.peek", f"peek of request {rid} which the "
+                          f"shadow model does not hold")
+
+        def post_pop(out, rid):
+            n = san._swap_sizes.pop(rid, None)
+            if n is None:
+                san._fail("swap.pop", f"pop of request {rid} which the "
+                          f"shadow model does not hold")
+            san._swap_in += n
+
+        wrap("put", post_put)
+        wrap("peek", post_peek)
+        wrap("pop", post_pop)
+
+    def _audit_swap(self, transition: str, pool) -> None:
+        resident = sum(self._swap_sizes.values())
+        if pool.resident_bytes != resident:
+            self._fail(transition, f"SwapPool.resident_bytes is "
+                       f"{pool.resident_bytes} but parked payloads sum to "
+                       f"{resident} — swap bytes are not conserved")
+        if pool.bytes_out != self._swap_out:
+            self._fail(transition, f"SwapPool.bytes_out is "
+                       f"{pool.bytes_out}, shadow counted "
+                       f"{self._swap_out}")
+        if pool.bytes_in != self._swap_in:
+            self._fail(transition, f"SwapPool.bytes_in is "
+                       f"{pool.bytes_in}, shadow counted {self._swap_in}")
+        if pool.bytes_out - pool.bytes_in != pool.resident_bytes:
+            self._fail(transition, "bytes_out − bytes_in != "
+                       "resident_bytes")
+        if pool.peak_resident_bytes < pool.resident_bytes:
+            self._fail(transition, "peak_resident_bytes below "
+                       "resident_bytes")
+
+    # ------------------------------------------------------- engine hooks
+
+    def check_commit_targets(self, planned: dict) -> None:
+        """The COW read-only invariant, checked *after* ``_cow_pass`` and
+        *before* the step launches: every block the coming commits will
+        write must be private (refcount 1) and mapped."""
+        t0 = time.perf_counter()
+        eng = self.engine
+        BT = eng.block_tokens
+        for key, alloc in eng._mappings():
+            for i, n_new in planned.items():
+                if eng.active[i] is None:
+                    continue
+                base = int(eng._commit_base[i])
+                old_c = max(eng._cl(int(alloc.lengths[i])), base)
+                new_c = max(eng._cl(int(alloc.lengths[i]) + n_new), base)
+                if new_c <= old_c:
+                    continue
+                for bi in range(old_c // BT, (new_c - 1) // BT + 1):
+                    blk = int(alloc.page_table[i, bi])
+                    if blk == 0:
+                        if bi >= int(alloc._min_block[i]):
+                            self._fail(
+                                "commit", f"slot {i} commits tokens into "
+                                f"unmapped page-table index {bi} (scratch "
+                                f"write outside the windowed frontier)",
+                                mapping=key, slot=i, block=0)
+                        continue  # below the windowed freeing frontier
+                    if alloc.ref(blk) > 1:
+                        self._fail(
+                            "commit", f"commit into block {blk} with "
+                            f"refcount {alloc.ref(blk)} — shared blocks "
+                            f"are read-only; _cow_pass must remap before "
+                            f"any write (COW invariant)", mapping=key,
+                            slot=i, block=blk)
+        self.transitions += 1
+        self.overhead_s += time.perf_counter() - t0
+
+    def _trie_pins(self) -> Dict[str, Dict[int, int]]:
+        """mapping key -> {block id: trie holder count}."""
+        pins: Dict[str, Dict[int, int]] = {k: {} for k in self._shadows}
+        trie = self.engine.trie
+        if trie is None:
+            return pins
+        stack = [trie.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is trie.root:
+                continue
+            for key, blk in node.blocks.items():
+                pins.setdefault(key, {})
+                pins[key][int(blk)] = pins[key].get(int(blk), 0) + 1
+        return pins
+
+    def audit_tick(self) -> None:
+        """Cross-structure audit, run once per tick (from
+        ``_sync_caches``, i.e. right before every jit'd step)."""
+        t0 = time.perf_counter()
+        eng = self.engine
+        pins = self._trie_pins()
+        for key, alloc in eng._mappings():
+            sh = self._shadows[key]
+            self._audit_alloc("tick-audit", key, alloc, sh)
+            refs = np.asarray(alloc._refs, np.int64)
+            counts = np.bincount(
+                np.asarray(alloc.page_table, np.int64).ravel(),
+                minlength=refs.size)[:refs.size]
+            counts[0] = 0    # page-table 0 = unmapped, not the scratch block
+            for blk, n in pins.get(key, {}).items():
+                if blk < refs.size:
+                    counts[blk] += n
+            if not np.array_equal(counts, refs):
+                b = int(np.nonzero(counts != refs)[0][0])
+                slots = np.nonzero(
+                    (np.asarray(alloc.page_table) == b).any(axis=1))[0]
+                s = int(slots[0]) if slots.size else None
+                self._fail(
+                    "tick-audit", f"refcount conservation broken for "
+                    f"block {b}: {int(refs[b])} recorded holders vs "
+                    f"{int(counts[b])} found (page-table rows "
+                    f"{slots.tolist()} + trie pins "
+                    f"{pins.get(key, {}).get(b, 0)})", mapping=key,
+                    block=b, slot=s)
+        # commit-frontier bounds and monotonicity per occupied slot
+        marks: Dict[int, tuple] = {}
+        for i, req in enumerate(eng.active):
+            if req is None:
+                continue
+            base = int(eng._commit_base[i])
+            length = int(eng.alloc.lengths[i])
+            commit = max(eng._cl(length), base)
+            if not (base <= commit <= max(length, base)):
+                self._fail("tick-audit", f"commit bounds broken: "
+                           f"commit_base {base} <= commit {commit} <= "
+                           f"length {length} fails", slot=i,
+                           mapping="global")
+            if base > length:
+                self._fail("tick-audit", f"commit_base {base} exceeds "
+                           f"length {length}", slot=i, mapping="global")
+            prev = self._commit_marks.get(i)
+            if prev is not None and prev[0] == req.rid \
+                    and commit < prev[1]:
+                self._fail("tick-audit", f"committed frontier moved "
+                           f"backwards for request {req.rid}: {prev[1]} "
+                           f"→ {commit}", slot=i, mapping="global")
+            marks[i] = (req.rid, commit)
+        self._commit_marks = marks
+        self._audit_swap("tick-audit", eng.swap)
+        self.ticks_audited += 1
+        self.overhead_s += time.perf_counter() - t0

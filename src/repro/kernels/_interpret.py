@@ -1,0 +1,24 @@
+"""Single home of the Pallas interpret-mode default.
+
+Every kernel entry point accepts ``interpret: Optional[bool] = None`` and
+resolves it here: ``None`` means "interpret off-TPU, compile on TPU", so
+the same call sites work in CPU tests and on real hardware without edits.
+Hardcoding ``interpret=True`` anywhere else is an ``asymlint``
+``interpret-hardcoded`` finding — it would silently pin kernels to the
+interpreter and block the ROADMAP TPU-validation item.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["resolve_interpret"]
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` → interpret unless running on TPU; bools pass through."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
+
 __all__ = ["asym_decode_attn", "asym_decode_attn_fused", "pick_block"]
 
 NEG_INF = -1e30
@@ -172,10 +174,11 @@ def asym_decode_attn(
     commit: jax.Array,   # [1] int32
     *,
     k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
-    block: int = 512, scale: float, interpret: bool = True,
+    block: int = 512, scale: float, interpret: bool | None = None,
 ):
     """Partial flash-decode stats over the committed quantized cache.
     Returns (m [B,H,r], l [B,H,r], acc [B,H,r,Dv]) in fp32."""
+    interpret = _resolve_interpret(interpret)
     B, H, r, D = q.shape
     T = v_codes.shape[2]
     v_group = v_group or group
@@ -299,7 +302,8 @@ def asym_decode_attn_fused(
     meta: jax.Array,     # [2] int32: (commit, length)
     *,
     k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
-    block: int = 512, window: int = 0, scale: float, interpret: bool = True,
+    block: int = 512, window: int = 0, scale: float,
+    interpret: bool | None = None,
 ):
     """Full fused decode attention: committed store + fp ring in ONE kernel.
 
@@ -308,6 +312,7 @@ def asym_decode_attn_fused(
     ``window = W > 0`` masks positions ``< length − W`` (sliding-window
     layers over ring-committed stores included); ``window = 0`` is global.
     """
+    interpret = _resolve_interpret(interpret)
     B, H, r, D = q.shape
     T = v_codes.shape[2]
     v_group = v_group or group

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
+
 __all__ = ["flash_prefill_kernel"]
 
 NEG_INF = -1e30
@@ -81,8 +83,10 @@ def flash_prefill_kernel(
     v: jax.Array,
     *,
     causal: bool = True, window=None, block_q: int = 512,
-    block_k: int = 512, scale: float | None = None, interpret: bool = True,
+    block_k: int = 512, scale: float | None = None,
+    interpret: bool | None = None,
 ):
+    interpret = _resolve_interpret(interpret)
     B, Hq, S, D = q.shape
     _, Hkv, Skv, _ = k.shape
     r = Hq // Hkv

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.kvcache import LayerKVCache
 from repro.core.paged import PagedKVCache
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
 from repro.kernels.asym_decode_attn import (asym_decode_attn,
                                             asym_decode_attn_fused)
 from repro.kernels.flash_prefill import flash_prefill_kernel
@@ -37,12 +38,6 @@ from repro.kernels.rtn_pack import rtn_pack
 __all__ = ["asym_decode_attention", "paged_asym_attention",
            "paged_asym_decode_attention", "kernel_supported",
            "rtn_pack", "flash_prefill_kernel", "fused_commit_groups"]
-
-
-def _resolve_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
 
 
 def kernel_supported(cache) -> bool:
@@ -71,6 +66,7 @@ def asym_decode_attention(
     r = Hq // Hkv
     scale = D ** -0.5
     qh = q.reshape(B, Hkv, r, D)
+    # asymlint: disable=tracer-branch (k_bits/v_slice_offset are pytree aux — concrete at trace time)
     assert kernel_supported(cache), \
         "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
     meta = jnp.stack([cache.commit_length(),
@@ -121,6 +117,7 @@ def paged_asym_attention(
     # scratch block there and folds the fp ring instead.
     pt_pad = jnp.pad(cache.page_table, ((0, 0), (0, 1)))
 
+    # asymlint: disable=tracer-branch (k_bits/v_slice_offset are pytree aux — concrete at trace time)
     assert kernel_supported(cache), \
         "kernel path covers quantized K+V caches (fp/MLA → jnp path)"
     out = paged_asym_attn(

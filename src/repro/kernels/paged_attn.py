@@ -52,8 +52,9 @@ to know ``r``.
 TPU notes: block sizes follow the pool's ``block_tokens`` (a multiple of
 the quant group); the two MXU matmuls run on the dequantized fp32 block in
 VMEM, so HBM traffic is ``bits/16`` of a bf16 cache — the paper's memory
-saving realized at the bandwidth-bound decode step.  On CPU run
-``interpret=True``.
+saving realized at the bandwidth-bound decode step.  The default
+``interpret=None`` resolves by backend (``kernels._interpret``):
+interpret mode on CPU, compiled on TPU.
 """
 
 from __future__ import annotations
@@ -63,6 +64,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
 
 from repro.kernels.asym_decode_attn import (NEG_INF, _accum_block,
                                             _dequant_k_block,
@@ -143,7 +146,7 @@ def paged_asym_attn(
     *,
     k_bits: int, v_bits: int, group: int = 32, v_group: int = 0,
     block_tokens: int = 64, window: int = 0, scale: float,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused paged attention over (committed pool + fp ring).
 
@@ -153,6 +156,7 @@ def paged_asym_attn(
     sliding-window masking (global layers); ``window = W`` applies the
     per-row lower bound ``pos > q_pos - W`` (local layers).
     """
+    interpret = _resolve_interpret(interpret)
     S, H, Q, D = q.shape
     BT = block_tokens
     v_group = v_group or group

@@ -49,13 +49,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
+
 __all__ = ["fused_commit_groups", "quant_commit_kernel_call"]
-
-
-def _resolve_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
 
 
 def _quantize_rows(x: jax.Array, axis_is_tokens: bool, group: int,

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret as _resolve_interpret
+
 __all__ = ["rtn_pack"]
 
 
@@ -81,10 +83,11 @@ def rtn_pack(
     x: jax.Array,  # [B, H, T, D]
     *,
     bits: int, group: int = 32, mode: str = "per_channel",
-    block: int = 256, interpret: bool = True,
+    block: int = 256, interpret: bool | None = None,
 ):
     """Quantize+pack a committed span.  Returns (codes, scale, zero) with
     the same layouts as ``repro.core.quant.quantize``."""
+    interpret = _resolve_interpret(interpret)
     B, H, T, D = x.shape
     block = min(block, T)
     assert T % block == 0 and block % group == 0 and D % group == 0

@@ -69,6 +69,10 @@ def main(argv=None):
                          "the previous tick's compute, so resume consumes "
                          "a landed copy instead of stalling on the "
                          "transfer")
+    ap.add_argument("--debug", action="store_true",
+                    help="run the cache sanitizer (shadow-state audit of "
+                         "every block transition; docs/static_analysis.md) "
+                         "and print its stats")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -106,7 +110,8 @@ def main(argv=None):
                                fused_commit=(args.fused_commit
                                              and model.supports_paged()),
                                swap_ahead=(args.swap_ahead
-                                           and preemption == "swap"))
+                                           and preemption == "swap"),
+                               debug=args.debug or None)
         rng = np.random.default_rng(args.seed)
         system = (rng.integers(0, cfg.vocab, size=args.shared_prefix,
                                dtype=np.int32) if shared else None)
@@ -128,6 +133,9 @@ def main(argv=None):
         if preemption:
             stats.update({f"preempt_{k}": v
                           for k, v in engine.preempt_stats().items()})
+        if engine.debug:
+            stats.update({f"sanitizer_{k}": v
+                          for k, v in engine.sanitizer.stats().items()})
     # cache memory accounting (the paper's Fig. 4 quantity)
     if n:
         q_bytes = policy.cache_bytes_per_token(

@@ -81,6 +81,7 @@ pod the same engine runs with the sharded step functions.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Optional
@@ -153,7 +154,8 @@ class ServingEngine:
                  fused_commit: bool = False,
                  prefix_cache: bool = False,
                  preemption_mode: Optional[str] = None,
-                 swap_ahead: bool = False):
+                 swap_ahead: bool = False,
+                 debug: Optional[bool] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -293,6 +295,20 @@ class ServingEngine:
             # estimate.
             self.tick_host_times: list[float] = []
             self.tick_commit_groups: list[int] = []
+            # -- shadow-state sanitizer (debug=True / ASYMKV_DEBUG=1) -----
+            # Wraps every allocator/swap mutation and audits the block
+            # state machine each tick; violations raise SanitizerError
+            # (core/sanitizer.py).  Off by default: the shadow audit is
+            # O(pool size) per transition.
+            if debug is None:
+                debug = os.environ.get("ASYMKV_DEBUG", "") not in ("", "0")
+            self.debug = bool(debug)
+            if self.debug:
+                from repro.core.sanitizer import CacheSanitizer
+                self.sanitizer: Optional[CacheSanitizer] = \
+                    CacheSanitizer(self)
+            else:
+                self.sanitizer = None
         else:
             if prefix_cache:
                 raise ValueError(
@@ -307,6 +323,8 @@ class ServingEngine:
                     "swap_ahead requires the paged engine with "
                     "preemption_mode='swap'")
             self.preemption_mode = None
+            self.debug = False
+            self.sanitizer = None
             self._prefill = jax.jit(model.prefill)
             self._decode = jax.jit(model.decode_step)
             self.caches = model.init_caches(slots, max_tokens, dtype=dtype)
@@ -460,7 +478,10 @@ class ServingEngine:
             for key, alloc in self._mappings():
                 alloc.share(i, j, chain[j].blocks[key])
         for _, alloc in self._mappings():
-            alloc.lengths[i] = F
+            # the slot is freshly admitted (lengths zeroed at release), so
+            # advancing by F sets it — routed through the allocator API so
+            # every mutation stays visible to the debug sanitizer
+            alloc.advance(i, F)
         self._commit_base[i] = F
         self._off[i] = F
         self._reg_done[i] = F // BT  # fully-shared blocks are already cached
@@ -901,7 +922,7 @@ class ServingEngine:
         entry) estimates it; attend is the device remainder."""
         if not self.paged:
             return {}
-        return {
+        out = {
             "ticks": self.ticks,
             "device_s": float(sum(self.tick_times)),
             "host_s": float(sum(self.tick_host_times)),
@@ -909,6 +930,11 @@ class ServingEngine:
             "commit_groups_per_tick": (
                 float(sum(self.tick_commit_groups)) / max(1, self.ticks)),
         }
+        if self.sanitizer is not None:
+            # the checker's cost, in benchmark-visible form: transitions
+            # shadow-checked, ticks audited, and seconds spent doing it
+            out["sanitizer"] = self.sanitizer.stats()
+        return out
 
     # ------------------------------------------------------ paged plumbing
 
@@ -950,6 +976,10 @@ class ServingEngine:
     def _sync_caches(self):
         """Pushes each stage's block mapping + lengths + commit-base floor
         into its cache."""
+        if self.sanitizer is not None:
+            # one cross-structure audit per tick, right before the host
+            # mirrors become the device's view of the block state machine
+            self.sanitizer.audit_tick()
         ln = jnp.asarray(self.alloc.lengths, jnp.int32)
         cb = jnp.asarray(self._commit_base, jnp.int32)
         tables = {k: jnp.asarray(w.page_table)
@@ -1098,6 +1128,10 @@ class ServingEngine:
         planned = {i: int(nv[i]) for i in range(self.slots) if nv[i]}
         planned.update({i: 1 for i in dec})
         self._cow_pass(planned)
+        # the sanitizer hook lives at the call site, not inside _cow_pass,
+        # so a broken (or monkeypatched-away) pass is still caught
+        if self.sanitizer is not None:
+            self.sanitizer.check_commit_targets(planned)
         # ...and again: a COW hitting a drained pool may itself have had
         # to pause a victim whose rows were staged above
         for i in range(self.slots):
@@ -1118,6 +1152,7 @@ class ServingEngine:
         # overlap: dispatch the resume candidate's host→device copies
         # before blocking on this tick's logits
         self._prefetch_resume()
+        # asymlint: disable=host-sync-in-tick (the one deliberate end-of-tick sync: greedy token pick needs logits on host)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         t1 = time.perf_counter()
         self.tick_times.append(t1 - t0)
@@ -1145,7 +1180,10 @@ class ServingEngine:
             if nv[i] and self.active[i] is None:
                 nv[i] = 0
                 toks[i] = 0
-        self._cow_pass({i: int(nv[i]) for i in range(self.slots) if nv[i]})
+        planned = {i: int(nv[i]) for i in range(self.slots) if nv[i]}
+        self._cow_pass(planned)
+        if self.sanitizer is not None:
+            self.sanitizer.check_commit_targets(planned)
         for i in range(self.slots):  # ...or paused by the COW pass itself
             if nv[i] and self.active[i] is None:
                 nv[i] = 0
@@ -1157,6 +1195,7 @@ class ServingEngine:
         logits, self.caches = self._chunk_fn(
             self.params, jnp.asarray(toks), self.caches, jnp.asarray(nv))
         self._prefetch_resume()
+        # asymlint: disable=host-sync-in-tick (the one deliberate end-of-tick sync: greedy token pick needs logits on host)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         t1 = time.perf_counter()
         self.tick_times.append(t1 - t0)
@@ -1173,6 +1212,8 @@ class ServingEngine:
         if not dec:
             return done
         self._cow_pass({i: 1 for i in dec})
+        if self.sanitizer is not None:
+            self.sanitizer.check_commit_targets({i: 1 for i in dec})
         dec = [i for i in dec if self.active[i] is not None]
         active = np.zeros(self.slots, bool)
         active[dec] = True
@@ -1185,6 +1226,7 @@ class ServingEngine:
             self.params, jnp.asarray(self._next_tok), self.caches, pos,
             jnp.asarray(active))
         self._prefetch_resume()
+        # asymlint: disable=host-sync-in-tick (the one deliberate end-of-tick sync: greedy token pick needs logits on host)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         t1 = time.perf_counter()
         self.tick_times.append(t1 - t0)
@@ -1245,6 +1287,7 @@ class ServingEngine:
         logits, self.caches = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)}, self.caches)
         self.pos = self.prompt_len
+        # asymlint: disable=host-sync-in-tick (the one deliberate end-of-tick sync: greedy token pick needs logits on host)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         now = time.time()
         for i, r in enumerate(self.active):
@@ -1260,6 +1303,7 @@ class ServingEngine:
             self.params, jnp.asarray(token),
             self.caches, jnp.asarray(self.pos, jnp.int32))
         self.pos += 1
+        # asymlint: disable=host-sync-in-tick (the one deliberate end-of-tick sync: greedy token pick needs logits on host)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         for i, r in enumerate(self.active):
             if r is None:

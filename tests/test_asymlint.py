@@ -1,0 +1,581 @@
+"""asymlint rule tests: each rule catches its fixture, ignores its
+negative, and honors inline suppressions; plus config parsing, the CLI
+contract, and the acceptance gate that the real ``src/`` tree is clean."""
+
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from asymlint import (Config, _parse_toml_minimal, lint_paths,  # noqa: E402
+                      lint_source, load_config)
+from asymlint.cli import main as cli_main  # noqa: E402
+from asymlint.rules import ALL_RULES  # noqa: E402
+
+RULE_CODES = {r.code for r in ALL_RULES}
+
+
+def lint(src, config=None):
+    return lint_source(textwrap.dedent(src), "<test>", config)
+
+
+def codes(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# jit-static-drift
+# ---------------------------------------------------------------------------
+
+def test_jit_static_drift_misspelled_entry():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("blok",))
+        def attend(q, k, *, block=128):
+            return q @ k
+    """)
+    assert codes(fs) == ["jit-static-drift"]
+    assert "'blok'" in fs[0].message and "not a parameter" in fs[0].message
+
+
+def test_jit_static_drift_undeclared_bool_config():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("block",))
+        def attend(q, k, *, block=128, fused: bool = True):
+            return q @ k
+    """)
+    assert codes(fs) == ["jit-static-drift"]
+    assert "'fused'" in fs[0].message
+
+
+def test_jit_static_drift_assignment_form():
+    fs = lint("""
+        import jax
+
+        def attend(q, k, *, block=128, fused: bool = True):
+            return q @ k
+
+        attend_jit = jax.jit(attend, static_argnames=("block",))
+    """)
+    assert "jit-static-drift" in codes(fs)
+
+
+def test_jit_static_drift_negative():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("block", "fused"))
+        def attend(q, k, *, block=128, fused: bool = True):
+            return q @ k
+    """)
+    assert fs == []
+
+
+def test_jit_static_drift_suppressed():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("block",))
+        def attend(q, k, *, block=128, fused: bool = True):  # asymlint: disable=jit-static-drift (fused is traced on purpose)
+            return q @ k
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# donated-reuse
+# ---------------------------------------------------------------------------
+
+def test_donated_reuse_positive():
+    fs = lint("""
+        import jax
+
+        def _step(state, tok):
+            return state + tok
+
+        step = jax.jit(_step, donate_argnums=(0,))
+
+        def run(state, tok):
+            out = step(state, tok)
+            return out, state
+    """)
+    assert codes(fs) == ["donated-reuse"]
+    assert "'state'" in fs[0].message and "donated" in fs[0].message
+
+
+def test_donated_reuse_rebind_negative():
+    fs = lint("""
+        import jax
+
+        def _step(state, tok):
+            return state + tok
+
+        step = jax.jit(_step, donate_argnums=(0,))
+
+        def run(state, tok):
+            state = step(state, tok)
+            return state
+    """)
+    assert fs == []
+
+
+def test_donated_reuse_suppressed():
+    fs = lint("""
+        import jax
+
+        def _step(state, tok):
+            return state + tok
+
+        step = jax.jit(_step, donate_argnums=(0,))
+
+        def run(state, tok):
+            out = step(state, tok)
+            return out, state  # asymlint: disable=donated-reuse (state is host-side metadata here)
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-tick
+# ---------------------------------------------------------------------------
+
+_TICK_CFG = Config(tick_roots=["Eng._tick"])
+
+
+def test_host_sync_in_tick_positive():
+    fs = lint("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        class Eng:
+            def _tick(self):
+                return self._inner()
+
+            def _inner(self):
+                x = jnp.ones(3)
+                return np.asarray(jnp.sum(x))
+    """, _TICK_CFG)
+    assert codes(fs) == ["host-sync-in-tick"]
+    assert "Eng._tick" in fs[0].message
+
+
+def test_host_sync_item_and_float():
+    fs = lint("""
+        import jax.numpy as jnp
+
+        class Eng:
+            def _tick(self):
+                a = jnp.sum(jnp.ones(3)).item()
+                b = float(jnp.max(jnp.ones(3)))
+                return a + b
+    """, _TICK_CFG)
+    assert codes(fs) == ["host-sync-in-tick"] * 2
+
+
+def test_host_sync_outside_tick_graph_negative():
+    fs = lint("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        class Eng:
+            def _tick(self):
+                return 0
+
+            def report(self):
+                # not reachable from _tick: syncing here is fine
+                return np.asarray(jnp.ones(3))
+    """, _TICK_CFG)
+    assert fs == []
+
+
+def test_host_sync_suppressed_with_reason():
+    fs = lint("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        class Eng:
+            def _tick(self):
+                # asymlint: disable=host-sync-in-tick (deliberate end-of-tick sync)
+                return np.asarray(jnp.ones(3))
+    """, _TICK_CFG)
+    assert fs == []
+
+
+def test_host_sync_allowlist_regex():
+    cfg = Config(tick_roots=["Eng._tick"],
+                 host_sync_allow=[r"np\.asarray\(jnp\.ones"])
+    fs = lint("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        class Eng:
+            def _tick(self):
+                return np.asarray(jnp.ones(3))
+    """, cfg)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# tracer-branch
+# ---------------------------------------------------------------------------
+
+def test_tracer_branch_in_jit():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=())
+        def relu(x):
+            if x > 0:
+                return x
+            return 0.0
+    """)
+    assert codes(fs) == ["tracer-branch"]
+
+
+def test_tracer_branch_static_and_shape_negative():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, *, mode="fast"):
+            if mode == "fast":
+                pass
+            if x.shape[0] > 4:
+                pass
+            if x is None:
+                return 0.0
+            return x
+    """)
+    assert fs == []
+
+
+def test_tracer_branch_in_pallas_kernel():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def _kernel(x_ref, o_ref, *, block):
+            v = x_ref[...]
+            if v.sum() > 0:
+                o_ref[...] = v
+
+        def launch(x):
+            return pl.pallas_call(_kernel, grid=(4,))(x)
+    """)
+    assert codes(fs) == ["tracer-branch"]
+
+
+def test_tracer_branch_partial_bound_static_negative():
+    fs = lint("""
+        import functools
+        import jax.experimental.pallas as pl
+
+        def _kernel(x_ref, o_ref, *, causal):
+            if causal:
+                o_ref[...] = x_ref[...]
+
+        def launch(x):
+            kern = functools.partial(_kernel, causal=True)
+            return pl.pallas_call(kern, grid=(4,))(x)
+    """)
+    assert fs == []
+
+
+def test_tracer_branch_suppressed():
+    fs = lint("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=())
+        def f(x):
+            # asymlint: disable=tracer-branch (x is a pytree aux, concrete at trace time)
+            assert x > 0
+            return x
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# interpret-hardcoded
+# ---------------------------------------------------------------------------
+
+def test_interpret_hardcoded_call_site():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            return pl.pallas_call(lambda i, o: None, grid=(1,),
+                                  interpret=True)(x)
+    """)
+    assert codes(fs) == ["interpret-hardcoded"]
+
+
+def test_interpret_hardcoded_default():
+    fs = lint("""
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert codes(fs) == ["interpret-hardcoded"]
+
+
+def test_interpret_hardcoded_negatives():
+    fs = lint("""
+        import jax
+        import jax.experimental.pallas as pl
+
+        def resolve_interpret(interpret=None):
+            if interpret is None:
+                return jax.default_backend() != "tpu"
+            return bool(interpret)
+
+        def attend(q, *, interpret=None):
+            return pl.pallas_call(lambda i, o: None, grid=(1,),
+                                  interpret=resolve_interpret(interpret))(q)
+    """)
+    assert fs == []
+
+
+def test_interpret_hardcoded_suppressed():
+    # the suppression anchors on the line of the hardcoded value itself
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            return pl.pallas_call(
+                lambda i, o: None, grid=(1,),
+                interpret=True,  # asymlint: disable=interpret-hardcoded (oracle comparison needs interpret mode)
+            )(x)
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# blockspec-arity
+# ---------------------------------------------------------------------------
+
+def test_blockspec_arity_plain_grid():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            return pl.pallas_call(
+                lambda i, o: None,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            )(x)
+    """)
+    assert codes(fs) == ["blockspec-arity"]
+    assert "takes 1 argument(s)" in fs[0].message
+
+
+def test_blockspec_arity_prefetch_grid_spec():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def launch(x, pt):
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(2, 2),
+                in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+                out_specs=[pl.BlockSpec((1, 1), lambda i, j, pt: (i, j))],
+            )
+            return pl.pallas_call(lambda p, i, o: None,
+                                  grid_spec=grid_spec)(pt, x)
+    """)
+    # in_spec lambda is missing the prefetch arg: expected 2 + 1 = 3
+    assert codes(fs) == ["blockspec-arity"]
+    assert "num_scalar_prefetch 1" in fs[0].message
+
+
+def test_blockspec_arity_negative():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            return pl.pallas_call(
+                lambda i, o: None,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+                out_specs=pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
+            )(x)
+    """)
+    assert fs == []
+
+
+def test_blockspec_arity_suppressed():
+    fs = lint("""
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            return pl.pallas_call(
+                lambda i, o: None,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0))],  # asymlint: disable=blockspec-arity (grid is reshaped upstream)
+                out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            )(x)
+    """)
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# suppression mechanics
+# ---------------------------------------------------------------------------
+
+def test_suppression_on_comment_line_covers_next_line():
+    fs = lint("""
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert codes(fs) == ["interpret-hardcoded"]
+    fs = lint("""
+        # asymlint: disable=interpret-hardcoded (legacy shim)
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert fs == []
+
+
+def test_suppression_all_keyword():
+    fs = lint("""
+        def attend(q, *, interpret=False):  # asymlint: disable=all (generated file)
+            return q
+    """)
+    assert fs == []
+
+
+def test_suppression_wrong_rule_does_not_hide():
+    fs = lint("""
+        def attend(q, *, interpret=False):  # asymlint: disable=tracer-branch (mismatched)
+            return q
+    """)
+    assert codes(fs) == ["interpret-hardcoded"]
+
+
+def test_syntax_error_reported_not_raised():
+    fs = lint_source("def broken(:\n", "<bad>")
+    assert codes(fs) == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+_TOML = textwrap.dedent("""
+    [project]
+    name = "repro"
+
+    [tool.asymlint]
+    disable = [
+        "tracer-branch",
+    ]
+    tick-roots = ["Eng._tick"]
+    interpret-resolver = "my_resolver"  # trailing comment
+
+    [tool.other]
+    unrelated = true
+""")
+
+
+def test_parse_toml_minimal():
+    raw = _parse_toml_minimal(_TOML)
+    assert raw["disable"] == ["tracer-branch"]
+    assert raw["tick-roots"] == ["Eng._tick"]
+    assert raw["interpret-resolver"] == "my_resolver"
+    assert "unrelated" not in raw
+
+
+def test_load_config(tmp_path):
+    py = tmp_path / "pyproject.toml"
+    py.write_text(_TOML)
+    cfg = load_config(py)
+    assert cfg.disable == {"tracer-branch"}
+    assert cfg.tick_roots == ["Eng._tick"]
+    assert cfg.interpret_resolver == "my_resolver"
+    # missing file -> defaults
+    dflt = load_config(tmp_path / "nope.toml")
+    assert dflt.disable == set()
+    assert "ServingEngine._tick" in dflt.tick_roots
+
+
+def test_disabled_rule_is_skipped():
+    src = """
+        def attend(q, *, interpret=False):
+            return q
+    """
+    assert codes(lint(src)) == ["interpret-hardcoded"]
+    assert lint(src, Config(disable={"interpret-hardcoded"})) == []
+
+
+def test_repo_pyproject_carries_asymlint_block():
+    cfg = load_config(ROOT / "pyproject.toml")
+    assert "ServingEngine._tick" in cfg.tick_roots
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def test_cli_clean_exit_zero(tmp_path, capsys):
+    p = _write(tmp_path, "ok.py", "x = 1\n")
+    assert cli_main([str(p)]) == 0
+    assert "asymlint: clean" in capsys.readouterr().out
+
+
+def test_cli_findings_exit_nonzero(tmp_path, capsys):
+    p = _write(tmp_path, "bad.py", """
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert cli_main([str(p)]) == 1
+    out = capsys.readouterr().out
+    assert "interpret-hardcoded" in out and "bad.py" in out
+
+
+def test_cli_json_format(tmp_path, capsys):
+    p = _write(tmp_path, "bad.py", """
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert cli_main([str(p), "--format=json"]) == 1
+    data = json.loads(capsys.readouterr().out)
+    assert len(data) == 1
+    f = data[0]
+    assert f["rule"] == "interpret-hardcoded"
+    assert f["path"].endswith("bad.py")
+    assert f["line"] >= 1 and f["fixit"]
+
+
+def test_cli_disable_flag(tmp_path):
+    p = _write(tmp_path, "bad.py", """
+        def attend(q, *, interpret=False):
+            return q
+    """)
+    assert cli_main([str(p), "--disable", "interpret-hardcoded"]) == 0
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULE_CODES:
+        assert code in out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the real tree lints clean
+# ---------------------------------------------------------------------------
+
+def test_repo_src_lints_clean():
+    findings = lint_paths([ROOT / "src"])
+    assert findings == [], "\n".join(f.format() for f in findings)

@@ -36,5 +36,6 @@ def test_intra_repo_markdown_links_resolve(md):
 
 def test_docs_exist():
     for p in (ROOT / "README.md", ROOT / "docs" / "architecture.md",
-              ROOT / "docs" / "serving.md"):
+              ROOT / "docs" / "serving.md",
+              ROOT / "docs" / "static_analysis.md"):
         assert p.exists(), p

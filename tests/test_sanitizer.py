@@ -1,0 +1,293 @@
+"""CacheSanitizer: fault-injection matrix + differential debug suites.
+
+Two halves, per the block state machine in docs/serving.md:
+
+* **fault injection** — corrupt the real structures behind the shadow
+  model's back (refcount bump, double-mapped block, skipped ``_cow_pass``,
+  under-accounted swap bytes) and assert the sanitizer raises a
+  structured :class:`SanitizerError` naming the transition/block/slot;
+* **differential** — the PR 3 (prefix sharing + COW) and PR 4
+  (preemption) workloads replayed with ``debug=True`` must stream
+  bit-identical tokens with zero violations, proving the checker is
+  sound on healthy engines (no false positives) and near-free.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.core.sanitizer import CacheSanitizer, SanitizerError
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_model(arch="llama2-7b", seed=0):
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    pol = AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, high_bits=2,
+                       low_bits=1, group=8, residual=8)
+    model = Model(cfg, pol, group=8, residual=8)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _mk_model()
+
+
+def _engine(model, params, *, debug=True, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_tokens", 128)
+    kw.setdefault("block_tokens", 8)
+    return ServingEngine(model, params, dtype=jnp.float32, debug=debug,
+                         **kw)
+
+
+def _reqs(cfg, lengths, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, L,
+                                               dtype=np.int32),
+                    max_new_tokens=n)
+            for i, (L, n) in enumerate(zip(lengths, max_new))]
+
+
+def _start(model, params, cfg, *, ticks=2, **kw):
+    """An engine mid-flight: submitted work, a couple of ticks run, slots
+    occupied — the state fault injections corrupt."""
+    eng = _engine(model, params, **kw)
+    for r in _reqs(cfg, [24, 24], [16, 16], seed=3):
+        eng.submit(r)
+    eng.run(max_ticks=ticks)
+    assert any(r is not None for r in eng.active)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# wiring
+# ---------------------------------------------------------------------------
+
+def test_debug_flag_and_env(small_model, monkeypatch):
+    cfg, model, params = small_model
+    eng = _engine(model, params, debug=True)
+    assert eng.debug and isinstance(eng.sanitizer, CacheSanitizer)
+    eng = _engine(model, params, debug=False)
+    assert not eng.debug and eng.sanitizer is None
+    monkeypatch.setenv("ASYMKV_DEBUG", "1")
+    eng = _engine(model, params, debug=None)
+    assert eng.debug and eng.sanitizer is not None
+    monkeypatch.setenv("ASYMKV_DEBUG", "0")
+    eng = _engine(model, params, debug=None)
+    assert not eng.debug
+
+
+def test_legacy_engine_has_no_sanitizer(small_model):
+    cfg, model, params = small_model
+    eng = ServingEngine(model, params, slots=2, max_tokens=64,
+                        dtype=jnp.float32, paged=False, prompt_len=32,
+                        debug=True)
+    assert not eng.debug and eng.sanitizer is None
+
+
+def test_sanitizer_requires_paged(small_model):
+    cfg, model, params = small_model
+    eng = ServingEngine(model, params, slots=2, max_tokens=64,
+                        dtype=jnp.float32, paged=False, prompt_len=32)
+    with pytest.raises(ValueError, match="paged"):
+        CacheSanitizer(eng)
+
+
+def test_phase_stats_sanitizer_block(small_model):
+    cfg, model, params = small_model
+    eng = _engine(model, params, debug=True)
+    for r in _reqs(cfg, [16], [4]):
+        eng.submit(r)
+    eng.run()
+    st = eng.phase_stats()["sanitizer"]
+    assert st["transitions"] > 0 and st["ticks_audited"] > 0
+    assert st["overhead_s"] >= 0
+    assert "sanitizer" not in _engine(model, params,
+                                      debug=False).phase_stats()
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_inject_refcount_corruption(small_model):
+    """A refcount bumped behind the allocator's back breaks shadow
+    agreement at the next transition or tick audit."""
+    cfg, model, params = small_model
+    eng = _start(model, params, cfg)
+    blk = int(next(b for b in eng.alloc.page_table[0] if b > 0))
+    eng.alloc._refs[blk] += 1
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    err = ei.value
+    assert err.block == blk
+    assert "refcount" in err.detail
+    assert f"block={blk}" in str(err)
+
+
+def test_inject_double_mapped_block(small_model):
+    """Writing a live block into a second slot's page table (a double
+    map the allocator never performed) is caught by the table audit."""
+    cfg, model, params = small_model
+    eng = _start(model, params, cfg)
+    blk = int(next(b for b in eng.alloc.page_table[0] if b > 0))
+    row = eng.alloc.page_table[1]
+    j = int(np.nonzero(row == 0)[0][-1])
+    eng.alloc.page_table[1, j] = blk
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    err = ei.value
+    assert err.block == blk
+    assert err.slot == 1
+    assert "page-table" in err.detail or "conservation" in err.detail
+
+
+def test_inject_freelist_corruption(small_model):
+    cfg, model, params = small_model
+    eng = _start(model, params, cfg)
+    eng.alloc._free.rotate(1)
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    assert "free" in ei.value.detail
+
+
+def test_inject_skipped_cow_pass(small_model):
+    """With ``_cow_pass`` disabled, a commit whose span covers a shared
+    (refcount > 1) tail block violates the COW read-only invariant —
+    ``check_commit_targets`` fires at the call site *before* the write
+    launches, so a broken/no-op pass cannot slip a corrupting commit."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+    # the partial-tail-group scenario of tests/test_prefix_sharing.py:
+    # BT=16, donor commits through its tail block, consumer maps it
+    # read-only at F = 56 (mid-block) and must COW before writing
+    eng = _engine(model, params, block_tokens=16, prefix_cache=True)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=12))
+    eng.run()
+    assert eng.prefix_stats()["trie_blocks"] > 0
+    eng._cow_pass = lambda planned: None
+    eng.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=12))
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    err = ei.value
+    assert err.transition == "commit"
+    assert "COW invariant" in err.detail
+    assert err.block is not None and err.block > 0
+    assert err.slot is not None
+    assert eng.alloc.ref(err.block) > 1
+
+
+def test_inject_swap_under_accounting(small_model):
+    """Tampering with ``resident_bytes`` (an under-accounted park) breaks
+    swap byte conservation at the next swap op or tick audit."""
+    cfg, model, params = small_model
+    eng = _engine(model, params, num_blocks=9, preemption_mode="swap")
+    for r in _reqs(cfg, [48, 40, 56, 48], [12, 10, 8, 12], seed=1):
+        eng.submit(r)
+    # step until the pressure actually parks a payload on the host
+    for _ in range(60):
+        if eng.swap.resident_bytes > 0:
+            break
+        eng.run(max_ticks=1)
+    assert eng.preemptions >= 1 and eng.swap.resident_bytes > 0
+    eng.swap.resident_bytes -= 1
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    assert "conserved" in ei.value.detail or "resident" in ei.value.detail
+
+
+def test_inject_commit_base_above_length(small_model):
+    cfg, model, params = small_model
+    eng = _start(model, params, cfg)
+    i = next(i for i, r in enumerate(eng.active) if r is not None)
+    eng._commit_base[i] = int(eng.alloc.lengths[i]) + 100
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    err = ei.value
+    assert err.transition == "tick-audit"
+    assert err.slot == i
+
+
+def test_error_is_structured(small_model):
+    cfg, model, params = small_model
+    eng = _start(model, params, cfg)
+    blk = int(next(b for b in eng.alloc.page_table[0] if b > 0))
+    eng.alloc._refs[blk] += 1
+    with pytest.raises(SanitizerError) as ei:
+        eng.run()
+    err = ei.value
+    # structured fields + a message carrying all of them
+    assert isinstance(err, AssertionError)
+    assert err.transition and err.mapping is not None
+    msg = str(err)
+    assert msg.startswith("sanitizer: transition=")
+    assert f"mapping={err.mapping!r}" in msg
+
+
+# ---------------------------------------------------------------------------
+# differential: PR 3 / PR 4 workloads under debug=True
+# ---------------------------------------------------------------------------
+
+def _drive_batches(model, params, batches, *, debug, max_new=6, **kw):
+    eng = _engine(model, params, debug=debug, **kw)
+    streams = {}
+    for batch in batches:
+        for rid, prompt in batch:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new))
+        for r in eng.run():
+            streams[r.rid] = r.output
+    return eng, streams
+
+
+def test_differential_prefix_sharing_debug(small_model):
+    """PR 3 workload (shared prefixes + COW tail block): debug on/off
+    streams are bit-identical and the audit count is live."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+    batches = [[(0, prompt)], [(1, prompt.copy())]]
+    kw = dict(block_tokens=16, prefix_cache=True, max_new=12)
+    e_dbg, s_dbg = _drive_batches(model, params, batches, debug=True, **kw)
+    _, s_ref = _drive_batches(model, params, batches, debug=False, **kw)
+    assert s_dbg == s_ref
+    assert e_dbg.prefix_stats()["cow_copies"] >= 1
+    st = e_dbg.phase_stats()["sanitizer"]
+    assert st["ticks_audited"] > 0 and st["transitions"] > 0
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_differential_preemption_debug(small_model, mode):
+    """PR 4 workload (pool at ~60% of the working set, both preemption
+    modes): debug on/off streams are bit-identical, ≥ 1 preemption
+    actually fires, and no violation is raised."""
+    cfg, model, params = small_model
+    reqs = [(r.rid, r.prompt) for r in
+            _reqs(cfg, [48, 40, 56, 48], [12, 10, 8, 12], seed=1)]
+    max_new = {0: 12, 1: 10, 2: 8, 3: 12}
+
+    def drive(debug):
+        eng = _engine(model, params, num_blocks=9, preemption_mode=mode,
+                      debug=debug)
+        for rid, prompt in reqs:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new[rid]))
+        return eng, {r.rid: r.output for r in eng.run()}
+
+    e_dbg, s_dbg = drive(True)
+    _, s_ref = drive(False)
+    assert s_dbg == s_ref, mode
+    assert e_dbg.preemptions >= 1
+    st = e_dbg.phase_stats()["sanitizer"]
+    assert st["ticks_audited"] > 0

@@ -1,0 +1,262 @@
+"""asymlint — repo-specific static analysis for the AsymKV serving stack.
+
+The paged serving stack (``src/repro``) leans on conventions that generic
+linters cannot see: ``jax.jit`` static/donated argument contracts, the
+"no host sync inside the tick loop" rule, trace-time-only branching, the
+``_resolve_interpret`` routing that keeps kernels TPU-ready, and Pallas
+``index_map`` arity.  Each rule here encodes one of those contracts as an
+AST pass with a stable code, a fix-it message, and an inline suppression
+syntax::
+
+    expr  # asymlint: disable=RULE (one-line reason)
+    # asymlint: disable=RULE-A,RULE-B (reason) — alone on the line above
+
+A suppression on a finding's own line (or alone on the line directly
+above it) silences that rule there; the parenthesised reason is required
+by convention and surfaced by ``--format=json`` so CI can audit it.
+
+Entry points: the ``asymlint`` console script (``asymlint src/`` exits
+non-zero on findings), ``python -m asymlint``, or the API below
+(``lint_paths`` / ``lint_source``).  Per-rule enable/disable and rule
+options live in ``[tool.asymlint]`` in ``pyproject.toml``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import tokenize
+from io import StringIO
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location."""
+
+    rule: str          # stable rule code, e.g. "jit-static-drift"
+    path: str          # file the finding is in (as given to the linter)
+    line: int          # 1-indexed line of the offending node
+    col: int           # 0-indexed column
+    message: str       # what is wrong
+    fixit: str = ""    # how to fix it
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col}"
+        msg = f"{loc}: {self.rule}: {self.message}"
+        if self.fixit:
+            msg += f"  [fix: {self.fixit}]"
+        return msg
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Config:
+    """Linter configuration (the ``[tool.asymlint]`` pyproject block)."""
+
+    disable: Set[str] = dataclasses.field(default_factory=set)
+    # Call-graph roots for host-sync-in-tick, as "Class.method" strings.
+    tick_roots: List[str] = dataclasses.field(default_factory=lambda: [
+        "ServingEngine._tick",
+        "ServingEngine._step_serve",
+        "ServingEngine._step_prefill_chunk",
+        "ServingEngine._step_decode",
+        "Model.serve_step",
+    ])
+    # Regexes matched against the offending source line: hits are treated
+    # as deliberate syncs.  Shipped empty — the repo prefers inline
+    # suppressions with written reasons over silent rule carve-outs.
+    host_sync_allow: List[str] = dataclasses.field(default_factory=list)
+    # Name (or attribute suffix) of the canonical interpret resolver.
+    interpret_resolver: str = "resolve_interpret"
+
+
+# --------------------------------------------------------------------------
+# config loading (pyproject [tool.asymlint]) — tomllib is 3.11+, and both
+# the local toolchain and CI pin 3.10, so a minimal fallback parser covers
+# the subset this block uses (scalars and possibly-multiline arrays).
+# --------------------------------------------------------------------------
+
+def _parse_toml_minimal(text: str) -> dict:
+    """Parse just the ``[tool.asymlint]`` table from TOML text.
+
+    Handles ``key = value`` with string/bool/int scalars and (possibly
+    multi-line) arrays of strings.  Good enough for this config block;
+    anything fancier should move the repo to python>=3.11 and tomllib.
+    """
+    out: dict = {}
+    in_section = False
+    pending_key = None
+    pending_val = ""
+
+    def _finish(key: str, raw: str) -> None:
+        raw = raw.strip()
+        raw = re.sub(r"\btrue\b", "True", raw)
+        raw = re.sub(r"\bfalse\b", "False", raw)
+        try:
+            out[key] = ast.literal_eval(raw)
+        except (ValueError, SyntaxError):
+            out[key] = raw.strip('"').strip("'")
+
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("["):
+            if pending_key is not None:
+                _finish(pending_key, pending_val)
+                pending_key = None
+            in_section = stripped == "[tool.asymlint]"
+            continue
+        if not in_section or not stripped or stripped.startswith("#"):
+            continue
+        if pending_key is not None:
+            pending_val += " " + stripped
+            if pending_val.count("[") <= pending_val.count("]"):
+                _finish(pending_key, pending_val)
+                pending_key = None
+            continue
+        if "=" not in stripped:
+            continue
+        key, _, val = stripped.partition("=")
+        key, val = key.strip(), val.strip()
+        # strip trailing same-line comments from scalar values
+        if not val.startswith("[") and "#" in val:
+            val = val[:val.index("#")].strip()
+        if val.startswith("[") and val.count("[") > val.count("]"):
+            pending_key, pending_val = key, val
+        else:
+            _finish(key, val)
+    if pending_key is not None:
+        _finish(pending_key, pending_val)
+    return out
+
+
+def load_config(pyproject: Optional[Path] = None) -> Config:
+    """Build a Config from ``[tool.asymlint]`` in *pyproject* (if any)."""
+    cfg = Config()
+    if pyproject is None or not pyproject.exists():
+        return cfg
+    text = pyproject.read_text()
+    try:  # tomllib lands in 3.11; fall back below on 3.10
+        import tomllib
+        raw = (tomllib.loads(text).get("tool", {}) or {}).get("asymlint", {})
+    except ModuleNotFoundError:
+        raw = _parse_toml_minimal(text)
+    if "disable" in raw:
+        cfg.disable = set(raw["disable"])
+    if "tick-roots" in raw:
+        cfg.tick_roots = list(raw["tick-roots"])
+    if "host-sync-allow" in raw:
+        cfg.host_sync_allow = list(raw["host-sync-allow"])
+    if "interpret-resolver" in raw:
+        cfg.interpret_resolver = str(raw["interpret-resolver"])
+    return cfg
+
+
+def find_pyproject(start: Path) -> Optional[Path]:
+    for parent in [start, *start.parents]:
+        cand = parent / "pyproject.toml"
+        if cand.exists():
+            return cand
+    return None
+
+
+# --------------------------------------------------------------------------
+# suppressions
+# --------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*asymlint:\s*disable=([A-Za-z0-9_,\-]+)(?:\s*\(([^)]*)\))?")
+
+
+def _suppressions(source: str) -> Dict[int, Set[str]]:
+    """Map line number -> rule codes suppressed on that line.
+
+    A directive on a code line applies to that line; a directive on a
+    comment-only line applies to the *next* line.
+    """
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return out
+    code_lines: Set[int] = set()
+    for tok in tokens:
+        if tok.type not in (tokenize.COMMENT, tokenize.NL,
+                            tokenize.NEWLINE, tokenize.INDENT,
+                            tokenize.DEDENT, tokenize.ENDMARKER):
+            for ln in range(tok.start[0], tok.end[0] + 1):
+                code_lines.add(ln)
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        line = tok.start[0]
+        target = line if line in code_lines else line + 1
+        out.setdefault(target, set()).update(rules)
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<string>",
+                config: Optional[Config] = None) -> List[Finding]:
+    """Lint one python source string; returns unsuppressed findings."""
+    from asymlint import rules as _rules  # late import: rules import us
+
+    config = config or Config()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 1,
+                        e.offset or 0, f"cannot parse: {e.msg}")]
+    suppressed = _suppressions(source)
+    findings: List[Finding] = []
+    for rule in _rules.ALL_RULES:
+        if rule.code in config.disable:
+            continue
+        findings.extend(rule(tree, source, path, config))
+    kept = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col)):
+        covering = suppressed.get(f.line, set())
+        if f.rule in covering or "all" in covering:
+            continue
+        kept.append(f)
+    return kept
+
+
+def iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_paths(paths: Sequence[Path],
+               config: Optional[Config] = None) -> List[Finding]:
+    """Lint every ``*.py`` under *paths*; config auto-loads from the
+    nearest pyproject.toml when not given."""
+    files = iter_py_files([Path(p) for p in paths])
+    if config is None:
+        anchor = files[0].resolve() if files else Path.cwd()
+        config = load_config(find_pyproject(anchor.parent
+                                            if anchor.is_file() else anchor))
+    out: List[Finding] = []
+    for f in files:
+        out.extend(lint_source(f.read_text(), str(f), config))
+    return out
+
+
+__all__ = ["Finding", "Config", "load_config", "lint_source",
+           "lint_paths", "iter_py_files", "find_pyproject"]

@@ -1,0 +1,7 @@
+"""``python -m asymlint`` — same surface as the console script."""
+
+import sys
+
+from asymlint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,70 @@
+"""asymlint command line: ``asymlint PATH... [--format=text|json]``.
+
+Exit status is 1 when any finding survives suppression, 0 when clean —
+so ``asymlint src/`` is directly usable as a CI gate.  ``--format=json``
+emits a machine-readable array for CI annotations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from asymlint import (Config, find_pyproject, lint_paths, load_config)
+from asymlint.rules import ALL_RULES
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="asymlint",
+        description="repo-specific static analysis for the AsymKV stack")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to lint (default: src)")
+    p.add_argument("--format", choices=("text", "json"), default="text",
+                   help="output format (json for CI annotations)")
+    p.add_argument("--config", type=Path, default=None,
+                   help="pyproject.toml carrying [tool.asymlint] "
+                        "(default: nearest to the first linted path)")
+    p.add_argument("--disable", action="append", default=[],
+                   metavar="RULE", help="disable a rule for this run")
+    p.add_argument("--enable", action="append", default=[],
+                   metavar="RULE",
+                   help="re-enable a rule disabled by config")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.code}: {rule.summary}")
+        return 0
+
+    paths = [Path(p) for p in args.paths]
+    if args.config is not None:
+        config = load_config(args.config)
+    else:
+        anchor = paths[0].resolve()
+        config = load_config(
+            find_pyproject(anchor if anchor.is_dir() else anchor.parent))
+    config.disable |= set(args.disable)
+    config.disable -= set(args.enable)
+
+    findings = lint_paths(paths, config)
+    if args.format == "json":
+        print(json.dumps([f.to_json() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        n = len(findings)
+        print(f"asymlint: {n} finding{'s' if n != 1 else ''} in "
+              f"{len(paths)} path(s)" if n else "asymlint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

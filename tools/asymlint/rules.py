@@ -1,0 +1,657 @@
+"""The asymlint rule set.
+
+Each rule is a callable ``rule(tree, source, path, config) -> [Finding]``
+with ``.code`` / ``.summary`` attributes, registered in ``ALL_RULES``.
+Rules are intentionally heuristic-but-precise: they only fire on patterns
+they can resolve statically (literal ``static_argnames`` tuples, literal
+grids, in-module call graphs) and stay silent otherwise — a lint pass
+that cries wolf gets disabled, not fixed.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from asymlint import Config, Finding
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` / ``name`` as a string, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _str_names(node: Optional[ast.expr]) -> Optional[Set[str]]:
+    """Literal static_argnames value -> set of names (None if unresolvable)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = set()
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            out.add(el.value)
+        return out
+    return None
+
+
+def _int_indices(node: Optional[ast.expr]) -> Optional[Set[int]]:
+    """Literal donate_argnums value -> set of ints (None if unresolvable)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = set()
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            out.add(el.value)
+        return out
+    return None
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """Return the call carrying jit kwargs if *node* is ``jax.jit(...)``
+    or ``[functools.]partial(jax.jit, ...)``; else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    fn = _dotted(node.func)
+    if fn in ("jax.jit", "jit"):
+        return node
+    if fn in ("partial", "functools.partial") and node.args:
+        inner = _dotted(node.args[0])
+        if inner in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+def _sig_names(fn: ast.FunctionDef) -> Tuple[Set[str], bool]:
+    a = fn.args
+    names = {p.arg for p in [*a.posonlyargs, *a.args, *a.kwonlyargs]}
+    return names, a.kwarg is not None
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# jit-static-drift
+# ---------------------------------------------------------------------------
+
+_HASHSUSPECT_ANNOS = {"bool", "str"}
+
+
+def jit_static_drift(tree, source, path, config) -> List[Finding]:
+    findings: List[Finding] = []
+    defs = {f.name: f for f in tree.body
+            if isinstance(f, ast.FunctionDef)}
+
+    def check(fn: ast.FunctionDef, jit: ast.Call, anchor: ast.AST):
+        static = _str_names(_kw(jit, "static_argnames"))
+        if static is None:
+            return
+        names, has_kwargs = _sig_names(fn)
+        if not has_kwargs:
+            for missing in sorted(static - names):
+                findings.append(Finding(
+                    jit_static_drift.code, path, anchor.lineno,
+                    anchor.col_offset,
+                    f"static_argnames entry {missing!r} is not a parameter "
+                    f"of {fn.name}() — jit will reject or silently ignore "
+                    f"it",
+                    fixit=f"rename the entry to match the signature of "
+                          f"{fn.name}() or drop it"))
+        donated = _int_indices(_kw(jit, "donate_argnums")) or set()
+        a = fn.args
+        pos = [*a.posonlyargs, *a.args]
+        donated_names = {pos[i].arg for i in donated if i < len(pos)}
+        for p, default in zip(a.kwonlyargs, a.kw_defaults):
+            if p.arg in static or p.arg in donated_names:
+                continue
+            anno = p.annotation
+            suspect = (isinstance(anno, ast.Name)
+                       and anno.id in _HASHSUSPECT_ANNOS)
+            suspect = suspect or (isinstance(default, ast.Constant)
+                                  and isinstance(default.value, (bool, str)))
+            if suspect:
+                findings.append(Finding(
+                    jit_static_drift.code, path, p.lineno, p.col_offset,
+                    f"keyword-only parameter {p.arg!r} of jit'd "
+                    f"{fn.name}() looks like trace-time config "
+                    f"(bool/str) but is not in static_argnames — it will "
+                    f"be traced (unhashable as a static later) or fail "
+                    f"under jit",
+                    fixit=f"add {p.arg!r} to static_argnames"))
+
+    for fn in _functions(tree):
+        for deco in fn.decorator_list:
+            jit = _jit_call(deco)
+            if jit is not None:
+                check(fn, jit, deco)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            jit = _jit_call(node.value)
+            if jit is None or not jit.args:
+                continue
+            # assignment form: f = jax.jit(g, ...) — resolvable when g is
+            # a plain module-level def (partial(jax.jit,...) has no fn arg)
+            if _dotted(jit.func) in ("jax.jit", "jit"):
+                target = _dotted(jit.args[0])
+                if target in defs:
+                    check(defs[target], jit, node)
+    return findings
+
+
+jit_static_drift.code = "jit-static-drift"
+jit_static_drift.summary = ("static_argnames entries must name real "
+                            "parameters; trace-time bool/str config must "
+                            "be declared static")
+
+
+# ---------------------------------------------------------------------------
+# donated-reuse
+# ---------------------------------------------------------------------------
+
+def _expr_key(node: ast.expr) -> Optional[str]:
+    """Stable key for Name / Attribute / constant-Subscript expressions."""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return _dotted(node)
+    if isinstance(node, ast.Subscript):
+        base = _expr_key(node.value)
+        if base is None:
+            return None
+        sl = node.slice
+        if isinstance(sl, ast.Constant):
+            return f"{base}[{sl.value!r}]"
+        if isinstance(sl, ast.Name):
+            return f"{base}[{sl.id}]"
+    return None
+
+
+def donated_reuse(tree, source, path, config) -> List[Finding]:
+    findings: List[Finding] = []
+    donors: Dict[str, Set[int]] = {}
+    for fn in _functions(tree):
+        for deco in fn.decorator_list:
+            jit = _jit_call(deco)
+            if jit is not None:
+                idx = _int_indices(_kw(jit, "donate_argnums"))
+                if idx:
+                    donors[fn.name] = idx
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            jit = _jit_call(node.value)
+            if jit is not None:
+                idx = _int_indices(_kw(jit, "donate_argnums"))
+                key = _expr_key(node.targets[0])
+                if idx and key:
+                    donors[key] = idx
+    if not donors:
+        return findings
+
+    for fn in _functions(tree):
+        stores: List[Tuple[int, str]] = []
+        loads: List[Tuple[int, str]] = []
+        calls: List[ast.Call] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)):
+                key = _expr_key(node)
+                if key is None:
+                    continue
+                if isinstance(node.ctx, ast.Store):
+                    stores.append((node.lineno, key))
+                elif isinstance(node.ctx, ast.Load):
+                    loads.append((node.lineno, key))
+            elif isinstance(node, ast.Call):
+                fkey = _expr_key(node.func)
+                if fkey in donors:
+                    calls.append(node)
+        for call in calls:
+            for i in sorted(donors[_expr_key(call.func)]):
+                if i >= len(call.args):
+                    continue
+                akey = _expr_key(call.args[i])
+                if akey is None:
+                    continue
+                end = call.end_lineno or call.lineno
+                rebinds = [ln for ln, k in stores
+                           if k == akey and ln >= call.lineno]
+                horizon = min(rebinds) if rebinds else None
+                for ln, k in loads:
+                    if k != akey or ln <= end:
+                        continue
+                    if horizon is not None and ln > horizon:
+                        continue
+                    findings.append(Finding(
+                        donated_reuse.code, path, ln, 0,
+                        f"{akey!r} is donated to {_expr_key(call.func)}() "
+                        f"(donate_argnums includes {i}) at line "
+                        f"{call.lineno} and read again here — donated "
+                        f"buffers are invalidated by XLA",
+                        fixit="rebind the result over the donated name "
+                              "(x = f(x)) or stop donating this argument"))
+                    break
+    return findings
+
+
+donated_reuse.code = "donated-reuse"
+donated_reuse.summary = ("a buffer passed through donate_argnums must "
+                         "not be read after the donating call")
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-tick
+# ---------------------------------------------------------------------------
+
+_SYNC_ATTRS = {"item", "block_until_ready"}
+
+
+def _jax_rooted(node: ast.expr) -> bool:
+    """Does the expression mention a jax/jnp-rooted value (device hint)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in ("jnp", "jax"):
+            return True
+    return False
+
+
+def host_sync_in_tick(tree, source, path, config) -> List[Finding]:
+    import re as _re
+    findings: List[Finding] = []
+    lines = source.splitlines()
+    allow = [_re.compile(p) for p in config.host_sync_allow]
+
+    classes = {c.name: c for c in tree.body if isinstance(c, ast.ClassDef)}
+    methods: Dict[Tuple[str, str], ast.FunctionDef] = {}
+    for cname, cls in classes.items():
+        for item in cls.body:
+            if isinstance(item, ast.FunctionDef):
+                methods[(cname, item.name)] = item
+    mod_fns = {f.name: f for f in tree.body if isinstance(f, ast.FunctionDef)}
+
+    # seed: configured roots present in this module
+    work: List[Tuple[Tuple[str, str], str]] = []   # ((class, meth), root)
+    for root in config.tick_roots:
+        if "." in root:
+            cname, mname = root.split(".", 1)
+            if (cname, mname) in methods:
+                work.append(((cname, mname), root))
+    seen: Set[Tuple[str, str]] = set()
+    reached: Dict[Tuple[str, str], str] = {}
+    while work:
+        key, root = work.pop()
+        if key in seen:
+            continue
+        seen.add(key)
+        reached[key] = root
+        cname, _ = key
+        fn = methods.get(key) or mod_fns.get(key[1])
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self"
+                    and (cname, f.attr) in methods):
+                work.append(((cname, f.attr), root))
+            elif isinstance(f, ast.Name) and f.id in mod_fns:
+                work.append((("", f.id), root))
+
+    def flag(node: ast.AST, what: str, root: str):
+        line_src = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if any(p.search(line_src) for p in allow):
+            return
+        findings.append(Finding(
+            host_sync_in_tick.code, path, node.lineno, node.col_offset,
+            f"{what} forces a device→host sync inside the tick call graph "
+            f"(reached from {root}) — this serializes the hot path",
+            fixit="keep the value on device, or move the sync to the "
+                  "deliberate end-of-tick materialization (suppress with "
+                  "a reason if this one is intentional)"))
+
+    for key, root in reached.items():
+        fn = methods.get(key) or mod_fns.get(key[1])
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d in ("np.asarray", "numpy.asarray") and node.args \
+                    and _jax_rooted(node.args[0]):
+                flag(node, "np.asarray(...) on a device value", root)
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_ATTRS and not node.args:
+                flag(node, f".{node.func.attr}()", root)
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id == "float" and node.args \
+                    and (isinstance(node.args[0], ast.Call)
+                         or _jax_rooted(node.args[0])):
+                flag(node, "float(...) on a computed value", root)
+    return findings
+
+
+host_sync_in_tick.code = "host-sync-in-tick"
+host_sync_in_tick.summary = ("no device→host syncs inside the "
+                             "ServingEngine tick / Model.serve_step call "
+                             "graph except the deliberate end-of-tick one")
+
+
+# ---------------------------------------------------------------------------
+# tracer-branch
+# ---------------------------------------------------------------------------
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_tainted(node: ast.expr, tainted: Set[str]) -> bool:
+    """Does *node* read a tainted name, ignoring trace-time-concrete
+    projections (``.shape``/``.ndim``/``.dtype``/``.size``, ``len()``,
+    ``x is [not] None``)?"""
+    if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+        return False
+    if isinstance(node, ast.Compare) and _is_none_check(node):
+        return False
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "len":
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.expr) and _is_tainted(child, tainted):
+            return True
+    return False
+
+
+def _is_none_check(test: ast.expr) -> bool:
+    return (isinstance(test, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+            and any(isinstance(c, ast.Constant) and c.value is None
+                    for c in test.comparators))
+
+
+def _scan_traced_body(fn: ast.FunctionDef, tainted: Set[str], path: str,
+                      context: str, findings: List[Finding]) -> None:
+    tainted = set(tainted)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            if _is_tainted(node.value, tainted):
+                for t in node.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name):
+                            tainted.add(sub.id)
+            else:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        tainted.discard(t.id)
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if not _is_none_check(test) and _is_tainted(test, tainted):
+                findings.append(Finding(
+                    tracer_branch.code, path, test.lineno, test.col_offset,
+                    f"Python {'if' if isinstance(node, ast.If) else 'while'}"
+                    f" on a traced value inside {context} — the branch "
+                    f"runs at trace time, not per element "
+                    f"(ConcretizationTypeError or silently wrong trace)",
+                    fixit="use jnp.where / lax.cond / lax.select, or "
+                          "declare the value static"))
+        elif isinstance(node, ast.Assert):
+            if not _is_none_check(node.test) \
+                    and _is_tainted(node.test, tainted):
+                findings.append(Finding(
+                    tracer_branch.code, path, node.lineno, node.col_offset,
+                    f"assert on a traced value inside {context} — "
+                    f"asserts on tracers fail or vanish under jit",
+                    fixit="assert on shapes/statics only, or use "
+                          "checkify for runtime checks"))
+
+
+def _resolve_kernel(fnode: ast.expr, scope: Dict[str, ast.expr],
+                    defs: Dict[str, ast.FunctionDef]
+                    ) -> Tuple[Optional[ast.FunctionDef], Set[str]]:
+    """Resolve a pallas_call first argument to (def, partial-bound kwargs)."""
+    seen = 0
+    bound: Set[str] = set()
+    while isinstance(fnode, ast.Name) and fnode.id in scope and seen < 4:
+        fnode = scope[fnode.id]
+        seen += 1
+    if isinstance(fnode, ast.Call) \
+            and _dotted(fnode.func) in ("partial", "functools.partial") \
+            and fnode.args:
+        bound = {k.arg for k in fnode.keywords if k.arg}
+        fnode = fnode.args[0]
+    name = _dotted(fnode)
+    if name in defs:
+        return defs[name], bound
+    return None, bound
+
+
+def tracer_branch(tree, source, path, config) -> List[Finding]:
+    findings: List[Finding] = []
+    defs = {f.name: f for f in _functions(tree)}
+
+    # jit'd defs: traced params = signature minus static_argnames
+    for fn in _functions(tree):
+        for deco in fn.decorator_list:
+            jit = _jit_call(deco)
+            if jit is None:
+                continue
+            static = _str_names(_kw(jit, "static_argnames")) or set()
+            names, _ = _sig_names(fn)
+            _scan_traced_body(fn, names - static, path,
+                              f"jit'd {fn.name}()", findings)
+
+    # pallas kernel bodies: positional params are Refs (traced); keyword-
+    # only params and partial-bound keywords are compile-time statics.
+    scanned: Set[str] = set()
+    for holder in [tree, *list(_functions(tree))]:
+        scope: Dict[str, ast.expr] = {}
+        body = holder.body if isinstance(holder, ast.Module) else holder.body
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                scope[stmt.targets[0].id] = stmt.value
+        for node in ast.walk(holder):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if not d or not d.endswith("pallas_call") or not node.args:
+                continue
+            kernel, bound = _resolve_kernel(node.args[0], scope, defs)
+            if kernel is None or kernel.name in scanned:
+                continue
+            scanned.add(kernel.name)
+            a = kernel.args
+            traced = {p.arg for p in [*a.posonlyargs, *a.args]} - bound
+            _scan_traced_body(kernel, traced, path,
+                              f"pallas kernel {kernel.name}()", findings)
+    return findings
+
+
+tracer_branch.code = "tracer-branch"
+tracer_branch.summary = ("no Python if/while/assert on traced values in "
+                         "jit'd functions or Pallas kernel bodies")
+
+
+# ---------------------------------------------------------------------------
+# interpret-hardcoded
+# ---------------------------------------------------------------------------
+
+def interpret_hardcoded(tree, source, path, config) -> List[Finding]:
+    findings: List[Finding] = []
+    resolver = config.interpret_resolver
+
+    # map lineno ranges of resolver defs so we can skip their bodies
+    skip_ranges = []
+    for fn in _functions(tree):
+        if fn.name == resolver or fn.name == f"_{resolver}":
+            skip_ranges.append((fn.lineno, fn.end_lineno or fn.lineno))
+
+    def in_resolver(node):
+        return any(lo <= node.lineno <= hi for lo, hi in skip_ranges)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and not in_resolver(node):
+            for k in node.keywords:
+                if k.arg == "interpret" \
+                        and isinstance(k.value, ast.Constant) \
+                        and isinstance(k.value.value, bool):
+                    findings.append(Finding(
+                        interpret_hardcoded.code, path, k.value.lineno,
+                        k.value.col_offset,
+                        f"call site hardcodes interpret={k.value.value} — "
+                        f"kernels must route through {resolver}() so the "
+                        f"same code compiles on TPU (ROADMAP: TPU "
+                        f"validation)",
+                        fixit=f"pass interpret={resolver}(interpret) or "
+                              f"accept interpret=None and resolve inside"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+            defaults = [*([None] * (len(a.posonlyargs) + len(a.args)
+                                    - len(a.defaults))),
+                        *a.defaults, *a.kw_defaults]
+            for p, default in zip(params, defaults):
+                if p.arg == "interpret" \
+                        and isinstance(default, ast.Constant) \
+                        and isinstance(default.value, bool):
+                    findings.append(Finding(
+                        interpret_hardcoded.code, path, p.lineno,
+                        p.col_offset,
+                        f"{node.name}() defaults interpret="
+                        f"{default.value} — off-TPU callers silently pin "
+                        f"the kernel to {'interpret' if default.value else 'compiled'}"
+                        f" mode instead of resolving by backend",
+                        fixit=f"default interpret=None and resolve via "
+                              f"{resolver}() inside the function"))
+    return findings
+
+
+interpret_hardcoded.code = "interpret-hardcoded"
+interpret_hardcoded.summary = ("interpret mode must be resolved through "
+                               "resolve_interpret(), never hardcoded")
+
+
+# ---------------------------------------------------------------------------
+# blockspec-arity
+# ---------------------------------------------------------------------------
+
+def _resolve_name(node: Optional[ast.expr],
+                  scope: Dict[str, ast.expr], depth: int = 4
+                  ) -> Optional[ast.expr]:
+    while isinstance(node, ast.Name) and node.id in scope and depth > 0:
+        node = scope[node.id]
+        depth -= 1
+    return node
+
+
+def blockspec_arity(tree, source, path, config) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # Functions first (their local scope resolves grid/spec names), then
+    # the module pass; each pallas_call is judged at most once.
+    processed: Set[int] = set()
+    for holder in [*list(_functions(tree)), tree]:
+        scope: Dict[str, ast.expr] = {}
+        for stmt in holder.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                scope[stmt.targets[0].id] = stmt.value
+        for node in ast.walk(holder):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if not d or not d.endswith("pallas_call"):
+                continue
+            grid_expr = _resolve_name(_kw(node, "grid"), scope)
+            prefetch = 0
+            spec_lists = [_kw(node, "in_specs"), _kw(node, "out_specs")]
+            gs = _resolve_name(_kw(node, "grid_spec"), scope)
+            if isinstance(gs, ast.Call) and _dotted(gs.func) \
+                    and _dotted(gs.func).endswith("PrefetchScalarGridSpec"):
+                grid_expr = _resolve_name(_kw(gs, "grid"), scope)
+                pf = _kw(gs, "num_scalar_prefetch")
+                if isinstance(pf, ast.Constant) \
+                        and isinstance(pf.value, int):
+                    prefetch = pf.value
+                spec_lists = [_kw(gs, "in_specs"), _kw(gs, "out_specs")]
+            if not isinstance(grid_expr, ast.Tuple):
+                continue            # grid not statically resolvable
+            if id(node) in processed:
+                continue
+            processed.add(id(node))
+            expected = len(grid_expr.elts) + prefetch
+
+            specs: List[ast.expr] = []
+            for sl in spec_lists:
+                sl = _resolve_name(sl, scope)
+                if isinstance(sl, (ast.Tuple, ast.List)):
+                    specs.extend(sl.elts)
+                elif sl is not None:
+                    specs.append(sl)
+            for spec in specs:
+                spec = _resolve_name(spec, scope)
+                if not (isinstance(spec, ast.Call) and _dotted(spec.func)
+                        and _dotted(spec.func).endswith("BlockSpec")):
+                    continue
+                lam = next((x for x in [*spec.args,
+                                        *[k.value for k in spec.keywords]]
+                            if isinstance(x, ast.Lambda)), None)
+                if lam is None:
+                    continue
+                named = len(lam.args.posonlyargs) + len(lam.args.args)
+                vararg = lam.args.vararg is not None
+                bad = (named > expected) if vararg else (named != expected)
+                if bad:
+                    findings.append(Finding(
+                        blockspec_arity.code, path, lam.lineno,
+                        lam.col_offset,
+                        f"index_map takes {named} argument(s) but the "
+                        f"grid supplies {expected} (rank "
+                        f"{len(grid_expr.elts)} + num_scalar_prefetch "
+                        f"{prefetch}) — Pallas will mis-thread grid "
+                        f"indices or fail at trace time",
+                        fixit=f"make the lambda take exactly {expected} "
+                              f"args (or a trailing *_ for unused ones)"))
+    return findings
+
+
+blockspec_arity.code = "blockspec-arity"
+blockspec_arity.summary = ("Pallas index_map arity must equal grid rank "
+                           "+ num_scalar_prefetch")
+
+
+ALL_RULES = [
+    jit_static_drift,
+    donated_reuse,
+    host_sync_in_tick,
+    tracer_branch,
+    interpret_hardcoded,
+    blockspec_arity,
+]
