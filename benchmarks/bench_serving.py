@@ -21,6 +21,12 @@ Three traces:
   each mode, and every token stream is **bit-identical** to the
   unpressured run; the report adds preemption counts, swap bytes, and
   TTFT/TPOT p50/p99 for all three engines.
+* **paged-archs** — the non-vanilla decoder archs the paged engine now
+  covers: deepseek-v2 (MLA latent rows) and zamba2 (SSM/hybrid state
+  slots), each drained through the paged fused engine and the legacy
+  static engine.  Streams asserted identical; the ``paged_archs`` report
+  entry compares decode tok/s and the KV footprint (on-demand blocks vs
+  the legacy ``slots * max_tokens`` static reservation).
 
 Report keys per engine:
 
@@ -222,6 +228,105 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
     }, streams
 
 
+def _build_arch_model(arch: str, seed: int = 0):
+    """Reduced model for a non-vanilla arch: MLA (latent rows) or
+    SSM/hybrid (state slots).  residual=32 keeps the bench prompts
+    commit-free through prefill, so the legacy engine (which attends fp
+    K/V during its one-shot prefill) stays a bit-exact baseline for the
+    paged chunked path."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.core.asymkv import AsymKVPolicy
+    from repro.models.transformer import Model
+
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    if n == 0:
+        pol = AsymKVPolicy.float_cache(n, group=8, residual=32)
+    else:
+        pol = AsymKVPolicy(n_layers=n, l_k=(n + 1) // 2, l_v=0,
+                           high_bits=2, low_bits=1, group=8, residual=32)
+    model = Model(cfg, pol, group=8, residual=32)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _bench_arch(arch: str, *, n_requests: int, max_new: int,
+                repeats: int) -> dict:
+    """Paged fused engine vs the legacy static engine on one arch.
+
+    Uniform prompt lengths AND decode budgets: the legacy engine left-pads
+    every slot to ``prompt_len`` and re-prefills the whole batch on any
+    admission (resetting in-flight slots), so it is only a sound baseline
+    when requests finish in whole admission waves.  Streams asserted
+    identical, and the KV footprint compared: the legacy engine reserves
+    ``slots * max_tokens`` rows up front while the paged engine allocates
+    blocks on demand."""
+    import jax.numpy as jnp
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg, model, params = _build_arch_model(arch)
+    P, slots, max_tokens, BT = 24, 2, 96, 8
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, P, dtype=np.int32),
+                max_new_tokens=max_new)
+        for i in range(n_requests)
+    ]
+
+    def drive(paged: bool):
+        if paged:
+            eng = ServingEngine(model, params, slots=slots,
+                                max_tokens=max_tokens, dtype=jnp.float32,
+                                fused=True, block_tokens=BT, prefill_chunk=8)
+        else:
+            eng = ServingEngine(model, params, slots=slots,
+                                max_tokens=max_tokens, dtype=jnp.float32,
+                                paged=False, prompt_len=P)
+        _drain(eng, reqs)                 # warmup drain: pays compiles
+        best, blocks = None, 0
+        for _ in range(max(1, repeats)):
+            a0 = eng.alloc.allocated_total if paged else 0
+            res = _drain(eng, reqs)
+            if best is None or res[1] < best[1]:
+                best = res
+                blocks = (eng.alloc.allocated_total - a0) if paged else 0
+        done, wall, ticks = best[0], best[1], best[2]
+        dec = sum(max(0, len(r.output) - 1) for r in done)
+        streams = {r.rid: list(r.output) for r in done}
+        out = {
+            "mode": "paged" if paged else "legacy",
+            "requests": len(done),
+            "decode_tokens": dec,
+            "wall_s": wall,
+            "decode_tok_s": dec / max(wall, 1e-9),
+            "ticks": ticks,
+            "kv_tokens_reserved": (blocks * BT if paged
+                                   else slots * max_tokens),
+        }
+        if paged:
+            out["blocks_allocated"] = blocks
+        return out, streams
+
+    paged, s_p = drive(True)
+    legacy, s_l = drive(False)
+    assert s_p == s_l, (
+        f"{arch}: paged streams diverged from the legacy baseline")
+    return {
+        "arch": arch,
+        "pattern": cfg.pattern,
+        "trace": {"n_requests": n_requests, "prompt_len": P,
+                  "max_new_tokens": max_new, "slots": slots,
+                  "max_tokens": max_tokens, "block_tokens": BT},
+        "paged": paged,
+        "legacy": legacy,
+        "decode_tok_s_ratio": paged["decode_tok_s"] / max(
+            legacy["decode_tok_s"], 1e-9),
+        "kv_tokens_ratio": paged["kv_tokens_reserved"] / max(
+            legacy["kv_tokens_reserved"], 1),
+    }
+
+
 def _commit_microbench(*, fused: bool, iters: int = 20) -> dict:
     """Times the cache commit in isolation: one jit'd ``write_chunk`` at a
     steady-state length, so every call quantizes + scatters the same number
@@ -380,6 +485,14 @@ def main() -> None:
         assert (ov_sa["resume_stall_ticks"]
                 < ov["swap"]["resume_stall_ticks"]), (ov_sa, ov["swap"])
 
+    # --- paged archs: MLA latent rows + SSM/hybrid state slots -----------
+    arch_n = 3 if args.tiny else 5
+    paged_archs = {
+        arch: _bench_arch(arch, n_requests=arch_n, max_new=24,
+                          repeats=args.repeats)
+        for arch in ("deepseek-v2-236b", "zamba2-2.7b")
+    }
+
     report = {
         "bench": "serving_fused_vs_alternating",
         "model": cfg.name,
@@ -412,6 +525,7 @@ def main() -> None:
             "swap": ov["swap"],
             "recompute": ov["recompute"],
         },
+        "paged_archs": paged_archs,
         "commit_fusion": {
             # CPU caveat: the fused kernel runs in Pallas interpret mode
             # here, so µs/group ratios are NOT what a compiled TPU run
@@ -471,6 +585,13 @@ def main() -> None:
           f"({cf['backend']}); mixed tick device "
           f"{fused['tick_device_s']:.3f}s jnp-commit vs "
           f"{fusedc['tick_device_s']:.3f}s fused-commit")
+    for arch, pa in paged_archs.items():
+        print(f"paged-arch/{arch} [{pa['pattern']}]: "
+              f"{pa['paged']['decode_tok_s']:.1f} paged vs "
+              f"{pa['legacy']['decode_tok_s']:.1f} legacy decode tok/s, "
+              f"KV {pa['paged']['kv_tokens_reserved']} vs "
+              f"{pa['legacy']['kv_tokens_reserved']} tokens reserved "
+              f"({pa['paged']['blocks_allocated']} blocks)")
     print(f"swap-ahead: resume stalls "
           f"{cf['swap_ahead']['off']['resume_stall_ticks']} -> "
           f"{cf['swap_ahead']['on']['resume_stall_ticks']} "

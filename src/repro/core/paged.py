@@ -900,9 +900,13 @@ class PrefixNode:
     """One cached full block of prompt tokens.  ``blocks`` maps each block
     *mapping* (the engine's ``"global"`` mapping plus one per windowed
     stage) to the pool block id holding this span's committed groups in
-    that mapping's pools."""
+    that mapping's pools.  For hybrid/SSM archs ``ssm`` additionally holds
+    a host snapshot of the donor slot's recurrent state at this node's
+    block boundary (None until the donor's chunk cadence lands on it) —
+    attention blocks can be shared mid-stream, but an SSM state can only
+    be restored at a token count it was actually captured at."""
 
-    __slots__ = ("key", "parent", "children", "blocks", "last_used")
+    __slots__ = ("key", "parent", "children", "blocks", "last_used", "ssm")
 
     def __init__(self, key: bytes, parent: Optional["PrefixNode"],
                  blocks: dict):
@@ -911,6 +915,7 @@ class PrefixNode:
         self.children: dict[bytes, "PrefixNode"] = {}
         self.blocks = blocks
         self.last_used = 0
+        self.ssm = None
 
 
 class PrefixCache:

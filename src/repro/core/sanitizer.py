@@ -266,6 +266,10 @@ class CacheSanitizer:
             sh.table[slot] = 0
             sh.lengths[slot] = 0
             sh.min_block[slot] = 0
+            # A release ends the occupant's tenure; the frontier mark must
+            # not carry over, or a request resuming into its old slot via
+            # recompute (frontier restarts at 0) reads as a regression.
+            self._commit_marks.pop(slot, None)
 
         wrap("_alloc", post_alloc)
         wrap("acquire", post_acquire)

@@ -155,9 +155,11 @@ def main():
         # "all" sweeps the assigned per-arch grid; an explicit --shape also
         # reaches the opt-in paged serving cells (serve_chunk/serve_decode/
         # serve_mixed/serve_shared_prefix), which cells_for never returns —
-        # but only for archs the paged path covers (Model.supports_paged:
-        # no SSM/enc-dec/MLA/vision), so the default --arch all sweep
-        # doesn't record guaranteed failures.
+        # but only for archs the paged path covers.  That is now the whole
+        # decoder-only zoo (full/GQA/local/global attention, MLA latent
+        # rows, SSM/hybrid state slots); cfg_supports_paged only declines
+        # enc-dec and vision-frontend archs, so the default --arch all
+        # sweep doesn't record guaranteed failures.
         explicit = SHAPES.get(args.shape)
         paged_ok = Model.cfg_supports_paged(get_config(arch))
         shapes = ([c.name for c in cells] if args.shape == "all"

@@ -40,7 +40,9 @@ SHAPES = {
     # Paged serving cells — the continuous-batching engine's two compiled
     # shapes (chunked prefill + per-slot decode) at production scale.
     # Opt-in by name (not part of the assigned per-arch grid returned by
-    # cells_for — paged serving doesn't cover SSM/enc-dec/MLA archs yet).
+    # cells_for).  Paged serving covers the decoder-only zoo — full/GQA/
+    # local/global attention, MLA latent rows, SSM/hybrid state slots —
+    # only enc-dec and vision-frontend archs still take the legacy path.
     "serve_chunk_8k": ShapeCell("serve_chunk_8k", "chunk", 8192, 64,
                                 layout="paged", chunk=256,
                                 block_tokens=256),

@@ -25,7 +25,7 @@ from repro.distributed.sharding import (
 )
 from repro.launch.shapes import ShapeCell
 from repro.models.layers import spec_shapes
-from repro.models.ssm import SSMState
+from repro.models.ssm import PagedSSMState, SSMState
 from repro.models.transformer import Model
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_step import init_train_state, make_train_step
@@ -232,11 +232,26 @@ def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
         return SSMState(conv=P(None, b_ax, None, c_ax),
                         h=P(None, b_ax, h_ax, None, None))
 
+    def one_paged_ssm(s: PagedSSMState):
+        # Stacked leaves [L, slots, …]: slots shard like a batch axis,
+        # heads / conv channels over model when divisible.
+        S = s.conv.shape[1]
+        b_ax = _axes_fit(S, ("pod", "data"), mesh)
+        H = s.h.shape[2]
+        h_ax = mdl if (mdl and H % mesh.shape[mdl] == 0) else None
+        cc = s.conv.shape[-1]
+        c_ax = mdl if (mdl and cc % mesh.shape[mdl] == 0) else None
+        return PagedSSMState(conv=P(None, b_ax, None, c_ax),
+                             h=P(None, b_ax, h_ax, None, None),
+                             lengths=P(None, b_ax))
+
     def dispatch(x):
         if isinstance(x, LayerKVCache):
             return one_cache(x)
         if isinstance(x, PagedKVCache):
             return one_paged(x)
+        if isinstance(x, PagedSSMState):
+            return one_paged_ssm(x)
         if isinstance(x, SSMState):
             return one_ssm(x)
         return x
@@ -244,7 +259,7 @@ def cache_pspecs(caches_struct, mesh: Mesh, *, seq_axes: tuple = (),
     return jax.tree.map(
         dispatch, caches_struct,
         is_leaf=lambda x: isinstance(
-            x, (LayerKVCache, PagedKVCache, SSMState)))
+            x, (LayerKVCache, PagedKVCache, PagedSSMState, SSMState)))
 
 
 def _to_shardings(pspec_tree, mesh):

@@ -21,11 +21,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention_quant import decode_attend, flash_prefill
+from repro.core.attention_quant import (decode_attend, flash_prefill,
+                                        paged_chunk_attend,
+                                        paged_decode_attend)
 from repro.core.kvcache import LayerKVCache
+from repro.core.paged import PagedKVCache
 from repro.models.layers import Spec, apply_rope, linear, rms_norm
 
-__all__ = ["mla_specs", "mla_fwd", "init_mla_cache"]
+__all__ = ["mla_specs", "mla_fwd", "init_mla_cache", "init_paged_mla_cache"]
 
 
 def mla_specs(cfg: ModelConfig) -> dict:
@@ -67,6 +70,33 @@ def init_mla_cache(
         dtype=dtype, v_slice_offset=m.rope_head_dim)
 
 
+def init_paged_mla_cache(
+    cfg: ModelConfig,
+    slots: int,
+    k_bits: int,
+    v_bits: int,  # unused — the latent is score-path, K policy governs
+    *,
+    num_blocks: int,
+    block_tokens: int,
+    max_tokens: int,
+    group: int = 32,
+    residual: int = 128,
+    dtype=jnp.bfloat16,
+) -> PagedKVCache:
+    """Paged latent cache: one ``[k_rope ‖ c_kv]`` row per token with
+    ``kv_heads=1`` and ``v_slice_offset=rope_head_dim`` — the V side of the
+    pools is never allocated and ``quant_commit`` skips it (values are read
+    as the ``c_kv`` slice of the dequantized K rows)."""
+    m = cfg.mla
+    width = m.rope_head_dim + m.kv_lora_rank
+    return PagedKVCache.init(
+        slots, 1, width,
+        num_blocks=num_blocks, block_tokens=block_tokens,
+        max_tokens=max_tokens, k_bits=k_bits, v_bits=0,
+        group=group, residual=residual, dtype=dtype,
+        v_slice_offset=m.rope_head_dim)
+
+
 def _project(params, x, cfg: ModelConfig, positions):
     """Shared q / latent projections.  Returns (q_nope, q_rope, c_kv, k_rope)
     with shapes [B,S,H,·], [B,S,H,rope], [B,S,kv_lora], [B,S,rope]."""
@@ -80,7 +110,11 @@ def _project(params, x, cfg: ModelConfig, positions):
     ckv_full = linear(x, params["w_dkv"])  # [B,S,kv_lora+rope]
     c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], params["kv_norm"],
                     cfg.norm_eps)
-    k_rope = apply_rope(ckv_full[..., m.kv_lora_rank:], positions,
+    # k_rope has no head axis, so paged per-slot positions ([S,1,C], built
+    # to broadcast against [B,H,S,hd]) must drop their singleton head dim
+    # or the [B,S,rope] rotation mis-broadcasts to [B,B,C,rope].
+    k_pos = positions[:, 0] if positions.ndim == 3 else positions
+    k_rope = apply_rope(ckv_full[..., m.kv_lora_rank:], k_pos,
                         cfg.rope_theta)  # [B,S,rope] shared across heads
     return q_nope, q_rope, c_kv, k_rope
 
@@ -98,6 +132,10 @@ def mla_fwd(
     decode_block: int = 1024,
     seqpar_axes: Optional[tuple] = None,
     seqpar_min: int = 1 << 62,
+    valid: Optional[jax.Array] = None,  # [S] — paged decode/chunk validity
+    decode_active: Optional[jax.Array] = None,  # [S] — serve decode rows
+    use_pallas: bool = False,  # accepted for signature parity; latent
+    fused_commit: bool = False,  # caches always take the jnp attends
 ):
     """Returns (out [B,S,d], updated cache or None)."""
     m = cfg.mla
@@ -105,6 +143,43 @@ def mla_fwd(
     H = cfg.n_heads
     sm_scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
     q_nope, q_rope, c_kv, k_rope = _project(params, x, cfg, positions)
+
+    if isinstance(cache, PagedKVCache):
+        # Absorbed form against the paged latent store.  The unified Pallas
+        # kernel declines latent caches (``kernel_supported``), so reads go
+        # through the jnp paged attends with the MLA softmax scale.
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope,
+                           params["w_uk"].astype(q_nope.dtype))
+        q_cat = jnp.concatenate([q_rope, q_abs], axis=-1)  # [S,·,H,rope+lora]
+        q = q_cat.swapaxes(1, 2)                           # [S,H,·,rope+lora]
+        row = jnp.concatenate([k_rope, c_kv], axis=-1)[:, None]  # [S,1,·,W]
+        if mode == "serve":
+            C = q.shape[2] - 1
+            start = cache.lengths
+            cache = cache.write_chunk(row[:, :, :C], None, valid,
+                                      fused=fused_commit)
+            cache = cache.append(row[:, :, C:], None, decode_active,
+                                 fused=fused_commit)
+            q_pos = jnp.concatenate(
+                [start[:, None] + jnp.arange(C, dtype=jnp.int32)[None],
+                 start[:, None]], axis=1)                  # [S, C+1]
+            out_latent = paged_chunk_attend(q, cache, start, q_pos=q_pos,
+                                            scale=sm_scale)
+        elif mode == "chunk":
+            q_start = cache.lengths
+            cache = cache.write_chunk(row, None, valid, fused=fused_commit)
+            out_latent = paged_chunk_attend(q, cache, q_start,
+                                            scale=sm_scale)
+        else:
+            assert mode == "decode" and S == 1
+            active = None if valid is None else valid > 0
+            cache = cache.append(row, None, active, fused=fused_commit)
+            out_latent = paged_decode_attend(q, cache, scale=sm_scale)
+        out_latent = out_latent.swapaxes(1, 2)  # [B,S,H,kv_lora]
+        out = jnp.einsum("bshl,lhv->bshv", out_latent,
+                         params["w_uv"].astype(out_latent.dtype))
+        o = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(out.dtype))
+        return o, cache
 
     if mode == "decode":
         assert cache is not None and S == 1

@@ -27,7 +27,8 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import Spec, linear, rms_norm
 
 __all__ = ["ssm_specs", "SSMState", "init_ssm_state", "mamba2_fwd",
-           "mamba2_decode_step"]
+           "mamba2_decode_step", "PagedSSMState", "init_paged_ssm_state",
+           "mamba2_serve_scan"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -39,6 +40,28 @@ class SSMState:
 
     def tree_flatten(self):
         return (self.conv, self.h), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedSSMState:
+    """Per-slot SSM state owned by the paged serving engine.
+
+    ``conv``/``h`` are slot-indexed analogues of :class:`SSMState`.  The
+    ``lengths`` leaf mirrors the attention stages' per-slot frontier so the
+    model's chunk/serve steps can read positions off any cache entry; the
+    engine broadcasts the allocator's lengths into it each tick.
+    """
+    conv: jax.Array     # [S, d_conv, conv_channels] (ring of raw inputs)
+    h: jax.Array        # [S, H, P, N] fp32
+    lengths: jax.Array  # [S] int32 — tokens absorbed per slot
+
+    def tree_flatten(self):
+        return (self.conv, self.h, self.lengths), None
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -74,6 +97,16 @@ def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMState
     return SSMState(
         conv=jnp.zeros((batch, s.d_conv, conv_ch), dtype),
         h=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def init_paged_ssm_state(cfg: ModelConfig, slots: int,
+                         dtype=jnp.bfloat16) -> PagedSSMState:
+    s, d_in, H, conv_ch = _dims(cfg)
+    return PagedSSMState(
+        conv=jnp.zeros((slots, s.d_conv, conv_ch), dtype),
+        h=jnp.zeros((slots, H, s.head_dim, s.d_state), jnp.float32),
+        lengths=jnp.zeros((slots,), jnp.int32),
     )
 
 
@@ -196,19 +229,23 @@ def mamba2_fwd(
     return out, new_state
 
 
-def mamba2_decode_step(params: dict, x: jax.Array, cfg: ModelConfig,
-                       state: SSMState):
-    """Single-token step.  x: [B, 1, d] → (out [B,1,d], new state)."""
+def _step_core(params: dict, xt: jax.Array, cfg: ModelConfig,
+               conv: jax.Array, h: jax.Array):
+    """One-token recurrence shared by decode and the masked serve scan.
+
+    xt: [B, 1, d]; conv: [B, d_conv, CC] pre-update ring; h: [B, H, P, N].
+    Returns (out [B,1,d], conv_new, h_new).
+    """
     s, d_in, H, conv_ch = _dims(cfg)
-    B = x.shape[0]
+    B = xt.shape[0]
     P, N, G = s.head_dim, s.d_state, s.n_groups
     rep = H // G
 
-    z, xbc_raw, dt = _split_proj(params, x, cfg)
-    conv = jnp.concatenate([state.conv[:, 1:], xbc_raw.astype(state.conv.dtype)],
-                           axis=1)  # [B, d_conv, CC]
+    z, xbc_raw, dt = _split_proj(params, xt, cfg)
+    conv_new = jnp.concatenate([conv[:, 1:], xbc_raw.astype(conv.dtype)],
+                               axis=1)  # [B, d_conv, CC]
     xbc = jax.nn.silu(
-        jnp.einsum("bkc,kc->bc", conv.astype(jnp.float32),
+        jnp.einsum("bkc,kc->bc", conv_new.astype(jnp.float32),
                    params["conv_w"].astype(jnp.float32))
         + params["conv_b"].astype(jnp.float32))[:, None]  # [B,1,CC]
     xin = xbc[..., :d_in].reshape(B, H, P)
@@ -221,12 +258,58 @@ def mamba2_decode_step(params: dict, x: jax.Array, cfg: ModelConfig,
     decay = jnp.exp(dtv * A)  # [B,H]
     Brep = jnp.repeat(Bm, rep, axis=1)  # [B,H,N]
     Crep = jnp.repeat(Cm, rep, axis=1)
-    h = (decay[:, :, None, None] * state.h
-         + (dtv[..., None] * xin.astype(jnp.float32))[..., None]
-         * Brep[:, :, None, :].astype(jnp.float32))
-    y = jnp.einsum("bhpn,bhn->bhp", h, Crep.astype(jnp.float32))
+    h_new = (decay[:, :, None, None] * h
+             + (dtv[..., None] * xin.astype(jnp.float32))[..., None]
+             * Brep[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Crep.astype(jnp.float32))
     y = y + params["D"].astype(jnp.float32)[:, None] * xin.astype(jnp.float32)
-    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y.reshape(B, 1, d_in).astype(xt.dtype)
     y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
     out = linear(y, params["w_out"])
+    return out, conv_new, h_new
+
+
+def mamba2_decode_step(params: dict, x: jax.Array, cfg: ModelConfig,
+                       state: SSMState):
+    """Single-token step.  x: [B, 1, d] → (out [B,1,d], new state)."""
+    out, conv, h = _step_core(params, x, cfg, state.conv, state.h)
     return out, SSMState(conv=conv, h=h)
+
+
+def mamba2_serve_scan(params: dict, x: jax.Array, cfg: ModelConfig,
+                      state, mask: Optional[jax.Array] = None):
+    """Sequential per-token scan with an optional per-token validity mask.
+
+    x: [B, C, d]; mask: [B, C] bool (or None = all valid).  Masked-out
+    tokens still produce (garbage) outputs but leave ``(conv, h)`` for
+    their row untouched, so chunked prefill over ragged tails is
+    bit-identical to an unpadded sequential run.  Serving paths use this
+    scan for *all* multi-token SSM updates — the chunked dual form
+    (:func:`mamba2_fwd`) reorders float reductions and stays train-only —
+    which is what makes paged and legacy streams match bit-for-bit.
+
+    ``state`` may be an :class:`SSMState` or a :class:`PagedSSMState`;
+    the same type is returned (extra leaves such as ``lengths`` are
+    preserved via ``dataclasses.replace``).
+    """
+    xs = x.transpose(1, 0, 2)[:, :, None, :]  # [C, B, 1, d]
+
+    if mask is None:
+        def body(carry, xt):
+            conv, h = carry
+            out, conv_new, h_new = _step_core(params, xt, cfg, conv, h)
+            return (conv_new, h_new), out[:, 0]
+        (conv, h), ys = lax.scan(body, (state.conv, state.h), xs)
+    else:
+        def body(carry, inp):
+            conv, h = carry
+            xt, mt = inp  # xt: [B,1,d], mt: [B] bool
+            out, conv_new, h_new = _step_core(params, xt, cfg, conv, h)
+            conv_new = jnp.where(mt[:, None, None], conv_new, conv)
+            h_new = jnp.where(mt[:, None, None, None], h_new, h)
+            return (conv_new, h_new), out[:, 0]
+        (conv, h), ys = lax.scan(body, (state.conv, state.h),
+                                 (xs, mask.transpose(1, 0)))
+
+    out = ys.transpose(1, 0, 2)  # [B, C, d]
+    return out, dataclasses.replace(state, conv=conv, h=h)

@@ -305,39 +305,54 @@ class Model:
     def cfg_supports_paged(cfg: ModelConfig) -> bool:
         """Config-level paged-serving support check (no Model needed —
         the dry-run CLI gates opt-in paged cells with this)."""
-        return not (cfg.is_encdec or cfg.mla or cfg.frontend
-                    or "M" in cfg.pattern)
+        return not (cfg.is_encdec or cfg.frontend)
 
     def supports_paged(self) -> bool:
-        """Paged serving covers decoder-only attention archs (A/E/L/G/Z).
-        SSM chunk-state masking, encoder-decoder cross caches, MLA latent
-        paging and vision prefixes are ROADMAP follow-ons."""
+        """Paged serving covers every decoder-only config in the zoo:
+        attention archs (A/E/L/G/Z), MLA (latent rows via
+        ``v_slice_offset``), and SSM/hybrid patterns (per-slot conv/ssm
+        state with masked chunk updates).  Encoder-decoder cross caches
+        and vision prefixes remain ROADMAP follow-ons."""
         return self.cfg_supports_paged(self.cfg)
 
     def init_paged_caches(self, slots: int, max_tokens: int, *,
                           num_blocks: int, block_tokens: int,
                           dtype=jnp.bfloat16) -> dict:
-        """Paged cache pytree: ``run{i}_stage{j}`` → stacked PagedKVCache.
+        """Paged cache pytree: ``run{i}_stage{j}`` → stacked PagedKVCache
+        (stacked :class:`~repro.models.ssm.PagedSSMState` for M runs).
 
         Every stage gets its own block *pool* (its bit-widths differ), but
         all stages share one logical block mapping: the engine's
         ``BlockAllocator`` hands out block ids valid in every pool, and the
-        per-stage ``page_table`` leaves are kept identical.
+        per-stage ``page_table`` leaves are kept identical.  M runs carry
+        no blocks — just one fixed-size state slot per sequence whose
+        ``lengths`` leaf tracks the same per-slot frontier.
         """
         cfg = self.cfg
         if not self.supports_paged():
             raise NotImplementedError(
                 f"paged serving unsupported for {cfg.name} "
-                "(SSM/enc-dec/MLA/vision-frontend)")
+                "(enc-dec/vision-frontend)")
         caches: dict[str, Any] = {}
         for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                st = ssm_mod.init_paged_ssm_state(cfg, slots, dtype)
+                caches[f"run{i}_stage0"] = self._stack(st, run.count)
+                continue
             for j, stg in enumerate(self.run_stages(run)):
                 n = stg.hi - stg.lo
-                one = attn_mod.init_paged_attn_cache(
-                    cfg, slots, stg.k_bits, stg.v_bits,
-                    num_blocks=num_blocks, block_tokens=block_tokens,
-                    max_tokens=max_tokens, group=self.group,
-                    residual=self.residual, dtype=dtype)
+                if cfg.mla:
+                    one = mla_mod.init_paged_mla_cache(
+                        cfg, slots, stg.k_bits, stg.v_bits,
+                        num_blocks=num_blocks, block_tokens=block_tokens,
+                        max_tokens=max_tokens, group=self.group,
+                        residual=self.residual, dtype=dtype)
+                else:
+                    one = attn_mod.init_paged_attn_cache(
+                        cfg, slots, stg.k_bits, stg.v_bits,
+                        num_blocks=num_blocks, block_tokens=block_tokens,
+                        max_tokens=max_tokens, group=self.group,
+                        residual=self.residual, dtype=dtype)
                 caches[f"run{i}_stage{j}"] = self._stack(one, n)
         return caches
 
@@ -369,7 +384,10 @@ class Model:
             a_out, cache = mla_mod.mla_fwd(
                 p["attn"], h, cfg, mode=mode, positions=positions,
                 cache=cache, seqpar_axes=self.seqpar_axes,
-                seqpar_min=self.seqpar_min_tokens)
+                seqpar_min=self.seqpar_min_tokens, valid=valid,
+                decode_active=decode_active,
+                use_pallas=self.use_pallas,
+                fused_commit=self.fused_commit)
         else:
             a_out, cache = attn_mod.attention_fwd(
                 p["attn"], h, cfg, mode=mode, positions=positions,
@@ -598,17 +616,39 @@ class Model:
         new_caches = {}
         for i, run in enumerate(self.runs):
             if run.kind == "M":
-                if mode in ("chunk", "serve"):
-                    raise NotImplementedError(
-                        "chunked prefill over SSM runs needs masked state "
-                        "updates (see init_paged_caches gating)")
+                # Every multi-token serving update goes through the
+                # sequential masked scan (never the chunked dual form,
+                # which reorders float reductions) so legacy prefill,
+                # paged chunked prefill, and the fused serve tick produce
+                # bit-identical streams.
                 st = caches[f"run{i}_stage0"]
                 if mode == "prefill":
                     def mstep(p, s, x):
                         h = _apply_norm(cfg, p["norm"], x)
-                        out, ns = ssm_mod.mamba2_fwd(
-                            p["mixer"], h, cfg, state=None,
-                            return_state=True)
+                        out, ns = ssm_mod.mamba2_serve_scan(
+                            p["mixer"], h, cfg, s)
+                        return x + out, ns
+                elif mode in ("chunk", "serve"):
+                    C = x.shape[1] - (1 if mode == "serve" else 0)
+                    mask = (jnp.arange(C, dtype=jnp.int32)[None]
+                            < valid[:, None])
+                    if mode == "serve":
+                        # prefilling and decoding slots are disjoint per
+                        # tick, so chunk rows then the decode row is each
+                        # slot's correct stream order
+                        mask = jnp.concatenate(
+                            [mask, decode_active[:, None]], axis=1)
+                    def mstep(p, s, x, mask=mask):
+                        h = _apply_norm(cfg, p["norm"], x)
+                        out, ns = ssm_mod.mamba2_serve_scan(
+                            p["mixer"], h, cfg, s, mask=mask)
+                        return x + out, ns
+                elif valid is not None:  # paged decode: mask idle slots
+                    mask = (valid > 0)[:, None]
+                    def mstep(p, s, x, mask=mask):
+                        h = _apply_norm(cfg, p["norm"], x)
+                        out, ns = ssm_mod.mamba2_serve_scan(
+                            p["mixer"], h, cfg, s, mask=mask)
                         return x + out, ns
                 else:
                     def mstep(p, s, x):

@@ -66,7 +66,12 @@ Three modes, one API:
 
 * **Legacy static batching** — the original pad-to-``prompt_len``
   generational engine, kept for archs the paged path doesn't cover yet
-  (SSM hybrids, encoder-decoder, MLA; see ``Model.supports_paged``).
+  (encoder-decoder, vision frontends; see ``Model.supports_paged``) and
+  as the differential baseline the paged matrix is checked against.
+  MLA archs page their latent rows (``v_slice_offset`` caches) and
+  SSM/hybrid archs carry one conv/ssm state slot per sequence
+  (:class:`~repro.models.ssm.PagedSSMState`) with masked per-chunk state
+  updates — both run the full paged feature set (sharing, preemption).
 
 ``ticks`` counts jit'd step invocations; ``tick_times`` their wall times —
 the serving benchmark (``benchmarks.bench_serving``) reads both.  Passing
@@ -92,6 +97,7 @@ import numpy as np
 
 from repro.core.paged import (BlockAllocator, PagedKVCache, PrefixCache,
                               SwapPool)
+from repro.models.ssm import PagedSSMState
 from repro.models.transformer import Model
 
 __all__ = ["Request", "ServingEngine", "Preempted"]
@@ -257,6 +263,28 @@ class ServingEngine:
                 lambda c, data, blocks, slot:
                     c.swap_in_blocks(data, blocks, slot),
                 donate_argnums=(0,))
+            # -- SSM state slots (hybrid / pure-SSM archs) ----------------
+            # M runs carry no blocks — one fixed-size conv/ssm state row
+            # per slot, reset at (re)admission, captured/restored at
+            # preemption, and snapshotted at block boundaries for the
+            # prefix trie (an SSM state is only restorable at a token
+            # count it was captured at; see PrefixNode.ssm).
+            self._ssm_keys = [k for k, c in self.caches.items()
+                              if isinstance(c, PagedSSMState)]
+            self._ssm_snaps: list[dict] = [dict() for _ in range(slots)]
+
+            def _ssm_reset(st, i):
+                return dataclasses.replace(
+                    st, conv=st.conv.at[:, i].set(0),
+                    h=st.h.at[:, i].set(0))
+
+            def _ssm_restore(st, conv, h, i):
+                return dataclasses.replace(
+                    st, conv=st.conv.at[:, i].set(conv.astype(st.conv.dtype)),
+                    h=st.h.at[:, i].set(h.astype(st.h.dtype)))
+
+            self._ssm_reset_fn = jax.jit(_ssm_reset, donate_argnums=(0,))
+            self._ssm_restore_fn = jax.jit(_ssm_restore, donate_argnums=(0,))
             # -- preemption / host swap -----------------------------------
             if preemption_mode not in (None, "swap", "recompute"):
                 raise ValueError(
@@ -341,12 +369,19 @@ class ServingEngine:
         slot's occupants (called at admission, finish, preemption, and
         recompute resume — swap resume overwrites with its record
         instead).  ``_next_tok`` included: an empty prompt decodes from 0,
-        never from the previous occupant's last token."""
+        never from the previous occupant's last token.  SSM state rows
+        are device-zeroed for the same reason — a recurrent state has no
+        page table to remap, so a stale row would silently leak the
+        previous occupant's stream into the next."""
         self._off[i] = 0
         self._next_tok[i] = 0
         self._commit_base[i] = 0
         self._reg_done[i] = 0
         self._eff_prompt[i] = None
+        self._ssm_snaps[i] = {}
+        for key in self._ssm_keys:
+            self.caches[key] = self._ssm_reset_fn(
+                self.caches[key], jnp.asarray(i, jnp.int32))
 
     def _finish_out_of_band(self, req: Request):
         """Marks a request done outside the stepping path (admission
@@ -463,6 +498,15 @@ class ServingEngine:
         if not chain:
             return [], 0
         F = min(len(chain) * self.block_tokens, self._cl(len(prompt)))
+        if self._ssm_keys and F > 0:
+            # SSM runs have no page table to map mid-block: the shared
+            # span must land exactly on a block boundary whose donor
+            # state snapshot was captured (PrefixNode.ssm), so walk F
+            # down to the largest such boundary.
+            BT = self.block_tokens
+            F = F // BT * BT
+            while F > 0 and chain[F // BT - 1].ssm is None:
+                F -= BT
         return chain, max(0, F)
 
     def _map_shared(self, i: int, chain: list, F: int):
@@ -485,6 +529,14 @@ class ServingEngine:
         self._commit_base[i] = F
         self._off[i] = F
         self._reg_done[i] = F // BT  # fully-shared blocks are already cached
+        if self._ssm_keys:
+            # _match_prefix guaranteed F sits on a snapshotted boundary
+            snap = chain[F // BT - 1].ssm
+            for key in self._ssm_keys:
+                self.caches[key] = self._ssm_restore_fn(
+                    self.caches[key], jnp.asarray(snap[key]["conv"]),
+                    jnp.asarray(snap[key]["h"]), jnp.asarray(i, jnp.int32))
+            self._ssm_snaps[i][F] = snap  # re-publishable by this slot too
         self.prefix_hits += 1
         self.prefix_tokens_shared += int(F)
 
@@ -514,6 +566,11 @@ class ServingEngine:
                 for key, alloc in self._mappings():
                     if key in node.blocks:
                         alloc.acquire(node.blocks[key])
+            if self._ssm_keys and node.ssm is None:
+                # donor state at this block's boundary, if the chunk
+                # cadence happened to land on it (None otherwise — the
+                # matcher walks F down past snapshot-less boundaries)
+                node.ssm = self._ssm_snaps[i].get((j + 1) * BT)
         self._reg_done[i] = limit
 
     def _evict_prefixes(self, n_blocks: int, protect=()) -> int:
@@ -695,6 +752,11 @@ class ServingEngine:
         ``_resume_preempted``.  The resumed stream is bit-identical to an
         uninterrupted one: swap restores the exact bytes; recompute
         re-derives them deterministically from the tokens."""
+        if self.preemption_mode is None:
+            raise RuntimeError(
+                "preempt requires preemption_mode='swap'|'recompute' — "
+                "with no mode set, _resume_preempted never runs and the "
+                "parked request would starve the run loop")
         r = self.active[i]
         mode = self.preemption_mode
         indices = {key: [int(j) for j in np.nonzero(alloc.page_table[i])[0]]
@@ -707,6 +769,12 @@ class ServingEngine:
             eff = self._eff_prompt[i]
             payload = {}
             for key, c in self.caches.items():
+                if isinstance(c, PagedSSMState):
+                    # recurrent state has no blocks — park the slot's
+                    # conv/ssm rows verbatim (tiny next to pool rows)
+                    payload[key] = {"conv": np.asarray(c.conv[:, i]),
+                                    "h": np.asarray(c.h[:, i])}
+                    continue
                 if not isinstance(c, PagedKVCache):
                     continue
                 mk = key if key in self.wallocs else GLOBAL_MAPPING
@@ -798,6 +866,14 @@ class ServingEngine:
                 for sk in self.caches:
                     if sk not in payload:
                         continue
+                    if isinstance(self.caches[sk], PagedSSMState):
+                        data = (staged[sk] if staged is not None
+                                else payload[sk])
+                        self.caches[sk] = self._ssm_restore_fn(
+                            self.caches[sk], jnp.asarray(data["conv"]),
+                            jnp.asarray(data["h"]),
+                            jnp.asarray(i, jnp.int32))
+                        continue
                     mk = sk if sk in self.wallocs else GLOBAL_MAPPING
                     ids = np.zeros(W, np.int32)
                     ids[:len(new_ids[mk])] = new_ids[mk]
@@ -875,7 +951,11 @@ class ServingEngine:
         payload = self.swap.peek(rid)
         W = self.alloc.max_blocks
         self._prefetch[rid] = {
-            sk: self._pad_swap_stage(leaves, W)
+            sk: (self._pad_swap_stage(leaves, W)
+                 if isinstance(self.caches[sk], PagedKVCache)
+                 # SSM rows are fixed-shape — no block padding, just the
+                 # host→device transfer
+                 else {name: jnp.asarray(a) for name, a in leaves.items()})
             for sk, leaves in payload.items()}
 
     def _count_commit_groups(self, planned: dict) -> int:
@@ -966,6 +1046,18 @@ class ServingEngine:
         self.alloc.advance(i, n_tokens)
         self._last_active[i] = self.ticks
         length = int(self.alloc.lengths[i])
+        if (self.trie is not None and self._ssm_keys
+                and self.active[i] is not None
+                and length % self.block_tokens == 0
+                and length <= len(self.active[i].prompt)):
+            # the post-step caches hold the state after exactly `length`
+            # tokens — the only moment a boundary snapshot is available
+            snap = {}
+            for key in self._ssm_keys:
+                c = self.caches[key]
+                snap[key] = {"conv": np.asarray(c.conv[:, i]),
+                             "h": np.asarray(c.h[:, i])}
+            self._ssm_snaps[i][length] = snap
         if self.trie is not None and self.active[i] is not None:
             self._register_prefix(i, length)
         for key, w in self.wallocs.items():
@@ -987,6 +1079,11 @@ class ServingEngine:
         pt = jnp.asarray(self.alloc.page_table)
 
         def upd(key, c):
+            if isinstance(c, PagedSSMState):
+                # no blocks to map — just mirror the per-slot frontier so
+                # the model's chunk/serve steps read positions off it
+                return dataclasses.replace(
+                    c, lengths=jnp.broadcast_to(ln[None], c.lengths.shape))
             if not isinstance(c, PagedKVCache):
                 return c
             t = tables.get(key, pt)

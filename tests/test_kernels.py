@@ -128,6 +128,69 @@ def test_fused_decode_gqa_and_window(r, window):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("kb", [1, 2, 4, 8])
+def test_latent_layout_decode_sweep(kb):
+    """MLA latent-row layout (kv_heads=1, ``v_slice_offset`` splitting each
+    row into [k_rope ‖ c_kv], no V pools): the blockwise decode attend the
+    MLA paths use matches the dense oracle across K bit widths — values
+    are read as the c_kv slice of the dequantized K rows."""
+    from repro.core.attention_quant import decode_attend
+    B, T, rope, lora = 2, 128, 8, 32
+    W = rope + lora
+    rows = jnp.asarray(RNG.normal(size=(B, 1, T, W)).astype(np.float32))
+    c = LayerKVCache.init(B, 1, W, max_tokens=T, k_bits=kb, v_bits=0,
+                          group=32, residual=32, dtype=jnp.float32,
+                          scale_dtype=jnp.float32, v_slice_offset=rope)
+    c = c.prefill(rows)
+    q = jnp.asarray(RNG.normal(size=(B, 4, 1, W)).astype(np.float32))
+    out = decode_attend(q, c, block=64)
+    want = decode_attend_dense(q, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+@pytest.mark.parametrize("kb,BT,C", [(1, 16, 32), (2, 16, 16), (8, 32, 32)])
+def test_latent_layout_paged_parity(kb, BT, C):
+    """Paged latent store vs the contiguous latent cache: chunked writes
+    (incl. a partial final chunk) plus decode appends — with V pools never
+    allocated and ``quant_commit`` skipping the V side — read back
+    identically through ``paged_decode_attend``."""
+    from repro.core.attention_quant import paged_decode_attend
+    from repro.core.paged import BlockAllocator, PagedKVCache
+    rope, lora, G, R = 8, 32, 16, 32
+    W = rope + lora
+    T, L, extra = 128, 77, 5
+    rows = jnp.asarray(RNG.normal(size=(1, 1, T, W)).astype(np.float32))
+    alloc = BlockAllocator(1, num_blocks=T // BT, max_blocks=T // BT,
+                           block_tokens=BT, residual=R, group=G)
+    cache = PagedKVCache.init(1, 1, W, num_blocks=T // BT, block_tokens=BT,
+                              max_tokens=T, k_bits=kb, v_bits=0, group=G,
+                              residual=R, dtype=jnp.float32,
+                              scale_dtype=jnp.float32, v_slice_offset=rope)
+    wc = jax.jit(lambda c, kc, nv: c.write_chunk(kc, None, nv))
+    ap = jax.jit(lambda c, kt: c.append(kt))
+    for i in range(-(-L // C)):
+        nv = min(L - i * C, C)
+        alloc.ensure(0, i * C + nv)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        chunk = jnp.zeros((1, 1, C, W), jnp.float32)
+        chunk = chunk.at[:, :, :nv].set(rows[:, :, i * C:i * C + nv])
+        cache = wc(cache, chunk, jnp.asarray([nv], jnp.int32))
+    for t in range(L, L + extra):
+        alloc.ensure(0, t + 2)
+        cache = cache.with_pages(alloc.page_table, np.asarray(cache.lengths))
+        cache = ap(cache, rows[:, :, t:t + 1])
+    oc = LayerKVCache.init(1, 1, W, max_tokens=T, k_bits=kb, v_bits=0,
+                           group=G, residual=R, dtype=jnp.float32,
+                           scale_dtype=jnp.float32, v_slice_offset=rope)
+    step = jax.jit(lambda c, kt: c.append(kt))
+    for t in range(L + extra):
+        oc = step(oc, rows[:, :, t:t + 1])
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, W)).astype(np.float32))
+    out = paged_decode_attend(q, cache)
+    want = decode_attend_dense(q, oc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
 def test_asym_decode_partial_stats_vs_ref():
     """Kernel partial (m, l, acc) equals the oracle's over the committed
     prefix alone."""

@@ -1,0 +1,367 @@
+"""One paged serving path for the whole model zoo: per-arch differential
+matrix over the newly covered configs — MLA latent paging (deepseek-v2),
+pure-SSM state slots (mamba2), and hybrid SSM+attention (zamba2).
+
+The load-bearing property (mirrors the fused-vs-alternating, prefix-sharing
+and preemption suites): for every covered config the paged engine's decoded
+streams are **bit-identical** to the legacy static engine's, across AsymKV
+bit mixes, chunk/block boundaries (exact multiples, partial final chunks,
+1-token tails) and both tick modes (fused serve_step / alternating
+prefill_chunk+decode) — and stay identical through preemption resume (swap
+and recompute) and shared-prefix admission (``commit_base`` floors, SSM
+boundary-state snapshots).
+
+Legacy-vs-paged bit-identity requires a commit-free *prefill*: the legacy
+prefill attends fp K/V while chunked prefill reads dequantized committed
+groups, so differential prompts stay under ``residual + group`` tokens
+(here 32 + 8 → prompts ≤ 39; commits then happen during decode, where both
+engines read the same dequantized groups).  Paged-vs-paged comparisons
+(preemption, prefix sharing, fused-vs-alternating) carry no such
+restriction and use longer prompts that commit mid-prefill.
+
+The engine-level stream checks are backed by a unit-level differential on
+the masked sequential scan (``mamba2_serve_scan``) that every multi-token
+serving path shares — random-init models tend to fixate decode streams on
+one token, which would otherwise under-test decode-phase SSM state updates.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy
+from repro.models import ssm as ssm_mod
+from repro.models.layers import Spec
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = ["deepseek-v2-236b", "mamba2-370m", "zamba2-2.7b"]
+
+# Commit-free prefill window: prompts < RESID + GROUP = 40 (see module
+# docstring); CHUNK/BT chosen so chunk ends always land on block boundaries
+# (every prefill frontier is a candidate SSM snapshot point).
+GROUP, RESID, CHUNK, BT = 8, 32, 8, 8
+
+# (high_bits, low_bits) per arch.  zamba2's single cache layer takes the
+# pair as (K, V) directly; deepseek blends them across its 6 MLA layers
+# (leading half high, trailing half low — V is score-path-absorbed and
+# ignored by the latent cache); mamba2 has no KV cache at all (float).
+# All of {1, 2, 4, 8} appear in both positions across the matrix.
+BITS = {
+    "deepseek-v2-236b": [(2, 1), (1, 4), (8, 8)],
+    "zamba2-2.7b": [(1, 2), (2, 1), (4, 8), (8, 4)],
+    "mamba2-370m": [(0, 0)],
+}
+
+# Prompt lengths cycled through the bit matrix: 24 = 3 exact chunks/blocks,
+# 17 = partial final chunk mid-block, 33 = 4 full chunks + 1-token tail,
+# 9 = one full chunk + 1-token tail.
+PLENS = [24, 17, 33, 9]
+
+_PARAMS: dict = {}
+
+
+def _mk_model(arch, kb=2, vb=1):
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    if n == 0 or kb == 0:
+        pol = AsymKVPolicy.float_cache(n, group=GROUP, residual=RESID)
+    else:
+        pol = AsymKVPolicy(n_layers=n, l_k=(n + 1) // 2, l_v=0,
+                           high_bits=kb, low_bits=vb,
+                           group=GROUP, residual=RESID)
+    model = Model(cfg, pol, group=GROUP, residual=RESID)
+    if arch not in _PARAMS:  # params depend on cfg only, not the policy
+        _PARAMS[arch] = model.init(jax.random.PRNGKey(0))
+    return cfg, model, _PARAMS[arch]
+
+
+def _run(model, params, reqs, **kw):
+    kw.setdefault("dtype", jnp.float32)
+    eng = ServingEngine(model, params, **kw)
+    for rid, prompt, max_new in reqs:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    return eng, {r.rid: r.output for r in eng.run()}
+
+
+def _reqs(cfg, lengths, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rid, rng.integers(0, cfg.vocab, L, dtype=np.int32), n)
+            for rid, (L, n) in enumerate(zip(lengths, max_new))]
+
+
+# ------------------------------------------------- legacy-vs-paged matrix
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bit_matrix_paged_matches_legacy(arch):
+    """Per-arch headline: across the AsymKV bit matrix × chunk/block
+    boundary cases × both tick modes, the paged engine's streams equal the
+    legacy static engine's token for token (sanitizer on)."""
+    for i, (kb, vb) in enumerate(BITS[arch]):
+        cfg, model, params = _mk_model(arch, kb, vb)
+        P = PLENS[i % len(PLENS)]
+        fused = i % 2 == 0
+        # the legacy engine left-pads to prompt_len, so exact-length
+        # prompts keep positions (and SSM conv windows) comparable
+        reqs = _reqs(cfg, [P, P], [5, 5], seed=i)
+        _, legacy = _run(model, params, reqs, slots=2, max_tokens=64,
+                         prompt_len=P, paged=False)
+        eng, paged = _run(model, params, reqs, slots=2, max_tokens=64,
+                          block_tokens=BT, prefill_chunk=CHUNK,
+                          fused=fused, debug=True)
+        assert eng.paged
+        assert paged == legacy, (arch, kb, vb, P, fused)
+
+
+def test_supports_paged_covers_decoder_only_zoo():
+    """The gate: every decoder-only config is paged-servable; enc-dec and
+    vision-frontend archs still take the legacy path."""
+    for arch in ARCHS:
+        assert Model.cfg_supports_paged(get_config(arch)), arch
+        assert Model.cfg_supports_paged(reduced(get_config(arch))), arch
+    for arch in ("seamless-m4t-medium", "llava-next-mistral-7b"):
+        assert not Model.cfg_supports_paged(get_config(arch)), arch
+
+
+# -------------------------------------------- fused vs alternating ticks
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_lengths_fused_vs_alternating(arch):
+    """Mixed prompt lengths (1-token tail, partial chunks, > residual so
+    commits land mid-prefill) through slot reuse: fused and alternating
+    paged engines produce identical streams, fused in fewer ticks, one
+    compilation per step function."""
+    cfg, model, params = _mk_model(arch)
+    reqs = _reqs(cfg, [1, 9, 24, 31, 48], [6, 6, 6, 6, 6], seed=3)
+
+    def drive(fused):
+        return _run(model, params, reqs, slots=2, max_tokens=128,
+                    block_tokens=BT, prefill_chunk=CHUNK, fused=fused,
+                    debug=True)
+
+    ef, out_f = drive(True)
+    ea, out_a = drive(False)
+    assert out_f == out_a, arch
+    assert ef.ticks < ea.ticks, (ef.ticks, ea.ticks)
+    assert ef.jit_stats() == {"serve": 1, "decode": 1}, ef.jit_stats()
+    assert ea.jit_stats() == {"prefill_chunk": 1, "decode": 1}
+
+
+# --------------------------------------------------- preemption resume
+
+@pytest.mark.parametrize("arch,mode", [
+    ("deepseek-v2-236b", "swap"),
+    ("mamba2-370m", "swap"),
+    ("mamba2-370m", "recompute"),
+    ("zamba2-2.7b", "swap"),
+    ("zamba2-2.7b", "recompute"),
+])
+def test_preemption_resume_streams_identical(arch, mode):
+    """Preemption on the new archs: swap resume parks pool rows, the fp
+    ring AND the SSM state slot ({conv, h} host rows) and restores them
+    exactly; recompute resume re-prefills from a zeroed state slot — either
+    way every stream matches the unpressured paged engine's.
+
+    Attention archs hit natural block pressure (pool of 5 < the two-slot
+    working set of ~7 commit blocks at residual=32).  A pure-SSM model
+    holds **no** pool blocks, so block pressure cannot arise — the pause
+    is forced mid-flight via ``_preempt_slot`` and the ordinary FIFO
+    resume path finishes the drain."""
+    cfg, model, params = _mk_model(arch)
+    reqs = _reqs(cfg, [48, 40, 56], [10, 8, 10], seed=7)
+    if arch not in _PREEMPT_BASE:
+        _PREEMPT_BASE[arch] = _run(model, params, reqs, slots=2,
+                                   max_tokens=128, block_tokens=BT,
+                                   prefill_chunk=CHUNK)[1]
+    base = _PREEMPT_BASE[arch]
+    kw = dict(slots=2, max_tokens=128, block_tokens=BT,
+              prefill_chunk=CHUNK, preemption_mode=mode, debug=True)
+    if cfg.n_cache_layers:
+        eng, got = _run(model, params, reqs, num_blocks=5, **kw)
+    else:
+        eng = ServingEngine(model, params, dtype=jnp.float32, **kw)
+        for rid, prompt, max_new in reqs:
+            eng.submit(Request(rid=rid, prompt=prompt,
+                               max_new_tokens=max_new))
+        done = eng.run(max_ticks=8)           # slots mid-decode
+        victim = next(i for i, r in enumerate(eng.active) if r is not None)
+        eng._preempt_slot(victim)
+        done += eng.run()
+        got = {r.rid: r.output for r in done}
+    assert got == base, (arch, mode)
+    assert eng.preemptions >= 1
+    st = eng.preempt_stats()
+    if mode == "swap":
+        assert st["swap_resumes"] >= 1
+        assert st["swap_out_bytes"] == st["swap_in_bytes"] > 0
+        assert len(eng.swap) == 0
+    else:
+        assert st["recompute_resumes"] >= 1
+    assert all(r is None for r in eng.active) and not eng.preempted
+    for alloc in [eng.alloc, *eng.wallocs.values()]:
+        assert alloc.free_blocks == alloc.num_blocks
+
+
+_PREEMPT_BASE: dict = {}
+
+
+# ---------------------------------------------- shared-prefix admission
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shared_prefix_admission_streams_identical(arch):
+    """Prefix sharing on the new archs: consumers admitted at
+    ``commit_base = F`` (attention stages map donor blocks; SSM stages
+    restore the trie's boundary state snapshot) produce streams identical
+    to the unshared engine's, with fewer blocks allocated."""
+    cfg, model, params = _mk_model(arch)
+    rng = np.random.default_rng(11)
+    # Donor must *commit* whole prompt blocks for the trie to register
+    # them: with residual=32, a 64-token system + 6 decoded tokens commits
+    # tokens [0, 32) — four BT=8 blocks.  Consumers (P=80) then match at
+    # F = min(32, commit_len(80)=48) = 32.  Matching also needs
+    # prefill_chunk ≥ residual, and SSM snapshot boundaries must include
+    # F, so chunks are exactly residual wide (frontiers at 32, 64, …).
+    system = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+    prompts = [system.copy()] + [
+        np.concatenate([system,
+                        rng.integers(0, cfg.vocab, 16, dtype=np.int32)])
+        for _ in range(2)]
+
+    def drive(prefix):
+        eng = ServingEngine(model, params, slots=2, max_tokens=128,
+                            dtype=jnp.float32, block_tokens=BT,
+                            prefill_chunk=RESID, prefix_cache=prefix,
+                            debug=True)
+        streams = {}
+        for batch in ([(0, prompts[0])],
+                      [(1, prompts[1]), (2, prompts[2])]):
+            for rid, p in batch:
+                eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
+            for r in eng.run():
+                streams[r.rid] = r.output
+        return eng, streams
+
+    e_on, s_on = drive(True)
+    e_off, s_off = drive(False)
+    assert s_on == s_off, arch
+    st = e_on.prefix_stats()
+    assert st["hits"] >= 1 and st["tokens_shared"] > 0, st
+    assert e_on.alloc.allocated_total < e_off.alloc.allocated_total
+    if any(k == "M" for k in (r.kind for r in model.runs)):
+        # an SSM arch can only score a hit if the trie carried a state
+        # snapshot for the matched boundary
+        assert e_on._ssm_keys, arch
+
+
+# ----------------------------------- masked serve-scan unit differential
+
+def _ssm_setup():
+    cfg = reduced(get_config("mamba2-370m"))
+    rng = np.random.default_rng(0)
+    params = {k: jnp.asarray(rng.normal(0, 0.05, s.shape), jnp.float32)
+              for k, s in ssm_mod.ssm_specs(cfg).items()
+              if isinstance(s, Spec)}
+    return cfg, params
+
+
+def test_serve_scan_equals_per_token_steps():
+    """The sequential masked scan every serving path shares is bit-equal
+    to feeding ``_step_core`` one (jitted) token step at a time, and to
+    itself run in chunks that resume the carried state.  (References must
+    be compiled and same-batch: eager op-by-op execution and B=1 re-runs
+    differ from the scan body in the last ulp on CPU.)"""
+    cfg, params = _ssm_setup()
+    rng = np.random.default_rng(1)
+    B, T = 3, 12
+    x = jnp.asarray(rng.normal(0, 1, (B, T, cfg.d_model)), jnp.float32)
+    st = ssm_mod.init_paged_ssm_state(cfg, B, dtype=jnp.float32)
+    step = jax.jit(lambda p, xt, conv, h:
+                   ssm_mod._step_core(p, xt, cfg, conv, h))
+    conv, h, outs = st.conv, st.h, []
+    for t in range(T):
+        y, conv, h = step(params, x[:, t:t + 1], conv, h)
+        outs.append(y)
+    ref = jnp.concatenate(outs, axis=1)
+    out, new = ssm_mod.mamba2_serve_scan(params, x, cfg, st)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(new.conv), np.asarray(conv))
+    np.testing.assert_array_equal(np.asarray(new.h), np.asarray(h))
+    # chunk-resumed scans reproduce the one-shot scan exactly
+    stc, got = st, []
+    for c0 in range(0, T, 4):
+        o, stc = ssm_mod.mamba2_serve_scan(params, x[:, c0:c0 + 4], cfg, stc)
+        got.append(np.asarray(o))
+    np.testing.assert_array_equal(np.concatenate(got, 1), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(stc.h), np.asarray(new.h))
+
+
+def test_serve_scan_masked_chunks_ignore_padding():
+    """Chunked prefill semantics: per-chunk valid masks freeze state and
+    make padded rows inert — chunk-resumed state and outputs bit-equal the
+    unchunked scan, for full, partial, and zero-valid (idle-slot) chunks.
+    Padding rows carry garbage to prove they cannot leak in."""
+    cfg, params = _ssm_setup()
+    rng = np.random.default_rng(2)
+    B, T, C = 3, 12, 4
+    lens = [12, 7, 0]  # full / mid-chunk tail / idle slot
+    x = jnp.asarray(rng.normal(0, 1, (B, T, cfg.d_model)), jnp.float32)
+    ref_out, ref_st = ssm_mod.mamba2_serve_scan(
+        params, x, cfg, ssm_mod.init_paged_ssm_state(cfg, B, jnp.float32))
+
+    st = ssm_mod.init_paged_ssm_state(cfg, B, dtype=jnp.float32)
+    got = []
+    for c0 in range(0, T, C):
+        xs = np.asarray(rng.normal(0, 100, (B, C, cfg.d_model)), np.float32)
+        valid = np.clip(np.asarray(lens) - c0, 0, C)
+        for b, v in enumerate(valid):
+            xs[b, :v] = np.asarray(x[b, c0:c0 + v])
+        mask = jnp.arange(C)[None, :] < jnp.asarray(valid)[:, None]
+        out, st = ssm_mod.mamba2_serve_scan(params, jnp.asarray(xs), cfg,
+                                            st, mask=mask)
+        got.append(np.asarray(out))
+    got = np.concatenate(got, axis=1)
+    for b, L in enumerate(lens):
+        np.testing.assert_array_equal(got[b, :L], np.asarray(ref_out)[b, :L])
+    # per-row resumed states equal a single masked pass over the clean
+    # sequence (same batch: B=1 re-runs are not ulp-comparable on CPU)
+    row_mask = jnp.arange(T)[None, :] < jnp.asarray(lens)[:, None]
+    _, ref_st = ssm_mod.mamba2_serve_scan(
+        params, x, cfg, ssm_mod.init_paged_ssm_state(cfg, B, jnp.float32),
+        mask=row_mask)
+    np.testing.assert_array_equal(np.asarray(st.conv), np.asarray(ref_st.conv))
+    np.testing.assert_array_equal(np.asarray(st.h), np.asarray(ref_st.h))
+
+
+def test_serve_scan_decode_column_matches_decode_step():
+    """The fused tick's appended decode column (mask = decode_active)
+    advances a decoding slot exactly like ``mamba2_decode_step``, while an
+    inactive slot's state stays frozen bit-for-bit."""
+    cfg, params = _ssm_setup()
+    rng = np.random.default_rng(3)
+    B = 2
+    st = ssm_mod.init_paged_ssm_state(cfg, B, dtype=jnp.float32)
+    warm = jnp.asarray(rng.normal(0, 1, (B, 6, cfg.d_model)), jnp.float32)
+    _, st = ssm_mod.mamba2_serve_scan(params, warm, cfg, st)
+
+    xt = jnp.asarray(rng.normal(0, 1, (B, 1, cfg.d_model)), jnp.float32)
+    dstep = jax.jit(lambda p, t, s: ssm_mod.mamba2_decode_step(p, t, cfg, s))
+    y_ref, legacy = dstep(params, xt, ssm_mod.SSMState(conv=st.conv, h=st.h))
+
+    active = jnp.asarray([True, False])
+    out, new = ssm_mod.mamba2_serve_scan(params, xt, cfg, st,
+                                         mask=active[:, None])
+    np.testing.assert_array_equal(np.asarray(out)[0], np.asarray(y_ref)[0])
+    np.testing.assert_array_equal(np.asarray(new.conv)[0],
+                                  np.asarray(legacy.conv)[0])
+    np.testing.assert_array_equal(np.asarray(new.h)[0],
+                                  np.asarray(legacy.h)[0])
+    # the masked-off slot is untouched
+    np.testing.assert_array_equal(np.asarray(new.conv)[1],
+                                  np.asarray(st.conv)[1])
+    np.testing.assert_array_equal(np.asarray(new.h)[1],
+                                  np.asarray(st.h)[1])

@@ -234,19 +234,41 @@ def test_victim_policy_skips_all_shared_slots(small_model):
 
 
 def test_preemption_requires_paged_engine():
-    """The legacy static path has no blocks to swap."""
+    """The legacy static path (now an explicit opt-out — SSM archs are
+    paged by default) has no blocks to swap."""
     cfg = reduced(get_config("mamba2-370m"))
     model = Model(cfg)
-    assert not model.supports_paged()
+    assert model.supports_paged()
     params = model.init(jax.random.PRNGKey(1))
     with pytest.raises(ValueError, match="preemption_mode"):
         ServingEngine(model, params, slots=1, max_tokens=64,
-                      prompt_len=16, dtype=jnp.float32,
+                      prompt_len=16, dtype=jnp.float32, paged=False,
                       preemption_mode="swap")
     with pytest.raises(ValueError, match="preemption_mode"):
         _mk = _mk_model()
         ServingEngine(_mk[1], _mk[2], slots=1, max_tokens=64,
                       dtype=jnp.float32, preemption_mode="bogus")
+
+
+@pytest.mark.parametrize("arch,mode", [("deepseek-v2-236b", "recompute"),
+                                       ("zamba2-2.7b", "swap")])
+def test_new_arch_overload_streams_identical(arch, mode):
+    """The newly paged archs preempt and resume like any attention arch:
+    MLA latent pool rows and hybrid attention+SSM stacks ({conv, h} state
+    slots swapped alongside the blocks) round-trip through the chosen mode
+    with streams identical to the unpressured engine.  (Pure-SSM models
+    hold no pool blocks, so block pressure cannot arise — mamba2's
+    forced-pause differential, and the full per-arch × per-mode matrix,
+    live in test_paged_archs.py.)"""
+    cfg, model, params = _mk_model(arch=arch, seed=4)
+    reqs = _mixed_reqs(cfg, [40, 32, 48], [8, 6, 8], seed=29)
+    _, base = _drive(model, params, reqs)
+    eng, got = _drive(model, params, reqs, num_blocks=8, mode=mode)
+    assert got == base, (arch, mode)
+    assert eng.preemptions >= 1
+    assert all(r is None for r in eng.active) and not eng.preempted
+    for alloc in [eng.alloc, *eng.wallocs.values()]:
+        assert alloc.free_blocks == alloc.num_blocks
 
 
 @pytest.mark.parametrize("mode", ["swap", "recompute"])
@@ -320,7 +342,8 @@ def test_swap_ahead_requires_swap_mode(small_model):
     mparams = mmodel.init(jax.random.PRNGKey(1))
     with pytest.raises(ValueError, match="swap_ahead"):
         ServingEngine(mmodel, mparams, slots=1, max_tokens=64,
-                      prompt_len=16, dtype=jnp.float32, swap_ahead=True)
+                      prompt_len=16, dtype=jnp.float32, paged=False,
+                      swap_ahead=True)
 
 
 def test_fused_commit_engine_streams_identical(small_model):

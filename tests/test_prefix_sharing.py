@@ -90,6 +90,25 @@ def test_streams_identical_across_bit_mixes(high, low):
     assert e_on.alloc.allocated_total < e_off.alloc.allocated_total
 
 
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "mamba2-370m",
+                                  "zamba2-2.7b"])
+def test_new_arch_shared_prefix_streams_identical(arch):
+    """The newly paged archs share prefixes like any attention arch: MLA
+    consumers map donor latent-row blocks; SSM/hybrid consumers restore
+    the trie's boundary state snapshot ({conv, h} at the matched block
+    frontier) — streams stay identical to the unshared engine with fewer
+    blocks allocated."""
+    cfg, model, params = _mk_model(arch=arch, seed=4)
+    p = _prompts_shared(cfg, sys_len=32, sfx_len=8, seed=5)
+    batches = [[(0, p[0])], [(1, p[1]), (2, p[2])]]
+    e_on, s_on = _drive(model, params, batches, prefix=True)
+    e_off, s_off = _drive(model, params, batches, prefix=False)
+    assert s_on == s_off, arch
+    st = e_on.prefix_stats()
+    assert st["hits"] >= 1 and st["tokens_shared"] > 0, st
+    assert e_on.alloc.allocated_total < e_off.alloc.allocated_total
+
+
 def test_windowed_layers_shared_prefix():
     """Gemma-style local (L) stages: windowed mappings register their
     blocks before ``free_below`` reclaims them, so sharing works — and the
@@ -206,11 +225,13 @@ def test_eviction_mid_flight(small_model):
 
 
 def test_prefix_cache_requires_paged_engine():
-    """The legacy static path has no blocks to share."""
+    """The legacy static path (now an explicit opt-out — SSM archs are
+    paged by default) has no blocks to share."""
     cfg = reduced(get_config("mamba2-370m"))
     model = Model(cfg)
-    assert not model.supports_paged()
+    assert model.supports_paged()
     params = model.init(jax.random.PRNGKey(1))
     with pytest.raises(ValueError, match="prefix_cache"):
         ServingEngine(model, params, slots=1, max_tokens=64,
-                      prompt_len=16, dtype=jnp.float32, prefix_cache=True)
+                      prompt_len=16, dtype=jnp.float32, paged=False,
+                      prefix_cache=True)

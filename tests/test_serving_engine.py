@@ -221,14 +221,19 @@ def test_windowed_block_freeing():
         assert (alloc.page_table == 0).all()
 
 
-def test_legacy_fallback_for_ssm_archs():
-    """Archs the paged path doesn't cover fall back to static batching."""
+def test_legacy_engine_remains_available():
+    """SSM archs now take the paged path by default; only enc-dec and
+    vision-frontend archs fall back automatically.  The legacy static
+    engine stays reachable as an explicit opt-out (it is the differential
+    baseline for the per-arch matrix in test_paged_archs.py)."""
     cfg = reduced(get_config("mamba2-370m"))
     model = Model(cfg)
-    assert not model.supports_paged()
+    assert model.supports_paged()
+    for arch in ("seamless-m4t-medium", "llava-next-mistral-7b"):
+        assert not Model.cfg_supports_paged(get_config(arch)), arch
     params = model.init(jax.random.PRNGKey(1))
     eng = ServingEngine(model, params, slots=2, max_tokens=64,
-                        prompt_len=16, dtype=jnp.float32)
+                        prompt_len=16, dtype=jnp.float32, paged=False)
     assert not eng.paged
     rng = np.random.default_rng(0)
     for rid in range(3):
