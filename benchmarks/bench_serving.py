@@ -146,7 +146,7 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                  prefix_cache: bool = False,
                  block_tokens=None, num_blocks=None,
                  preemption=None, fused_commit: bool = False,
-                 swap_ahead: bool = False) -> dict:
+                 swap_ahead: bool = False, bit_config=None) -> dict:
     import jax.numpy as jnp
     from repro.serving.engine import ServingEngine
 
@@ -155,7 +155,8 @@ def bench_engine(model, params, reqs, *, fused: bool, slots: int,
                         prefix_cache=prefix_cache,
                         block_tokens=block_tokens, num_blocks=num_blocks,
                         preemption_mode=preemption,
-                        fused_commit=fused_commit, swap_ahead=swap_ahead)
+                        fused_commit=fused_commit, swap_ahead=swap_ahead,
+                        bit_config=bit_config)
     _drain(eng, reqs)   # warmup drain: pays compiles (and, with the prefix
     # cache on, populates the trie — timed drains measure the warm cache)
     # best-of-N timed drains: wall time on a shared host is noisy, the
@@ -377,6 +378,103 @@ def _commit_microbench(*, fused: bool, iters: int = 20) -> dict:
     }
 
 
+def _bench_bit_allocation(*, repeats: int = 1) -> dict:
+    """Bit auto-tuner frontier + engine differential.
+
+    Runs the sensitivity-driven tuner (core/bittuner.py) on a
+    deterministic calibration set and reports the quality-vs-bytes
+    frontier — predicted attention-output MSE and KV bytes/token — for
+    uniform-1-bit, uniform-2-bit, the paper-style 75%-1bit prefix config,
+    and the tuned table.  The budget equals the uniform-1-bit footprint,
+    so "tuned dominates" means: same (or fewer) bytes, strictly less
+    predicted error.  Then asserts a tuned-config engine streams
+    bit-identically to a hand-built engine using the same per-layer
+    specs — the artifact path changes configuration only, never bytes.
+    """
+    import json
+    import tempfile
+
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.core.asymkv import AsymKVPolicy, TableKVPolicy
+    from repro.core.bittuner import (collect_qkv, predicted_config_error,
+                                     sensitivity_table, tune)
+    from repro.models.transformer import Model
+
+    cfg = reduced(get_config("llama2-7b"))
+    n = cfg.n_cache_layers
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    probe = Model(cfg, AsymKVPolicy.float_cache(n, group=8, residual=8))
+    params = probe.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(0, cfg.vocab, size=(2, 32), dtype=np.int32)
+
+    # Budget = the uniform-1-bit footprint at the bench's tiny-group
+    # config: the tuner must do strictly better without spending more.
+    u1 = AsymKVPolicy.kivi(n, bits=1, group=8, residual=8)
+    budget = u1.cache_bytes_per_token(Hkv, hd)
+    bc = tune(probe, params, prompts, budget_bytes_per_token=budget,
+              group_candidates=(8, 32), residual=32)
+
+    qkv = collect_qkv(probe, params, prompts)
+    sens = {g: sensitivity_table(qkv, group=g) for g in (8, 32)}
+
+    def entry(pol, g):
+        bits = [pol.layer_bits(i) for i in range(n)]
+        return {
+            "policy": pol.describe(),
+            "group": g,
+            "bits": [list(b) for b in bits],
+            "kv_bytes_per_token": pol.cache_bytes_per_token(Hkv, hd),
+            "predicted_output_mse": predicted_config_error(sens[g], bits),
+        }
+
+    frontier = {
+        "uniform_1bit": entry(u1, 8),
+        "uniform_2bit": entry(
+            AsymKVPolicy.kivi(n, bits=2, group=8, residual=8), 8),
+        "asymkv_75pct_1bit": entry(
+            AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0, high_bits=2,
+                         low_bits=1, group=8, residual=8), 8),
+        "tuned": entry(bc.to_policy(), bc.group),
+    }
+    tuned, base = frontier["tuned"], frontier["uniform_1bit"]
+    assert tuned["kv_bytes_per_token"] <= base["kv_bytes_per_token"] + 1e-6, \
+        (tuned, base)
+    assert tuned["predicted_output_mse"] < base["predicted_output_mse"], \
+        (tuned, base)
+
+    # --- engine differential: artifact path vs hand-built policy ---------
+    reqs = _trace(cfg, n_requests=4, lengths=[8, 33, 16], max_new=[8, 4, 6],
+                  seed=7)
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        f.write(json.dumps(bc.to_json()))
+        art = f.name
+    m_art = Model(cfg)  # policy/group/residual come from the artifact
+    _, s_art = bench_engine(m_art, params, reqs, fused=True, slots=2,
+                            max_tokens=128, repeats=repeats,
+                            bit_config=art)
+    hand = TableKVPolicy(
+        table=tuple((lb.nbits_key, lb.nbits_value) for lb in bc.layers),
+        group=bc.group, residual=bc.residual)
+    m_hand = Model(cfg, hand, group=bc.group, residual=bc.residual)
+    _, s_hand = bench_engine(m_hand, params, reqs, fused=True, slots=2,
+                             max_tokens=128, repeats=repeats)
+    assert s_art == s_hand, "tuned-config engine diverged from hand-built"
+
+    return {
+        "budget_bytes_per_token": budget,
+        "calib": {"prompts": int(prompts.shape[0]),
+                  "len": int(prompts.shape[1]),
+                  "hash": bc.provenance["calib_hash"]},
+        "tuned_artifact": bc.to_json(),
+        "frontier": frontier,
+        "differential": {"requests": len(reqs),
+                         "streams_identical": True},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -493,6 +591,8 @@ def main() -> None:
         for arch in ("deepseek-v2-236b", "zamba2-2.7b")
     }
 
+    bit_alloc = _bench_bit_allocation()
+
     report = {
         "bench": "serving_fused_vs_alternating",
         "model": cfg.name,
@@ -526,6 +626,7 @@ def main() -> None:
             "recompute": ov["recompute"],
         },
         "paged_archs": paged_archs,
+        "bit_allocation": bit_alloc,
         "commit_fusion": {
             # CPU caveat: the fused kernel runs in Pallas interpret mode
             # here, so µs/group ratios are NOT what a compiled TPU run
@@ -592,6 +693,14 @@ def main() -> None:
               f"KV {pa['paged']['kv_tokens_reserved']} vs "
               f"{pa['legacy']['kv_tokens_reserved']} tokens reserved "
               f"({pa['paged']['blocks_allocated']} blocks)")
+    ba = bit_alloc["frontier"]
+    print("bit-alloc: tuned "
+          f"{ba['tuned']['predicted_output_mse']:.4g} MSE @ "
+          f"{ba['tuned']['kv_bytes_per_token']:.0f} B/tok vs uniform-1 "
+          f"{ba['uniform_1bit']['predicted_output_mse']:.4g} MSE @ "
+          f"{ba['uniform_1bit']['kv_bytes_per_token']:.0f} B/tok "
+          f"({bit_alloc['differential']['requests']} requests "
+          "stream-identical to hand-built)")
     print(f"swap-ahead: resume stalls "
           f"{cf['swap_ahead']['off']['resume_stall_ticks']} -> "
           f"{cf['swap_ahead']['on']['resume_stall_ticks']} "

@@ -26,7 +26,35 @@ from typing import Sequence
 
 from repro.core.quant import QuantSpec, quantized_bytes_per_element
 
-__all__ = ["AsymKVPolicy", "LayerSegment", "segment_layers"]
+__all__ = ["AsymKVPolicy", "TableKVPolicy", "LayerSegment",
+           "layer_bytes_per_token", "segment_layers"]
+
+
+def layer_bytes_per_token(
+    k_bits: int,
+    v_bits: int,
+    group: int,
+    n_kv_heads: int,
+    head_dim: int,
+    fp_bytes: int = 2,
+    scale_bytes: int = 4,
+) -> float:
+    """Steady-state KV-cache bytes per token of ONE layer (both sides).
+
+    The shared accounting used by every policy's ``cache_bytes_per_token``
+    and by the bit auto-tuner's budget (``core/bittuner.py``) — one
+    definition, so the tuner can never under/over-count what the engine
+    actually allocates.  Ignores the bounded residual window (asymptotic
+    per-token cost, the paper's Fig. 4 quantity)."""
+    total = 0.0
+    for bits, mode in ((k_bits, "per_channel"), (v_bits, "per_token")):
+        if bits == 0:
+            per_elem = float(fp_bytes)
+        else:
+            spec = QuantSpec(bits=bits, group=group, mode=mode)
+            per_elem = quantized_bytes_per_element(spec, scale_bytes)
+        total += per_elem * n_kv_heads * head_dim
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,13 +139,15 @@ class AsymKVPolicy:
         k, _ = self.layer_bits(layer)
         if k == 0:
             return None
-        return QuantSpec(bits=k, group=self.group, mode="per_channel")
+        return _layer_spec(layer, bits=k, group=self.group,
+                           mode="per_channel")
 
     def value_spec(self, layer: int) -> QuantSpec | None:
         _, v = self.layer_bits(layer)
         if v == 0:
             return None
-        return QuantSpec(bits=v, group=self.group, mode="per_token")
+        return _layer_spec(layer, bits=v, group=self.group,
+                           mode="per_token")
 
     def segments(self) -> list[LayerSegment]:
         """Contiguous layer runs of equal (k_bits, v_bits) — scan units."""
@@ -137,17 +167,10 @@ class AsymKVPolicy:
         Ignores the (bounded) residual window — this is the asymptotic
         per-token cost plotted in the paper's Fig. 4.
         """
-        total = 0.0
-        for i in range(self.n_layers):
-            k_bits, v_bits = self.layer_bits(i)
-            for bits, mode in ((k_bits, "per_channel"), (v_bits, "per_token")):
-                if bits == 0:
-                    per_elem = float(fp_bytes)
-                else:
-                    spec = QuantSpec(bits=bits, group=self.group, mode=mode)
-                    per_elem = quantized_bytes_per_element(spec, scale_bytes)
-                total += per_elem * n_kv_heads * head_dim
-        return total
+        return sum(
+            layer_bytes_per_token(*self.layer_bits(i), self.group,
+                                  n_kv_heads, head_dim, fp_bytes, scale_bytes)
+            for i in range(self.n_layers))
 
     def describe(self) -> str:
         if not self.enabled:
@@ -155,6 +178,99 @@ class AsymKVPolicy:
         if self.l_k == self.n_layers and self.l_v == self.n_layers:
             return f"KIVI-{self.high_bits}bit"
         return f"AsymKV-{self.l_k}/{self.l_v}"
+
+
+def _layer_spec(layer: int, **kw) -> QuantSpec:
+    """QuantSpec whose validation failures name the offending layer —
+    with per-layer bit tables a bare "group not divisible by the pack
+    factor" is misleading (it reads as a global-config error)."""
+    try:
+        return QuantSpec(**kw)
+    except ValueError as e:
+        raise ValueError(f"cache layer {layer}: {e}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class TableKVPolicy:
+    """Arbitrary per-layer ``(k_bits, v_bits)`` quantization table.
+
+    The generalization of :class:`AsymKVPolicy`'s two-knob leading-prefix
+    scheme (KVTuner-style): any {0,1,2,4,8} mix per layer and per side.
+    This is what the sensitivity-driven auto-tuner
+    (:mod:`repro.core.bittuner`) emits via ``BitConfig.to_policy()`` — the
+    model's stage splitting (``Model.run_stages``) and the paged block
+    pool already handle arbitrary per-layer mixes, so a table is purely a
+    configuration, not a new cache format.
+
+    Duck-types the ``AsymKVPolicy`` interface the model/engine/launchers
+    consume: ``n_layers``, ``layer_bits``, ``key_spec``/``value_spec``,
+    ``segments``, ``cache_bytes_per_token``, ``describe``.
+    """
+
+    table: tuple[tuple[int, int], ...]  # per layer (k_bits, v_bits); 0 = fp
+    group: int = 32
+    residual: int = 128
+    enabled: bool = True
+
+    def __post_init__(self):
+        norm = tuple((int(k), int(v)) for k, v in self.table)
+        object.__setattr__(self, "table", norm)
+        for i, (k, v) in enumerate(norm):
+            for side, b in (("k_bits", k), ("v_bits", v)):
+                if b not in (0, 1, 2, 4, 8):
+                    raise ValueError(
+                        f"layer {i}: {side}={b} not in {{0,1,2,4,8}}")
+        if self.residual % self.group:
+            raise ValueError(
+                f"residual ({self.residual}) must be a multiple of group "
+                f"({self.group}) so groups commit exactly")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.table)
+
+    def layer_bits(self, layer: int) -> tuple[int, int]:
+        if not self.enabled:
+            return (0, 0)
+        return self.table[layer]
+
+    def key_spec(self, layer: int) -> QuantSpec | None:
+        k, _ = self.layer_bits(layer)
+        if k == 0:
+            return None
+        return _layer_spec(layer, bits=k, group=self.group,
+                           mode="per_channel")
+
+    def value_spec(self, layer: int) -> QuantSpec | None:
+        _, v = self.layer_bits(layer)
+        if v == 0:
+            return None
+        return _layer_spec(layer, bits=v, group=self.group,
+                           mode="per_token")
+
+    def segments(self) -> list[LayerSegment]:
+        return segment_layers(
+            [self.layer_bits(i) for i in range(self.n_layers)])
+
+    def cache_bytes_per_token(
+        self,
+        n_kv_heads: int,
+        head_dim: int,
+        fp_bytes: int = 2,
+        scale_bytes: int = 4,
+    ) -> float:
+        return sum(
+            layer_bytes_per_token(*self.layer_bits(i), self.group,
+                                  n_kv_heads, head_dim, fp_bytes,
+                                  scale_bytes)
+            for i in range(self.n_layers))
+
+    def describe(self) -> str:
+        if not self.enabled:
+            return "float"
+        segs = "|".join(f"{s.count}x{s.k_bits}/{s.v_bits}"
+                        for s in self.segments())
+        return f"tuned[{segs}]"
 
 
 def segment_layers(bits: Sequence[tuple[int, int]]) -> list[LayerSegment]:

@@ -1,0 +1,492 @@
+"""Sensitivity-driven layer-wise bit auto-tuner (the paper's knob, adaptive).
+
+AsymKV fixes its asymmetric K/V bit configuration per layer *offline by
+hand*; this module chooses it from measured sensitivity instead:
+
+1. **Calibrate** — run a small prompt set through the model
+   (``Model.qkv_probe``) and capture the post-RoPE per-layer (q, K, V)
+   triples — exactly what the serving cache quantizes.
+2. **Score** — for every layer, side, and candidate bit width, measure the
+   attention-*output* MSE that quantizing only that side at those bits
+   would cause (:func:`repro.core.error_analysis.stage_errors`, the
+   paper's Sec. 3 stage-error machinery).  Theorem 1's closed form
+   (:func:`~repro.core.error_analysis.theorem1_predicted_error`) is
+   evaluated at the chosen config as a self-consistency diagnostic
+   recorded in the artifact's provenance.
+3. **Allocate** — greedy under a bytes-per-token budget: start all layers
+   at the lowest ladder rung (1 bit), repeatedly upgrade the (layer, side)
+   with the highest marginal predicted-error reduction per added byte,
+   preferring keys over values at equal marginal gain (the paper's
+   asymmetry: K error is amplified through the query contraction and the
+   softmax, V error stays linear).
+4. **Emit** — a versioned JSON :class:`BitConfig` artifact (per-layer
+   ``{nbits_key, nbits_value, group_size}`` plus provenance: calibration
+   hash, budget, predicted error) that ``ServingEngine``/
+   ``Model.init_paged_caches`` load via the ``bit_config=`` knob.  The
+   paged pool already packs arbitrary {1,2,4,8} mixes per layer, so the
+   artifact is pure configuration — no new cache format.
+
+Everything here is host-side calibration code (offline, tiny batches);
+the serving hot path only ever sees the resulting
+:class:`~repro.core.asymkv.TableKVPolicy`.
+
+See ``docs/bit_allocation.md`` and ``launch/tune.py`` (the CLI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.asymkv import TableKVPolicy, layer_bytes_per_token
+from repro.core.error_analysis import stage_errors, theorem1_predicted_error
+from repro.core.quant import QuantSpec, dequantize, quantize
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "BIT_LADDER",
+    "LayerBits",
+    "BitConfig",
+    "Allocation",
+    "calib_hash",
+    "collect_qkv",
+    "sensitivity_table",
+    "predicted_config_error",
+    "allocate_bits",
+    "tune",
+]
+
+SCHEMA_VERSION = 1
+ARTIFACT_KIND = "asymkv-bitconfig"
+BIT_LADDER = (1, 2, 4, 8)
+_VALID_BITS = (0, 1, 2, 4, 8)
+
+
+# --------------------------------------------------------------- artifact
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerBits:
+    """One layer's entry in the artifact: bit widths per side + the RTN
+    group.  ``group_size`` is per-layer in the schema for forward
+    compatibility; the current runtime commits with ONE group per engine,
+    so :meth:`BitConfig.validate_for` requires them uniform."""
+
+    nbits_key: int
+    nbits_value: int
+    group_size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BitConfig:
+    """Versioned layer-wise bit-allocation artifact (tuner output).
+
+    ``provenance`` records how the table was chosen — calibration-set
+    hash, bytes-per-token budget, predicted output MSE — so an artifact
+    is auditable and a re-tune with identical inputs is byte-identical
+    (no timestamps on purpose).
+    """
+
+    layers: tuple[LayerBits, ...]
+    group: int
+    residual: int
+    model: str = ""
+    provenance: dict = dataclasses.field(default_factory=dict)
+    version: int = SCHEMA_VERSION
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "layers",
+            tuple(lb if isinstance(lb, LayerBits) else LayerBits(**lb)
+                  for lb in self.layers))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    # ------------------------------------------------------------- (de)ser
+
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "kind": ARTIFACT_KIND,
+            "model": self.model,
+            "n_layers": self.n_layers,
+            "group": self.group,
+            "residual": self.residual,
+            "layers": [
+                {"nbits_key": lb.nbits_key, "nbits_value": lb.nbits_value,
+                 "group_size": lb.group_size}
+                for lb in self.layers
+            ],
+            "provenance": dict(self.provenance),
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "BitConfig":
+        if obj.get("kind") != ARTIFACT_KIND:
+            raise ValueError(
+                f"not a {ARTIFACT_KIND} artifact: kind={obj.get('kind')!r}")
+        if obj.get("version") != SCHEMA_VERSION:
+            raise ValueError(
+                f"BitConfig schema v{obj.get('version')} unsupported "
+                f"(this build reads v{SCHEMA_VERSION})")
+        layers = tuple(LayerBits(**lb) for lb in obj["layers"])
+        if len(layers) != obj.get("n_layers", len(layers)):
+            raise ValueError(
+                f"n_layers={obj['n_layers']} but {len(layers)} layer "
+                "entries")
+        return cls(layers=layers, group=int(obj["group"]),
+                   residual=int(obj["residual"]),
+                   model=obj.get("model", ""),
+                   provenance=dict(obj.get("provenance", {})))
+
+    def save(self, path) -> None:
+        Path(path).write_text(json.dumps(self.to_json(), indent=2) + "\n")
+
+    @classmethod
+    def load(cls, path) -> "BitConfig":
+        return cls.from_json(json.loads(Path(path).read_text()))
+
+    # ---------------------------------------------------------- validation
+
+    def validate_for(self, cfg) -> None:
+        """Load-time validation against a model config.  Every failure
+        names the offending *layer index* — with per-layer tables a
+        global-sounding divisibility message is misleading."""
+        if cfg.mla or cfg.is_encdec or cfg.frontend:
+            raise NotImplementedError(
+                f"BitConfig targets decoder-only non-MLA attention archs; "
+                f"{cfg.name} is out of scope")
+        if self.n_layers != cfg.n_cache_layers:
+            raise ValueError(
+                f"BitConfig has {self.n_layers} layers but {cfg.name} has "
+                f"{cfg.n_cache_layers} cache layers")
+        if self.model and cfg.name and self.model != cfg.name:
+            raise ValueError(
+                f"BitConfig was tuned for {self.model!r}, loading into "
+                f"{cfg.name!r}")
+        hd = cfg.resolved_head_dim
+        for i, lb in enumerate(self.layers):
+            if lb.group_size != self.group:
+                raise ValueError(
+                    f"layer {i}: group_size {lb.group_size} != global "
+                    f"group {self.group} (per-layer groups are "
+                    "schema-reserved; the runtime commit cadence shares "
+                    "one group per engine)")
+            for name, b in (("nbits_key", lb.nbits_key),
+                            ("nbits_value", lb.nbits_value)):
+                if b not in _VALID_BITS:
+                    raise ValueError(
+                        f"layer {i}: {name}={b} not in {_VALID_BITS}")
+            if lb.nbits_key and self.group % (8 // lb.nbits_key):
+                raise ValueError(
+                    f"layer {i}: group {self.group} not divisible by the "
+                    f"K pack factor {8 // lb.nbits_key} "
+                    f"(= 8 // {lb.nbits_key} bits)")
+            if lb.nbits_value and hd % (8 // lb.nbits_value):
+                raise ValueError(
+                    f"layer {i}: head_dim {hd} not divisible by the V "
+                    f"pack factor {8 // lb.nbits_value} "
+                    f"(= 8 // {lb.nbits_value} bits)")
+        if self.residual % self.group:
+            raise ValueError(
+                f"residual {self.residual} % group {self.group} != 0")
+
+    # ------------------------------------------------------------- runtime
+
+    def to_policy(self) -> TableKVPolicy:
+        return TableKVPolicy(
+            table=tuple((lb.nbits_key, lb.nbits_value)
+                        for lb in self.layers),
+            group=self.group, residual=self.residual)
+
+    def bytes_per_token(self, n_kv_heads: int, head_dim: int,
+                        fp_bytes: int = 2, scale_bytes: int = 4) -> float:
+        return self.to_policy().cache_bytes_per_token(
+            n_kv_heads, head_dim, fp_bytes, scale_bytes)
+
+
+# ------------------------------------------------------------ calibration
+
+
+def calib_hash(prompts) -> str:
+    """Content hash of the calibration token set (provenance)."""
+    a = np.ascontiguousarray(np.asarray(prompts, np.int32))
+    h = hashlib.sha256()
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def collect_qkv(model, params, prompts) -> list:
+    """Per-cache-layer post-RoPE (q, k, v) for a ``[B, T]`` calibration
+    batch (see ``Model.qkv_probe``)."""
+    toks = jnp.asarray(np.asarray(prompts, np.int32))
+    return model.qkv_probe(params, toks)
+
+
+def _flatten_gqa(q, k, v):
+    """[B, Hq, T, hd] / [B, Hkv, T, hd] → per-(batch × kv-head) 2-D stacks:
+    q [B*Hkv, rep*T, hd] (each kv head scored against ALL the query heads
+    it serves), k/v [B*Hkv, T, hd]."""
+    B, Hq, T, hd = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    qf = q.reshape(B, Hkv, rep, T, hd).swapaxes(2, 3)
+    qf = qf.reshape(B * Hkv, T * rep, hd)
+    return qf, k.reshape(B * Hkv, T, hd), v.reshape(B * Hkv, T, hd)
+
+
+def _v_group(head_dim: int, group: int, bits: int) -> Optional[int]:
+    """Largest channel group ≤ ``group`` that divides head_dim AND packs
+    into whole bytes — mirrors the paged pool's V-group derivation."""
+    factor = 8 // bits
+    for g in range(min(group, head_dim), 0, -1):
+        if head_dim % g == 0 and g % factor == 0:
+            return g
+    return None
+
+
+def sensitivity_table(qkv, *, group: int,
+                      bit_ladder: Sequence[int] = BIT_LADDER,
+                      per_head: bool = False) -> list[dict]:
+    """Per-layer, per-side predicted attention-output MSE at each
+    candidate bit width.
+
+    Returns one dict per layer: ``{"key": {bits: mse}, "value": {bits:
+    mse}}`` (means over batch × kv-head; with ``per_head=True`` the
+    per-kv-head means ride along under ``"key_heads"``/``"value_heads"``).
+    The score is stage 3 (``output``) of
+    :func:`~repro.core.error_analysis.stage_errors` — the quantity the
+    layer actually contributes downstream, so K's softmax amplification
+    is priced in automatically.
+    """
+    table: list[dict] = []
+    for (q, k, v) in qkv:
+        T = k.shape[2]
+        hd = k.shape[3]
+        n_kvh = k.shape[1]
+        if T % group:
+            raise ValueError(
+                f"calibration length {T} must be a multiple of group "
+                f"{group}")
+        qf, kf, vf = _flatten_gqa(q, k, v)
+        entry: dict = {"key": {}, "value": {}}
+        if per_head:
+            entry["key_heads"] = {}
+            entry["value_heads"] = {}
+        for bits in bit_ladder:
+            k_spec = QuantSpec(bits=bits, group=group, mode="per_channel")
+            ek = jax.vmap(
+                lambda q2, k2, v2, s=k_spec: stage_errors(
+                    q2, k2, v2, quantize_key=True, spec=s)["output"]
+            )(qf, kf, vf)
+            entry["key"][bits] = float(jnp.mean(ek))
+            vg = _v_group(hd, group, bits)
+            if vg is None:
+                raise ValueError(
+                    f"no valid V channel group ≤ {group} for head_dim "
+                    f"{hd} at {bits} bits")
+            v_spec = QuantSpec(bits=bits, group=vg, mode="per_token")
+            ev = jax.vmap(
+                lambda q2, k2, v2, s=v_spec: stage_errors(
+                    q2, k2, v2, quantize_key=False, spec=s)["output"]
+            )(qf, kf, vf)
+            entry["value"][bits] = float(jnp.mean(ev))
+            if per_head:
+                entry["key_heads"][bits] = [
+                    float(x) for x in jnp.mean(
+                        ek.reshape(-1, n_kvh), axis=0)]
+                entry["value_heads"][bits] = [
+                    float(x) for x in jnp.mean(
+                        ev.reshape(-1, n_kvh), axis=0)]
+        table.append(entry)
+    return table
+
+
+def predicted_config_error(sens: list[dict],
+                           table: Sequence[tuple[int, int]]) -> float:
+    """Total predicted output MSE of a per-layer (k_bits, v_bits) table
+    under the additive per-layer/per-side error model (0 bits = fp = no
+    quantization error)."""
+    total = 0.0
+    for layer_sens, (kb, vb) in zip(sens, table):
+        if kb:
+            total += float(layer_sens["key"][kb])
+        if vb:
+            total += float(layer_sens["value"][vb])
+    return total
+
+
+def _theorem1_gap(qkv, table, *, group: int) -> float:
+    """Mean |predicted − actual| attention-output error of Theorem 1's
+    closed form at the chosen per-layer K bits — recorded in provenance
+    as a self-consistency check of the analysis driving the allocator."""
+    gaps = []
+    for (q, k, v), (kb, _) in zip(qkv, table):
+        if kb == 0:
+            continue
+        spec = QuantSpec(bits=kb, group=group, mode="per_channel")
+        _, kf, vf = _flatten_gqa(q, k, v)
+        k_hat = dequantize(quantize(kf, spec), jnp.float32)
+        q_vec = _flatten_gqa(q, k, v)[0][:, -1, :]  # last query per kv head
+        pred, act = jax.vmap(theorem1_predicted_error)(q_vec, kf, k_hat, vf)
+        gaps.append(float(jnp.mean(jnp.abs(pred - act))))
+    return float(np.mean(gaps)) if gaps else 0.0
+
+
+# -------------------------------------------------------------- allocator
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    table: tuple[tuple[int, int], ...]
+    predicted_error: float
+    bytes_per_token: float
+    group: int
+
+
+def allocate_bits(sens: list[dict], *, budget_bytes_per_token: float,
+                  n_kv_heads: int, head_dim: int, group: int,
+                  fp_bytes: int = 2, scale_bytes: int = 4,
+                  bit_ladder: Sequence[int] = BIT_LADDER) -> Allocation:
+    """Greedy bit allocation under a hard bytes-per-token budget.
+
+    Start every layer/side at the lowest ladder rung; repeatedly take the
+    upgrade (possibly skipping rungs past an error plateau) with the
+    highest predicted-error reduction per added byte that still fits the
+    budget.  Ties break keys-before-values (the paper's asymmetry), then
+    lower layer index — fully deterministic.  The sensitivity table is
+    clamped monotone non-increasing in bits first, so a larger budget can
+    never allocate to a higher predicted error.
+    """
+    ladder = tuple(sorted(set(int(b) for b in bit_ladder)))
+    L = len(sens)
+    err: list[dict] = []
+    for l in range(L):
+        e = {}
+        for side in ("key", "value"):
+            prev, d = None, {}
+            for b in ladder:
+                x = float(sens[l][side][b])
+                if prev is not None:
+                    x = min(x, prev)
+                d[b] = x
+                prev = x
+            e[side] = d
+        err.append(e)
+
+    def lb(kb, vb):
+        return layer_bytes_per_token(kb, vb, group, n_kv_heads, head_dim,
+                                     fp_bytes, scale_bytes)
+
+    idx = [[0, 0] for _ in range(L)]  # ladder rung per (layer, [K, V])
+    total = sum(lb(ladder[i[0]], ladder[i[1]]) for i in idx)
+    if total > budget_bytes_per_token + 1e-9:
+        raise ValueError(
+            f"budget {budget_bytes_per_token:.2f} B/token is below the "
+            f"all-{ladder[0]}-bit floor {total:.2f} B/token at group "
+            f"{group}")
+    sides = ("key", "value")
+    while True:
+        best = None  # (sort key, layer, side index, target rung, Δbytes)
+        for l in range(L):
+            kb, vb = ladder[idx[l][0]], ladder[idx[l][1]]
+            base = lb(kb, vb)
+            for si, side in enumerate(sides):
+                j = idx[l][si]
+                for j2 in range(j + 1, len(ladder)):
+                    nb = ((ladder[j2], vb) if si == 0
+                          else (kb, ladder[j2]))
+                    d_bytes = lb(*nb) - base
+                    if total + d_bytes > budget_bytes_per_token + 1e-9:
+                        continue
+                    d_err = err[l][side][ladder[j]] - err[l][side][ladder[j2]]
+                    gain = d_err / max(d_bytes, 1e-12)
+                    key = (gain, -si, -l, -j2)
+                    if best is None or key > best[0]:
+                        best = (key, l, si, j2, d_bytes)
+        if best is None or best[0][0] <= 0.0:
+            break
+        _, l, si, j2, d_bytes = best
+        idx[l][si] = j2
+        total += d_bytes
+
+    table = tuple((ladder[i[0]], ladder[i[1]]) for i in idx)
+    predicted = sum(err[l]["key"][table[l][0]] + err[l]["value"][table[l][1]]
+                    for l in range(L))
+    return Allocation(table=table, predicted_error=predicted,
+                      bytes_per_token=total, group=group)
+
+
+# ------------------------------------------------------------------ tune
+
+
+def tune(model, params, prompts, *, budget_bytes_per_token: float,
+         group_candidates: Sequence[int] = (32,), residual: int = 128,
+         bit_ladder: Sequence[int] = BIT_LADDER, fp_bytes: int = 2,
+         scale_bytes: int = 4, per_head: bool = False) -> BitConfig:
+    """Calibrate → score → allocate → emit a :class:`BitConfig`.
+
+    ``group_candidates`` lets the tuner trade scale/zero overhead against
+    code width: a larger RTN group frees scale bytes that the greedy pass
+    can spend on higher bit widths (every candidate must divide
+    ``residual`` so groups commit exactly).  The candidate with the
+    lowest predicted error within budget wins; ties break toward fewer
+    bytes, then the smaller group — deterministic end to end.
+    """
+    cfg = model.cfg
+    prompts = np.asarray(prompts, np.int32)
+    qkv = collect_qkv(model, params, prompts)
+    best = None  # (predicted, bytes, group, Allocation, sens)
+    floors: list[str] = []
+    for g in sorted(set(int(g) for g in group_candidates)):
+        if residual % g:
+            raise ValueError(
+                f"residual {residual} % candidate group {g} != 0")
+        sens = sensitivity_table(qkv, group=g, bit_ladder=bit_ladder,
+                                 per_head=per_head)
+        try:
+            alloc = allocate_bits(
+                sens, budget_bytes_per_token=budget_bytes_per_token,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                group=g, fp_bytes=fp_bytes, scale_bytes=scale_bytes,
+                bit_ladder=bit_ladder)
+        except ValueError as e:
+            # A small group's scale overhead can put even the all-1-bit
+            # floor above budget while a larger candidate still fits —
+            # skip it, fail only if every candidate is infeasible.
+            floors.append(str(e))
+            continue
+        key = (alloc.predicted_error, alloc.bytes_per_token, g)
+        if best is None or key < best[0]:
+            best = (key, alloc, sens)
+    if best is None:
+        raise ValueError(
+            "no group candidate fits the budget: " + "; ".join(floors))
+    _, alloc, _ = best
+    g = alloc.group
+    provenance = {
+        "calib_hash": calib_hash(prompts),
+        "calib_prompts": int(prompts.shape[0]),
+        "calib_len": int(prompts.shape[1]),
+        "budget_bytes_per_token": float(budget_bytes_per_token),
+        "predicted_output_mse": float(alloc.predicted_error),
+        "bytes_per_token": float(alloc.bytes_per_token),
+        "group_candidates": sorted(set(int(x) for x in group_candidates)),
+        "bit_ladder": sorted(set(int(b) for b in bit_ladder)),
+        "theorem1_gap": _theorem1_gap(qkv, alloc.table, group=g),
+    }
+    return BitConfig(
+        layers=tuple(LayerBits(nbits_key=kb, nbits_value=vb, group_size=g)
+                     for kb, vb in alloc.table),
+        group=g, residual=residual, model=cfg.name,
+        provenance=provenance)

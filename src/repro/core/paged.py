@@ -205,27 +205,34 @@ class PagedKVCache:
         dtype=jnp.bfloat16,
         scale_dtype=jnp.bfloat16,
         v_slice_offset: int = -1,
+        layer=None,
     ) -> "PagedKVCache":
+        # With per-layer bit tables (core/bittuner.py) the same engine
+        # builds pools with different bit widths, so a validation failure
+        # must say WHICH cache layer(s) it belongs to — a bare global
+        # message is misleading when only one stage is misconfigured.
+        where = "" if layer is None else f"cache layer {layer}: "
+
+        def _err(msg: str):
+            raise ValueError(where + msg)
+
         if block_tokens % group:
-            raise ValueError(
-                f"block_tokens {block_tokens} % group {group} != 0")
+            _err(f"block_tokens {block_tokens} % group {group} != 0")
         if residual % group:
-            raise ValueError(f"residual {residual} % group {group} != 0")
+            _err(f"residual {residual} % group {group} != 0")
         if max_tokens <= 0:
-            raise ValueError("max_tokens (per-slot capacity) required")
+            _err("max_tokens (per-slot capacity) required")
         # Sub-byte packing constraints, checked here rather than failing
         # with an opaque reshape error at first commit: K packs each token
         # group into whole bytes, V packs each head row along channels.
         if k_bits and group % (8 // k_bits):
-            raise ValueError(
-                f"group {group} not divisible by the K pack factor "
-                f"{8 // k_bits} (= 8 // {k_bits} bits); token groups must "
-                "pack into whole bytes")
+            _err(f"group {group} not divisible by the K pack factor "
+                 f"{8 // k_bits} (= 8 // {k_bits} bits); token groups must "
+                 "pack into whole bytes")
         if v_slice_offset < 0 and v_bits and head_dim % (8 // v_bits):
-            raise ValueError(
-                f"head_dim {head_dim} not divisible by the V pack factor "
-                f"{8 // v_bits} (= 8 // {v_bits} bits); channel rows must "
-                "pack into whole bytes")
+            _err(f"head_dim {head_dim} not divisible by the V pack factor "
+                 f"{8 // v_bits} (= 8 // {v_bits} bits); channel rows must "
+                 "pack into whole bytes")
         max_blocks = -(-max_tokens // block_tokens)
         cap = residual + group
         S, H, BT, D = slots, kv_heads, block_tokens, head_dim

@@ -39,6 +39,10 @@ def main(argv=None):
     ap.add_argument("--high-bits", type=int, default=2)
     ap.add_argument("--low-bits", type=int, default=1)
     ap.add_argument("--float-cache", action="store_true")
+    ap.add_argument("--bit-config", default="",
+                    help="path to a tuner-emitted BitConfig artifact "
+                         "(launch/tune.py); overrides --lk/--lv/--bits "
+                         "with the tuned per-layer table")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend one common N-token system prompt to every "
                          "request and serve with the ref-counted prefix "
@@ -103,6 +107,7 @@ def main(argv=None):
                                max_tokens=args.max_tokens,
                                prompt_len=args.prompt_len,
                                dtype=jnp.float32,
+                               bit_config=args.bit_config or None,
                                block_tokens=args.block_tokens or None,
                                num_blocks=args.num_blocks or None,
                                prefix_cache=shared and model.supports_paged(),
@@ -112,6 +117,9 @@ def main(argv=None):
                                swap_ahead=(args.swap_ahead
                                            and preemption == "swap"),
                                debug=args.debug or None)
+        if args.bit_config:
+            print(f"bit_config={args.bit_config}  "
+                  f"policy={model.policy.describe()}")
         rng = np.random.default_rng(args.seed)
         system = (rng.integers(0, cfg.vocab, size=args.shared_prefix,
                                dtype=np.int32) if shared else None)
@@ -138,10 +146,11 @@ def main(argv=None):
                           for k, v in engine.sanitizer.stats().items()})
     # cache memory accounting (the paper's Fig. 4 quantity)
     if n:
-        q_bytes = policy.cache_bytes_per_token(
+        q_bytes = model.policy.cache_bytes_per_token(
             cfg.n_kv_heads, cfg.resolved_head_dim, scale_bytes=2)
         f_bytes = AsymKVPolicy.float_cache(
-            n, group=group, residual=residual).cache_bytes_per_token(
+            n, group=model.group,
+            residual=model.residual).cache_bytes_per_token(
             cfg.n_kv_heads, cfg.resolved_head_dim)
         stats["cache_bytes_per_token"] = q_bytes
         stats["cache_vs_fp16"] = q_bytes / f_bytes

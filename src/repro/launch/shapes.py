@@ -30,6 +30,10 @@ class ShapeCell:
     chunk: int = 0
     block_tokens: int = 0
     pool_frac: float = 1.0
+    # Tuner-emitted BitConfig artifact (launch/tune.py) for this cell —
+    # when the file exists, default_policy loads the tuned per-layer bit
+    # table instead of the paper's fixed l_k/l_v prefix scheme.
+    bit_config: str = ""
 
 
 SHAPES = {
@@ -80,6 +84,15 @@ SHAPES = {
     "serve_overload_8k": ShapeCell("serve_overload_8k", "serve", 8192, 64,
                                    layout="paged", chunk=256,
                                    block_tokens=256, pool_frac=0.6),
+    # Sensitivity-tuned serving: same compiled shapes as serve_mixed_8k
+    # but the per-layer K/V bit widths come from a bit auto-tuner artifact
+    # (``launch/tune.py``; tune with ``--group 32 --residual 512`` so the
+    # 256-token chunk keeps chunk ≤ residual + group).  Falls back to the
+    # paper's default AsymKV policy when the artifact file is absent.
+    "serve_tuned_8k": ShapeCell("serve_tuned_8k", "serve", 8192, 64,
+                                layout="paged", chunk=256,
+                                block_tokens=256,
+                                bit_config="bitconfig_8k.json"),
 }
 
 # Sub-quadratic archs that run the 500k-context decode cell.

@@ -9,6 +9,7 @@ runs.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
@@ -45,13 +46,20 @@ class StepBundle:
     donate_argnums: tuple = ()
 
 
-def default_policy(cfg: ModelConfig, cell: ShapeCell) -> AsymKVPolicy:
+def default_policy(cfg: ModelConfig, cell: ShapeCell):
     """The paper-faithful default: AsymKV-(L/2)/0 at 2/1 bits, residual 128
-    for ≤4k contexts and 512 beyond (paper App. A.1)."""
+    for ≤4k contexts and 512 beyond (paper App. A.1).  Cells carrying a
+    ``bit_config`` artifact path (serve_tuned_8k) load the auto-tuner's
+    per-layer table instead when the file exists."""
     n = cfg.n_cache_layers
     if n == 0:
         return AsymKVPolicy.float_cache(max(n, 0)) if n else \
             AsymKVPolicy(n_layers=0, l_k=0, l_v=0, enabled=False)
+    if cell.bit_config and os.path.exists(cell.bit_config):
+        from repro.core.bittuner import BitConfig
+        bc = BitConfig.load(cell.bit_config)
+        bc.validate_for(cfg)
+        return bc.to_policy()
     residual = 128 if cell.seq <= 4096 else 512
     return AsymKVPolicy(n_layers=n, l_k=n // 2, l_v=0,
                         high_bits=2, low_bits=1, residual=residual)
@@ -64,7 +72,8 @@ def build_model(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
     if mesh is not None and cell.kind == "train" and "model" in mesh.axis_names:
         if cell.seq % mesh.shape["model"] == 0:
             act_pspec = P(batch_pspec(mesh)[0], "model", None)
-    return Model(cfg, policy, residual=policy.residual,
+    return Model(cfg, policy, group=getattr(policy, "group", 32),
+                 residual=policy.residual,
                  enc_len_hint=4096, act_pspec=act_pspec)
 
 

@@ -1,0 +1,116 @@
+"""Bit auto-tuner launcher: calibrate → allocate → emit a BitConfig.
+
+    PYTHONPATH=src python -m repro.launch.tune --arch gemma3-1b --reduced \
+        --calib-prompts 2 --calib-len 64 --group 8,32 --residual 32 \
+        --out bitconfig.json
+
+Runs a small random-token calibration set through the model, scores each
+layer/side's quantization sensitivity with the paper's stage-error
+analysis (``core/error_analysis.py``), greedily allocates {1,2,4,8}-bit
+widths under a KV bytes-per-token budget (``core/bittuner.py``) and
+writes the versioned JSON artifact that ``launch/serve.py --bit-config``
+/ ``ServingEngine(bit_config=...)`` consume.
+
+The budget defaults to ``--budget-frac`` × the fp16 cache footprint;
+give ``--budget-bytes`` to pin it absolutely.  For the 8k serve cell use
+``--group 32 --residual 512`` so the tuned engine keeps the long-context
+chunking constraints (chunk ≤ residual + group).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduced_cfg
+from repro.core.asymkv import AsymKVPolicy
+from repro.core.bittuner import tune
+from repro.models.transformer import Model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--calib-prompts", type=int, default=4,
+                    help="calibration batch size")
+    ap.add_argument("--calib-len", type=int, default=128,
+                    help="calibration sequence length (must be a multiple "
+                         "of every --group candidate)")
+    ap.add_argument("--budget-bytes", type=float, default=0.0,
+                    help="KV-cache budget in bytes per token summed over "
+                         "layers (0 = use --budget-frac)")
+    ap.add_argument("--budget-frac", type=float, default=0.25,
+                    help="budget as a fraction of the fp16 cache footprint")
+    ap.add_argument("--group", default="32",
+                    help="comma-separated RTN group-size candidates; the "
+                         "tuner picks the one with the lowest predicted "
+                         "error within budget")
+    ap.add_argument("--residual", type=int, default=128,
+                    help="full-precision recent-token window of the "
+                         "emitted config (must be a multiple of every "
+                         "group candidate)")
+    ap.add_argument("--per-head", action="store_true",
+                    help="record per-KV-head sensitivity diagnostics in "
+                         "the sensitivity pass (slower; table unchanged)")
+    ap.add_argument("--out", default="bitconfig.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_cfg(cfg)
+    n = cfg.n_cache_layers
+    if n == 0:
+        raise SystemExit(f"{cfg.name} has no KV cache to tune")
+    groups = sorted({int(g) for g in args.group.split(",")})
+    for g in groups:
+        if args.residual % g:
+            raise SystemExit(
+                f"--residual {args.residual} not a multiple of group "
+                f"candidate {g}")
+        if args.calib_len % g:
+            raise SystemExit(
+                f"--calib-len {args.calib_len} not a multiple of group "
+                f"candidate {g}")
+
+    fp16 = AsymKVPolicy.float_cache(
+        n, group=groups[0],
+        residual=args.residual).cache_bytes_per_token(
+        cfg.n_kv_heads, cfg.resolved_head_dim)
+    budget = args.budget_bytes or args.budget_frac * fp16
+    print(f"arch={cfg.name}  layers={n}  budget={budget:.1f} B/token "
+          f"({budget / fp16:.3f}x fp16)  groups={groups}")
+
+    model = Model(cfg, AsymKVPolicy.float_cache(n, group=groups[0],
+                                                residual=args.residual))
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.calib_prompts, args.calib_len),
+                           dtype=np.int32)
+
+    bc = tune(model, params, prompts, budget_bytes_per_token=budget,
+              group_candidates=groups, residual=args.residual,
+              per_head=args.per_head)
+    bc.save(args.out)
+
+    prov = bc.provenance
+    print(f"tuned: {bc.to_policy().describe()}  group={bc.group}  "
+          f"residual={bc.residual}")
+    for i, lb in enumerate(bc.layers):
+        print(f"  layer {i:3d}: K={lb.nbits_key}b  V={lb.nbits_value}b")
+    print(f"  predicted_output_mse: {prov['predicted_output_mse']:.6g}")
+    print(f"  bytes_per_token: {prov['bytes_per_token']:.1f} "
+          f"({prov['bytes_per_token'] / fp16:.3f}x fp16)")
+    print(f"  theorem1_gap: {prov['theorem1_gap']:.3g}")
+    print(f"  calib: {prov['calib_prompts']}x{prov['calib_len']} "
+          f"hash={prov['calib_hash']}")
+    print(f"wrote {args.out}")
+    return bc
+
+
+if __name__ == "__main__":
+    main()

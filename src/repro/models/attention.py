@@ -97,15 +97,17 @@ def init_paged_attn_cache(
     group: int = 32,
     residual: int = 128,
     dtype=jnp.bfloat16,
+    layer=None,
 ) -> PagedKVCache:
     """Paged cache for one attention layer.  Windowed layers use the same
     full-capacity page table (the window is enforced by position masks in
-    the paged attends); freeing out-of-window blocks is a follow-on."""
+    the paged attends); freeing out-of-window blocks is a follow-on.
+    ``layer`` labels validation errors with the cache-layer index."""
     return PagedKVCache.init(
         slots, cfg.n_kv_heads, cfg.resolved_head_dim,
         num_blocks=num_blocks, block_tokens=block_tokens,
         max_tokens=max_tokens, k_bits=k_bits, v_bits=v_bits,
-        group=group, residual=residual, dtype=dtype)
+        group=group, residual=residual, dtype=dtype, layer=layer)
 
 
 def _train_attention(q, k, v, cfg: ModelConfig, *, window, q_block,

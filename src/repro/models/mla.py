@@ -82,6 +82,7 @@ def init_paged_mla_cache(
     group: int = 32,
     residual: int = 128,
     dtype=jnp.bfloat16,
+    layer=None,
 ) -> PagedKVCache:
     """Paged latent cache: one ``[k_rope ‖ c_kv]`` row per token with
     ``kv_heads=1`` and ``v_slice_offset=rope_head_dim`` — the V side of the
@@ -94,7 +95,7 @@ def init_paged_mla_cache(
         num_blocks=num_blocks, block_tokens=block_tokens,
         max_tokens=max_tokens, k_bits=k_bits, v_bits=0,
         group=group, residual=residual, dtype=dtype,
-        v_slice_offset=m.rope_head_dim)
+        v_slice_offset=m.rope_head_dim, layer=layer)
 
 
 def _project(params, x, cfg: ModelConfig, positions):

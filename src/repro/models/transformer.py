@@ -24,6 +24,7 @@ Encoder-decoder models add a cross-attention sublayer per decoder block whose
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
@@ -315,9 +316,22 @@ class Model:
         and vision prefixes remain ROADMAP follow-ons."""
         return self.cfg_supports_paged(self.cfg)
 
+    def apply_bit_config(self, bit_config) -> None:
+        """Adopt a tuner-emitted BitConfig (or a path to one): validate it
+        against this model's config, then replace policy/group/residual so
+        stage splitting and every subsequent cache init follow the tuned
+        per-layer table.  Must run before any caches are built."""
+        from repro.core.bittuner import BitConfig
+        if isinstance(bit_config, (str, os.PathLike)):
+            bit_config = BitConfig.load(bit_config)
+        bit_config.validate_for(self.cfg)
+        self.policy = bit_config.to_policy()
+        self.group = bit_config.group
+        self.residual = bit_config.residual
+
     def init_paged_caches(self, slots: int, max_tokens: int, *,
                           num_blocks: int, block_tokens: int,
-                          dtype=jnp.bfloat16) -> dict:
+                          dtype=jnp.bfloat16, bit_config=None) -> dict:
         """Paged cache pytree: ``run{i}_stage{j}`` → stacked PagedKVCache
         (stacked :class:`~repro.models.ssm.PagedSSMState` for M runs).
 
@@ -327,8 +341,14 @@ class Model:
         per-stage ``page_table`` leaves are kept identical.  M runs carry
         no blocks — just one fixed-size state slot per sequence whose
         ``lengths`` leaf tracks the same per-slot frontier.
+
+        ``bit_config`` (a BitConfig or artifact path) applies a tuned
+        per-layer bit table first — equivalent to
+        :meth:`apply_bit_config` then building caches.
         """
         cfg = self.cfg
+        if bit_config is not None:
+            self.apply_bit_config(bit_config)
         if not self.supports_paged():
             raise NotImplementedError(
                 f"paged serving unsupported for {cfg.name} "
@@ -341,18 +361,21 @@ class Model:
                 continue
             for j, stg in enumerate(self.run_stages(run)):
                 n = stg.hi - stg.lo
+                lo = run.cache_start + stg.lo
+                hi = run.cache_start + stg.hi - 1
+                label = str(lo) if hi == lo else f"{lo}..{hi}"
                 if cfg.mla:
                     one = mla_mod.init_paged_mla_cache(
                         cfg, slots, stg.k_bits, stg.v_bits,
                         num_blocks=num_blocks, block_tokens=block_tokens,
                         max_tokens=max_tokens, group=self.group,
-                        residual=self.residual, dtype=dtype)
+                        residual=self.residual, dtype=dtype, layer=label)
                 else:
                     one = attn_mod.init_paged_attn_cache(
                         cfg, slots, stg.k_bits, stg.v_bits,
                         num_blocks=num_blocks, block_tokens=block_tokens,
                         max_tokens=max_tokens, group=self.group,
-                        residual=self.residual, dtype=dtype)
+                        residual=self.residual, dtype=dtype, layer=label)
                 caches[f"run{i}_stage{j}"] = self._stack(one, n)
         return caches
 
@@ -369,6 +392,53 @@ class Model:
                 out[f"run{i}_stage{j}"] = (self.cfg.window
                                            if run.kind == "L" else None)
         return out
+
+    # ------------------------------------------------------------ probing
+
+    def qkv_probe(self, params, tokens) -> list:
+        """Per-cache-layer post-RoPE (q, k, v) captures for calibration.
+
+        Runs one train-mode forward unrolled in Python (fp32, no scan)
+        and records each attention layer's projected + RoPE'd q/K/V —
+        exactly the tensors the serving cache quantizes — for the bit
+        auto-tuner's sensitivity pass (``core/bittuner.py``).  The block
+        advance recomputes attention after the capture; acceptable for
+        the tiny offline calibration batches this is meant for.
+
+        Returns one ``(q [B,Hq,T,hd], k [B,Hkv,T,hd], v [B,Hkv,T,hd])``
+        triple per cache layer, in cache-layer order.
+        """
+        cfg = self.cfg
+        if cfg.mla or cfg.is_encdec or cfg.frontend:
+            raise NotImplementedError(
+                f"qkv_probe covers decoder-only non-MLA archs; {cfg.name} "
+                "is out of scope")
+        x = self._embed_inputs(params, {"tokens": jnp.asarray(tokens)},
+                               jnp.float32)
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+        captures: list = []
+        for i, run in enumerate(self.runs):
+            if run.kind == "M":
+                stacked = params[f"run{i}"]
+                for off in range(run.count):
+                    p = jax.tree.map(lambda a, o=off: a[o], stacked)
+                    h = _apply_norm(cfg, p["norm"], x)
+                    out, _ = ssm_mod.mamba2_fwd(p["mixer"], h, cfg)
+                    x = x + out
+                continue
+            theta = (cfg.rope_theta_local if run.kind == "L"
+                     else cfg.rope_theta)
+            for off in range(run.count):
+                p = (params["shared_z"] if run.kind == "Z" else
+                     jax.tree.map(lambda a, o=off: a[o], params[f"run{i}"]))
+                h = _apply_norm(cfg, p["norm1"], x)
+                captures.append(
+                    attn_mod._qkv(p["attn"], h, cfg, positions, theta))
+                x, _, _, aux = self._attn_block(
+                    p, x, run, mode="train", positions=positions, aux=aux)
+        assert len(captures) == cfg.n_cache_layers
+        return captures
 
     # ------------------------------------------------------------ blocks
 

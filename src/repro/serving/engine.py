@@ -161,8 +161,15 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  preemption_mode: Optional[str] = None,
                  swap_ahead: bool = False,
+                 bit_config=None,
                  debug: Optional[bool] = None):
         self.model = model
+        if bit_config is not None:
+            # Tuner-emitted per-layer bit table (core/bittuner.py): a
+            # BitConfig object or an artifact path.  Applied before any
+            # group/residual read below so block sizing, chunk validation
+            # and the cache pools all follow the tuned table.
+            model.apply_bit_config(bit_config)
         self.params = params
         self.slots = slots
         self.max_tokens = max_tokens

@@ -1,0 +1,290 @@
+"""Tests for the sensitivity-driven bit auto-tuner (core/bittuner.py).
+
+Covers: tuner determinism, allocator monotonicity (budget ↑ never raises
+predicted error; keys before values at equal marginal gain), hard budget
+enforcement, artifact schema round-trip + layer-indexed validation, the
+CLI, and the engine differential — a tuned-config engine must stream
+bit-identically to a hand-built engine using the same per-layer specs.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.asymkv import AsymKVPolicy, TableKVPolicy
+from repro.core.bittuner import (
+    BIT_LADDER, Allocation, BitConfig, LayerBits, allocate_bits,
+    calib_hash, collect_qkv, predicted_config_error, sensitivity_table,
+    tune,
+)
+from repro.models.transformer import Model
+from repro.serving.engine import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _model(arch="gemma3-1b", group=8, residual=8, seed=0):
+    cfg = reduced(get_config(arch))
+    n = cfg.n_cache_layers
+    model = Model(cfg, AsymKVPolicy.float_cache(n, group=group,
+                                                residual=residual))
+    return cfg, model, model.init(jax.random.PRNGKey(seed))
+
+
+def _prompts(cfg, b=2, t=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(b, t), dtype=np.int32)
+
+
+def _sens(errs_k, errs_v):
+    """Synthetic per-layer sensitivity tables from (err@1, err@2, err@4,
+    err@8) tuples."""
+    return [{"key": dict(zip(BIT_LADDER, ek)),
+             "value": dict(zip(BIT_LADDER, ev))}
+            for ek, ev in zip(errs_k, errs_v)]
+
+
+# ------------------------------------------------------------- allocator
+
+
+def test_allocator_budget_never_exceeded_and_monotone():
+    sens = _sens(
+        errs_k=[(8.0, 2.0, 0.5, 0.1), (4.0, 1.0, 0.25, 0.05),
+                (2.0, 0.5, 0.12, 0.02)],
+        errs_v=[(1.0, 0.3, 0.08, 0.01), (0.9, 0.2, 0.05, 0.01),
+                (0.5, 0.1, 0.03, 0.005)])
+    from repro.core.asymkv import layer_bytes_per_token
+    kw = dict(n_kv_heads=2, head_dim=8, group=8)
+    floor = 3 * layer_bytes_per_token(1, 1, 8, 2, 8)
+    ceiling = allocate_bits(sens, budget_bytes_per_token=1e9,
+                            **kw).bytes_per_token  # all-8-bit cost
+    prev_err = None
+    for budget in np.linspace(floor, ceiling + 10, 24):
+        a = allocate_bits(sens, budget_bytes_per_token=float(budget), **kw)
+        assert a.bytes_per_token <= budget + 1e-9, (budget, a)
+        assert all(kb in (1, 2, 4, 8) and vb in (1, 2, 4, 8)
+                   for kb, vb in a.table)
+        if prev_err is not None:
+            assert a.predicted_error <= prev_err + 1e-12, (budget, a)
+        prev_err = a.predicted_error
+
+
+def test_allocator_floor_raises_below_all_1bit():
+    sens = _sens([(1.0, 0.5, 0.2, 0.1)], [(1.0, 0.5, 0.2, 0.1)])
+    with pytest.raises(ValueError, match="all-1-bit floor"):
+        allocate_bits(sens, budget_bytes_per_token=1.0,
+                      n_kv_heads=2, head_dim=8, group=8)
+
+
+def test_allocator_keys_before_values_at_equal_gain():
+    """K and V cost the same bytes per upgrade; with identical error
+    tables every marginal gain ties — the paper's asymmetry must break
+    the tie toward keys (then toward the lower layer)."""
+    from repro.core.asymkv import layer_bytes_per_token
+    tbl = (4.0, 1.0, 0.5, 0.25)
+    sens = _sens([tbl, tbl], [tbl, tbl])
+    kw = dict(n_kv_heads=2, head_dim=8, group=8)
+    all1 = 2 * layer_bytes_per_token(1, 1, 8, 2, 8)
+    step = (layer_bytes_per_token(2, 1, 8, 2, 8)
+            - layer_bytes_per_token(1, 1, 8, 2, 8))
+    # budget for exactly one single-rung upgrade above the 1-bit floor
+    a = allocate_bits(sens, budget_bytes_per_token=all1 + step, **kw)
+    assert a.table == ((2, 1), (1, 1))  # key upgraded, layer 0 first
+    a = allocate_bits(sens, budget_bytes_per_token=all1 + 2 * step, **kw)
+    assert a.table == ((2, 1), (2, 1))  # keys exhaust before any value
+
+
+def test_allocator_skips_past_error_plateau():
+    """err(1)==err(2) but err(4) is much lower: the single-rung gain to
+    2 bits is zero, so the allocator must consider the multi-rung jump
+    straight to 4 bits instead of stalling."""
+    sens = _sens([(5.0, 5.0, 0.1, 0.1)], [(0.1, 0.1, 0.1, 0.1)])
+    a = allocate_bits(sens, budget_bytes_per_token=1e9,
+                      n_kv_heads=2, head_dim=8, group=8)
+    assert a.table[0][0] == 4
+    assert a.predicted_error == pytest.approx(0.2)
+
+
+# ------------------------------------------------ sensitivity + predicted
+
+
+def test_sensitivity_table_shape_and_predicted_sum():
+    cfg, model, params = _model()
+    qkv = collect_qkv(model, params, _prompts(cfg))
+    sens = sensitivity_table(qkv, group=8, bit_ladder=(1, 2))
+    assert len(sens) == cfg.n_cache_layers
+    for e in sens:
+        assert set(e) == {"key", "value"}
+        for side in ("key", "value"):
+            assert set(e[side]) == {1, 2}
+            assert all(v >= 0 for v in e[side].values())
+    table = [(1, 2)] * cfg.n_cache_layers
+    total = predicted_config_error(sens, table)
+    assert total == pytest.approx(
+        sum(e["key"][1] + e["value"][2] for e in sens))
+    # 0 bits = fp side contributes nothing
+    assert predicted_config_error(sens, [(0, 0)] * cfg.n_cache_layers) == 0
+
+
+def test_sensitivity_rejects_unaligned_calib_len():
+    cfg, model, params = _model()
+    qkv = collect_qkv(model, params, _prompts(cfg, t=24))
+    with pytest.raises(ValueError, match="multiple of group"):
+        sensitivity_table(qkv, group=16)
+
+
+# ------------------------------------------------------------------ tune
+
+
+def test_tune_deterministic():
+    cfg, model, params = _model()
+    prompts = _prompts(cfg)
+    budget = AsymKVPolicy.kivi(
+        cfg.n_cache_layers, bits=1, group=8,
+        residual=8).cache_bytes_per_token(cfg.n_kv_heads,
+                                          cfg.resolved_head_dim)
+    kw = dict(budget_bytes_per_token=budget, group_candidates=(8, 32),
+              residual=32)
+    a = tune(model, params, prompts, **kw)
+    b = tune(model, params, prompts, **kw)
+    assert a.to_json() == b.to_json()
+    assert a.provenance["calib_hash"] == calib_hash(prompts)
+
+
+def test_tune_budget_monotone_and_respected():
+    cfg, model, params = _model()
+    prompts = _prompts(cfg)
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    base = AsymKVPolicy.kivi(cfg.n_cache_layers, bits=1, group=8,
+                             residual=8).cache_bytes_per_token(Hkv, hd)
+    prev = None
+    for mult in (1.0, 1.5, 2.5):
+        bc = tune(model, params, prompts,
+                  budget_bytes_per_token=base * mult,
+                  group_candidates=(8, 32), residual=32)
+        spent = bc.bytes_per_token(Hkv, hd)
+        assert spent <= base * mult + 1e-6
+        err = bc.provenance["predicted_output_mse"]
+        if prev is not None:
+            assert err <= prev + 1e-12
+        prev = err
+
+
+# -------------------------------------------------------------- artifact
+
+
+def test_bitconfig_roundtrip(tmp_path):
+    bc = BitConfig(layers=(LayerBits(2, 1, 32), LayerBits(8, 4, 32)),
+                   group=32, residual=128, model="x",
+                   provenance={"calib_hash": "ab", "predicted_error": 0.5})
+    assert BitConfig.from_json(bc.to_json()) == bc
+    p = tmp_path / "bc.json"
+    bc.save(p)
+    assert BitConfig.load(p) == bc
+    obj = json.loads(p.read_text())
+    assert obj["kind"] == "asymkv-bitconfig"
+    assert obj["version"] == 1
+    assert obj["layers"][1] == {"nbits_key": 8, "nbits_value": 4,
+                                "group_size": 32}
+
+
+def test_bitconfig_rejects_wrong_version_and_kind():
+    bc = BitConfig(layers=(LayerBits(1, 1, 32),), group=32, residual=32)
+    obj = bc.to_json()
+    with pytest.raises(ValueError, match="unsupported"):
+        BitConfig.from_json({**obj, "version": 99})
+    with pytest.raises(ValueError, match="kind"):
+        BitConfig.from_json({**obj, "kind": "other"})
+
+
+def test_validate_for_names_offending_layer():
+    cfg = reduced(get_config("gemma3-1b"))
+    n = cfg.n_cache_layers
+    ok = LayerBits(2, 2, 32)
+    with pytest.raises(ValueError, match="cache layers"):
+        BitConfig(layers=(ok,) * (n + 1), group=32,
+                  residual=32).validate_for(cfg)
+    bad = (ok,) * (n - 1) + (LayerBits(2, 2, 16),)
+    with pytest.raises(ValueError, match=rf"layer {n - 1}: group_size"):
+        BitConfig(layers=bad, group=32, residual=32).validate_for(cfg)
+    bad = (ok,) * (n - 2) + (LayerBits(3, 2, 32), ok)
+    with pytest.raises(ValueError, match=rf"layer {n - 2}: nbits_key"):
+        BitConfig(layers=bad, group=32, residual=32).validate_for(cfg)
+
+
+def test_table_policy_layer_spec_errors_name_layer():
+    # group 4 breaks the 1-bit pack factor (needs multiples of 8): the
+    # spec error must say which layer asked for it
+    pol = TableKVPolicy(table=((2, 2), (1, 1)), group=4, residual=8)
+    with pytest.raises(ValueError, match="cache layer 1"):
+        pol.key_spec(1)
+    assert pol.key_spec(0) is not None
+
+
+def test_paged_init_error_names_layer():
+    from repro.core.paged import PagedKVCache
+    with pytest.raises(ValueError, match="cache layer 3: group 4"):
+        PagedKVCache.init(2, 2, 8, num_blocks=4, block_tokens=8,
+                          max_tokens=64, k_bits=1, v_bits=1, group=4,
+                          residual=8, layer="3")
+
+
+# ----------------------------------------------------------- integration
+
+
+def test_engine_differential_tuned_vs_handbuilt(tmp_path):
+    """Streams under a tuned BitConfig must be bit-identical to a
+    hand-built engine using the same per-layer specs — the artifact
+    path is configuration plumbing, never a numerics change."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg)
+    budget = AsymKVPolicy.kivi(
+        cfg.n_cache_layers, bits=1, group=8,
+        residual=8).cache_bytes_per_token(cfg.n_kv_heads,
+                                          cfg.resolved_head_dim)
+    bc = tune(model, params, prompts, budget_bytes_per_token=budget,
+              group_candidates=(8, 32), residual=32)
+    art = tmp_path / "bc.json"
+    bc.save(art)
+
+    def drain(engine):
+        rng = np.random.default_rng(7)
+        for rid in range(3):
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, [9, 33, 16][rid],
+                                    dtype=np.int32),
+                max_new_tokens=[6, 3, 5][rid]))
+        return {r.rid: list(r.output) for r in engine.run()}
+
+    m_art = Model(cfg)
+    e_art = ServingEngine(m_art, params, slots=2, max_tokens=128,
+                          dtype=jnp.float32, bit_config=str(art))
+    assert m_art.policy.describe().startswith("tuned[")
+    s_art = drain(e_art)
+
+    hand = TableKVPolicy(
+        table=tuple((lb.nbits_key, lb.nbits_value) for lb in bc.layers),
+        group=bc.group, residual=bc.residual)
+    m_hand = Model(cfg, hand, group=bc.group, residual=bc.residual)
+    e_hand = ServingEngine(m_hand, params, slots=2, max_tokens=128,
+                           dtype=jnp.float32)
+    s_hand = drain(e_hand)
+    assert s_art == s_hand
+
+
+def test_tune_cli_smoke(tmp_path):
+    from repro.launch import tune as tune_cli
+    out = tmp_path / "bc.json"
+    bc = tune_cli.main(["--arch", "gemma3-1b", "--reduced",
+                        "--calib-prompts", "1", "--calib-len", "32",
+                        "--group", "8,32", "--residual", "32",
+                        "--out", str(out)])
+    assert out.exists()
+    loaded = BitConfig.load(out)
+    assert loaded == bc
+    loaded.validate_for(reduced(get_config("gemma3-1b")))

@@ -37,5 +37,6 @@ def test_intra_repo_markdown_links_resolve(md):
 def test_docs_exist():
     for p in (ROOT / "README.md", ROOT / "docs" / "architecture.md",
               ROOT / "docs" / "serving.md",
-              ROOT / "docs" / "static_analysis.md"):
+              ROOT / "docs" / "static_analysis.md",
+              ROOT / "docs" / "bit_allocation.md"):
         assert p.exists(), p

@@ -1,0 +1,141 @@
+"""Property-based tests for core/quant.py (via the hypothesis shim).
+
+The example-based tests in test_quant.py pin specific shapes; these sweep
+the spec space and assert the *properties* the serving stack relies on:
+
+* RTN round-trip error is bounded by half a quantization step per group,
+  ``(max − min) / (2^b − 1) / 2``;
+* pack/unpack is bijective for every supported bit width;
+* scale/zero are invariant under constant shifts (codes unchanged, zero
+  absorbs the shift) — RTN is an affine code;
+* degenerate inputs round-trip exactly: constant groups (zero scale) and
+  single-element groups.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.quant import (
+    QuantSpec, dequantize, pack_bits, quantize, unpack_bits,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+T, H = 64, 32  # divisible by every group/pack-factor combination below
+
+
+def _data(seed: int, grid: float = 0.0) -> np.ndarray:
+    """Deterministic [T, H] floats; ``grid > 0`` snaps values to an
+    exactly-representable lattice (for bit-exactness properties)."""
+    rng = np.random.default_rng(seed)
+    if grid:
+        return (rng.integers(-8, 9, size=(T, H)) * grid).astype(np.float32)
+    return rng.normal(size=(T, H)).astype(np.float32)
+
+
+def _grouped(x: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """[..., n_groups, group] view along the spec's grouped axis."""
+    xm = np.moveaxis(x, spec.group_axis, -1)
+    return xm.reshape(*xm.shape[:-1], -1, spec.group)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       group=st.sampled_from([8, 16, 32]),
+       mode=st.sampled_from(["per_channel", "per_token"]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_roundtrip_error_bounded_per_group(bits, group, mode, seed):
+    spec = QuantSpec(bits=bits, group=group, mode=mode)
+    x = _data(seed)
+    out = np.asarray(dequantize(quantize(jnp.asarray(x), spec),
+                                jnp.float32))
+    xg = _grouped(x, spec)
+    err = np.abs(_grouped(out, spec) - xg)
+    bound = (xg.max(-1) - xg.min(-1)) / spec.levels / 2
+    assert np.all(err <= bound[..., None] * (1 + 1e-5) + 1e-6), (
+        bits, group, mode, float(err.max()))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       axis=st.sampled_from([-1, -2, 0]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_pack_unpack_bijective(bits, axis, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(
+        rng.integers(0, 1 << bits, size=(8, 16, 32)).astype(np.uint8))
+    packed = pack_bits(codes, bits, axis)
+    assert packed.shape[axis] == codes.shape[axis] * bits // 8
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(packed, bits, axis)), np.asarray(codes))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       mode=st.sampled_from(["per_channel", "per_token"]),
+       shift=st.sampled_from([2.0, 16.0, -8.0]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_shift_invariance(bits, mode, shift, seed):
+    """RTN is affine: adding a constant moves ``zero`` and nothing else.
+
+    Uses grid-quantized data and exactly-representable shifts so
+    ``(x + c) − (lo + c)`` is bit-equal to ``x − lo`` — the property is
+    about the code structure, not float rounding at knife edges."""
+    spec = QuantSpec(bits=bits, group=8, mode=mode)
+    x = _data(seed, grid=0.5)
+    qa = quantize(jnp.asarray(x), spec)
+    qb = quantize(jnp.asarray(x + np.float32(shift)), spec)
+    np.testing.assert_array_equal(np.asarray(qa.codes),
+                                  np.asarray(qb.codes))
+    np.testing.assert_allclose(np.asarray(qb.scale), np.asarray(qa.scale),
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(
+        np.asarray(qb.zero) - np.asarray(qa.zero),
+        np.full_like(np.asarray(qa.zero), shift), rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("mode", ["per_channel", "per_token"])
+def test_constant_groups_roundtrip_exact(bits, mode):
+    """Zero-spread groups hit the degenerate-scale guard and must
+    round-trip exactly (scale 0 → codes 0 → zero point carries value)."""
+    spec = QuantSpec(bits=bits, group=8, mode=mode)
+    x = np.full((T, H), 2.75, np.float32)
+    out = np.asarray(dequantize(quantize(jnp.asarray(x), spec),
+                                jnp.float32))
+    np.testing.assert_array_equal(out, x)
+    # piecewise-constant per group, different values across groups
+    xg = _grouped(x, spec)
+    xg = xg + np.arange(xg.shape[-2], dtype=np.float32)[:, None]
+    xv = np.moveaxis(xg.reshape(*xg.shape[:-2], -1), -1, spec.group_axis)
+    out = np.asarray(dequantize(quantize(jnp.asarray(xv), spec),
+                                jnp.float32))
+    np.testing.assert_array_equal(out, xv)
+
+
+def test_single_element_groups_roundtrip_exact():
+    """group=1 (8-bit: pack factor 1) makes every group a single token /
+    channel — zero spread per group, so lossless by the same guard."""
+    x = _data(5)
+    for mode in ("per_channel", "per_token"):
+        spec = QuantSpec(bits=8, group=1, mode=mode)
+        out = np.asarray(dequantize(quantize(jnp.asarray(x), spec),
+                                    jnp.float32))
+        np.testing.assert_array_equal(out, x)
+
+
+def test_single_token_rows_per_token_mode():
+    """A [1, H] row (single-token commit) group-quantizes along channels
+    without shape errors and respects the step bound."""
+    spec = QuantSpec(bits=2, group=8, mode="per_token")
+    x = _data(7)[:1]
+    out = np.asarray(dequantize(quantize(jnp.asarray(x), spec),
+                                jnp.float32))
+    xg = _grouped(x, spec)
+    bound = (xg.max(-1) - xg.min(-1)) / spec.levels / 2
+    assert np.all(np.abs(_grouped(out, spec) - xg)
+                  <= bound[..., None] * (1 + 1e-5) + 1e-6)
